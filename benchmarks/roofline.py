@@ -1,0 +1,133 @@
+"""Roofline analysis from the dry-run artifacts (deliverable (g)).
+
+Composition (DESIGN.md §5): XLA counts scan bodies once, so
+    total(metric) = gate(metric) + sum_probes mult * probe(metric) + extras
+with every quantity PER-DEVICE (cost_analysis of an SPMD-partitioned program
+reports the per-device program; verified against a hand-counted matmul).
+
+Terms (TPU v5e):
+    compute_s    = flops_per_chip / 197e12        (bf16 peak)
+    memory_s     = bytes_per_chip / 819e9         (HBM)
+    collective_s = coll_bytes_per_chip / 50e9     (ICI per link)
+These equal the assignment's global/(chips*rate) forms.
+
+MODEL_FLOPS uses 6*N_active*tokens for training (2* for prefill/decode), so
+MODEL_FLOPS / (HLO_flops * chips) exposes remat/dispatch/attention overhead.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+SHAPES_TOKENS = {  # tokens processed per step (global)
+    "train_4k": 4096 * 256,
+    "prefill_32k": 32768 * 32,
+    "decode_32k": 128,        # one token x batch
+    "long_500k": 1,
+}
+
+
+def load_cells(mesh: str = "pod16x16") -> List[dict]:
+    cells = []
+    for p in sorted(ART.glob(f"*__{mesh}.json")):
+        cells.append(json.loads(p.read_text()))
+    return cells
+
+
+def composed(rec: dict) -> Dict[str, float]:
+    g = rec["gate"]
+    flops = g["cost"]["flops"]
+    bytes_ = g["cost"]["bytes"]
+    coll = g["collectives"].get("total", 0)
+    for pr in rec.get("probes", []):
+        flops += pr["mult"] * pr["cost"]["flops"]
+        bytes_ += pr["mult"] * pr["cost"]["bytes"]
+        coll += pr["mult"] * pr["collectives"].get("total", 0)
+    extra = rec.get("recurrence_extra", {"flops": 0, "bytes": 0})
+    chips = rec["chips"]
+    flops += extra["flops"] / chips     # analytic extras are global
+    bytes_ += extra["bytes"] / chips
+    return {"flops": flops, "bytes": bytes_, "coll": coll}
+
+
+def model_flops(rec: dict) -> float:
+    n = rec["params_active"]
+    toks = SHAPES_TOKENS[rec["shape"]]
+    mult = 6.0 if rec["kind"] == "train" else 2.0
+    return mult * n * toks
+
+
+def analyze(rec: dict) -> dict:
+    c = composed(rec)
+    chips = rec["chips"]
+    terms = {
+        "compute_s": c["flops"] / PEAK_FLOPS,
+        "memory_s": c["bytes"] / HBM_BW,
+        "collective_s": c["coll"] / LINK_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    step_s = max(terms.values())
+    mf = model_flops(rec)
+    useful_ratio = mf / max(c["flops"] * chips, 1)
+    # achievable fraction of the compute roofline at the current bottleneck
+    roofline_fraction = terms["compute_s"] / step_s if step_s else 0.0
+    mfu = mf / (chips * PEAK_FLOPS * step_s) if step_s else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "kind": rec["kind"], "chips": chips,
+        "microbatches": rec.get("microbatches", 1),
+        **{k: round(v * 1e3, 4) for k, v in terms.items()},  # -> ms
+        "dominant": dominant.replace("_s", ""),
+        "model_flops": mf,
+        "hlo_flops_per_chip": c["flops"],
+        "useful_ratio": round(useful_ratio, 3),
+        "roofline_fraction": round(roofline_fraction, 3),
+        "mfu_bound": round(mfu, 4),
+        "footprint_gib": round(
+            (rec["gate"]["memory"]["argument_bytes"]
+             + rec["gate"]["memory"]["temp_bytes"]
+             + rec["gate"]["memory"]["output_bytes"]
+             - rec["gate"]["memory"]["alias_bytes"]) / 2**30, 2),
+    }
+
+
+ADVICE = {
+    ("compute",): "compute-bound: raise MXU occupancy (larger per-chip tiles, "
+                  "fewer remat recomputations) or shrink HLO/model flops gap",
+    ("memory",): "HBM-bound: cut bytes moved — fuse (flash attention), "
+                 "quantize weights/KV to int8, or raise arithmetic intensity "
+                 "with larger microbatches",
+    ("collective",): "ICI-bound: reshard to cut cross-chip traffic, overlap "
+                     "collectives with compute, or compress the reduced tensors",
+}
+
+
+def advice(row: dict) -> str:
+    return ADVICE[(row["dominant"],)]
+
+
+def table(mesh: str = "pod16x16") -> List[dict]:
+    return [analyze(r) for r in load_cells(mesh)]
+
+
+def main():
+    rows = table()
+    hdr = ["arch", "shape", "mb", "compute_ms", "memory_ms", "coll_ms",
+           "dominant", "useful", "roofline_frac", "GiB/dev"]
+    print(",".join(hdr))
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        print(f"{r['arch']},{r['shape']},{r['microbatches']},"
+              f"{r['compute_s']},{r['memory_s']},{r['collective_s']},"
+              f"{r['dominant']},{r['useful_ratio']},{r['roofline_fraction']},"
+              f"{r['footprint_gib']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,175 @@
+"""Benchmark harness — one entry per paper artifact (Tables 1-3, Fig. 6)
+plus kernel microbenchmarks and the roofline summary.
+
+Output: ``name,us_per_call,derived`` CSV lines per the assignment, grouped by
+paper table. Run: PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _timeit(fn, *args, iters=10, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def _gemms():
+    from repro.configs.resnet20_cifar import CONFIG
+    from repro.core.dataflow import Gemm
+    from repro.models.resnet import conv_layer_shapes
+    return [Gemm(n, m, k, nn, in_elems=m * k // 9 if k % 9 == 0 else m * k,
+                 out_elems=m * nn)
+            for (n, m, k, nn) in conv_layer_shapes(CONFIG, batch=1)]
+
+
+def fig6_ladder():
+    """Paper Fig. 6: the four-strategy FPS ladder (calibrated model vs paper)."""
+    from repro.core import perfmodel as pm
+    gemms = _gemms()
+    fit = pm.calibrate(gemms)
+    rows = []
+    for r in pm.ladder(gemms, fit=fit):
+        tgt = pm.PAPER_FPS[r.strategy]
+        rows.append((f"fig6_{r.strategy}", 1e6 / r.fps,
+                     f"fps={r.fps:.2f};paper={tgt};err={100*(r.fps-tgt)/tgt:+.1f}%"))
+    return rows
+
+
+def table2_eval():
+    """Paper Table 2: throughput/power across devices. We measure our CPU
+    inference, model the ZCU104 (calibrated), and project TPU v5e."""
+    from repro.configs.resnet20_cifar import ResNetConfig
+    from repro.core import perfmodel as pm
+    from repro.core.strategies import TPU_V5E
+    from repro.models import resnet
+    rows = []
+    # measured: this host's CPU running our jitted inference (batch 64)
+    cfg = ResNetConfig(widths=(8, 16, 32))
+    params = resnet.fold_bn(resnet.init(cfg, jax.random.PRNGKey(0)))
+    x = jnp.zeros((64, 32, 32, 3))
+    infer = jax.jit(lambda p, x: resnet.forward(p, cfg, x, folded=True))
+    us = _timeit(infer, params, x)
+    fps = 64 / (us / 1e6)
+    flops = sum(g.flops for g in _gemms()) * (8 / 16) ** 2  # width-reduced
+    rows.append(("table2_cpu_measured", us,
+                 f"fps={fps:.0f};gops={flops*fps/1e9:.1f}"))
+    gemms = _gemms()
+    fit = pm.calibrate(gemms)
+    zcu = pm.evaluate(gemms, "compiler_large_local", fit=fit)
+    rows.append(("table2_zcu104_model", 1e6 / zcu.fps,
+                 f"fps={zcu.fps:.1f};gops={zcu.gops:.2f};paper_gops={pm.PAPER_GOPS};"
+                 f"gops_w={zcu.gops_per_watt:.2f}"))
+    v5e = pm.evaluate(gemms, "compiler_large_local", TPU_V5E, pm.V5E_FIT)
+    rows.append(("table2_v5e_projection", 1e6 / v5e.fps,
+                 f"fps={v5e.fps:.0f};gops={v5e.gops:.0f};gops_w={v5e.gops_per_watt:.1f}"))
+    return rows
+
+
+PAPER_TABLE3 = [  # Work, device, FPS, GOP/s, GOP/s/W (paper Table 3)
+    ("ma2017", "arria10", None, 645.25, 30.44),
+    ("mei2017", "virtex7", 6.58, 202.42, 1.64),
+    ("zhang2019", "zu7ev", None, 290.40, 0.80),
+    ("blott2018", "zu3eg", 200.0, 400.0, 39.21),
+    ("zhang2020", "virtex7", 6.77, 209.60, 33.16),
+    ("li2019", "zynq7010", None, 452.8, 23.20),
+    ("suda2016", "stratixv", None, 117.8, 4.56),
+    ("paper_ours", "zu7ev", 290.58, 21.12, 4.05),
+]
+
+
+def table3_compare():
+    """Paper Table 3: cross-implementation comparison. Static reference rows
+    + our calibrated reproduction row."""
+    from repro.core import perfmodel as pm
+    rows = [(f"table3_{name}", 0.0,
+             f"device={dev};fps={fps};gops={gops};gops_w={gw}")
+            for (name, dev, fps, gops, gw) in PAPER_TABLE3]
+    gemms = _gemms()
+    fit = pm.calibrate(gemms)
+    ours = pm.evaluate(gemms, "compiler_large_local", fit=fit)
+    rows.append(("table3_repro_model", 1e6 / ours.fps,
+                 f"device=zu7ev-model;fps={ours.fps:.1f};gops={ours.gops:.2f};"
+                 f"gops_w={ours.gops_per_watt:.2f}"))
+    return rows
+
+
+def table1_resources():
+    """Paper Table 1 analogue: planner VMEM use per strategy (bytes in place
+    of LUT/DSP/BRAM/URAM counts)."""
+    from repro.configs.base import MemoryStrategy
+    from repro.core.planner import plan_network
+    from repro.core.strategies import ZCU104, planner_config
+    rows = []
+    gemms = _gemms()
+    for strat in MemoryStrategy:
+        cfgp = planner_config(strat, ZCU104)
+        plans = plan_network(gemms, cfgp)
+        peak = max(p.vmem_used for p in plans)
+        stages = sum(p.stages for p in plans)
+        rows.append((f"table1_{strat.value}", 0.0,
+                     f"peak_local_bytes={peak};total_stages={stages};"
+                     f"budget={cfgp.vmem_budget}"))
+    return rows
+
+
+def kernel_micro():
+    """Pallas kernels (interpret mode) wall-time + allclose vs oracle."""
+    from repro.kernels import ops, ref
+    rows = []
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (256, 256))
+    w = jax.random.normal(key, (256, 256))
+    for df in ("output_stationary", "weight_stationary", "input_stationary"):
+        us = _timeit(lambda: ops.matmul(x, w, block_m=128, block_n=128,
+                                        block_k=128, dataflow=df), iters=3)
+        ok = bool(np.allclose(np.asarray(ops.matmul(x, w, dataflow=df)),
+                              np.asarray(ref.matmul(x, w)), atol=1e-4))
+        rows.append((f"kernel_matmul_{df}", us, f"allclose={ok}"))
+    q = jax.random.normal(key, (1, 256, 4, 64))
+    k = jax.random.normal(key, (1, 256, 2, 64))
+    us = _timeit(lambda: ops.flash_attention(q, k, k, block_q=128, block_k=128),
+                 iters=3)
+    rows.append(("kernel_flash_attention", us, "interpret=True"))
+    r = jax.random.normal(key, (1, 64, 2, 16)) * 0.5
+    wdec = jax.nn.sigmoid(jax.random.normal(key, (1, 64, 2, 16))) * 0.5 + 0.5
+    u = jax.random.normal(key, (2, 16)) * 0.1
+    s0 = jnp.zeros((1, 2, 16, 16))
+    us = _timeit(lambda: ops.wkv6(r, r, r, wdec, u, s0, chunk=32), iters=3)
+    rows.append(("kernel_wkv6", us, "interpret=True"))
+    return rows
+
+
+def roofline_summary():
+    """Headline roofline rows per §Roofline (full table in EXPERIMENTS.md)."""
+    try:
+        from benchmarks import roofline as R
+        rows = []
+        for r in sorted(R.table(), key=lambda r: -r["roofline_fraction"])[:8]:
+            rows.append((f"roofline_{r['arch']}_{r['shape']}", 0.0,
+                         f"dominant={r['dominant']};frac={r['roofline_fraction']};"
+                         f"compute_ms={r['compute_s']};mem_ms={r['memory_s']};"
+                         f"coll_ms={r['collective_s']}"))
+        return rows
+    except Exception as e:   # artifacts not generated yet
+        return [("roofline_missing", 0.0, f"run launch.dryrun first ({e})")]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for section in (fig6_ladder, table2_eval, table3_compare, table1_resources,
+                    kernel_micro, roofline_summary):
+        for name, us, derived in section():
+            print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""The paper's end-to-end experiment, reproduced: train ResNet20 on (synthetic)
+CIFAR, fold BN, quantize to the paper's 16-bit fixed point AND int8, measure
+accuracy drop, and run the four-strategy FPS ladder through the calibrated
+performance model — printing our predictions against the paper's Fig. 6.
+
+Run:  PYTHONPATH=src python examples/train_resnet20_cifar.py [--steps 300]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import MemoryStrategy
+from repro.configs.resnet20_cifar import CONFIG as FULL_CFG, ResNetConfig
+from repro.core import perfmodel as pm
+from repro.core.dataflow import Gemm
+from repro.core.quantize import dequantize_params, fixed_point_tree, quantize_params
+from repro.data.synthetic import synthetic_cifar
+from repro.models import resnet
+from repro.models.resnet import conv_layer_shapes
+from repro.optim.adamw import AdamW, apply_updates
+
+
+def accuracy(cfg, params, xs, ys, folded=False):
+    logits = resnet.forward(params, cfg, jnp.asarray(xs), folded=folded)
+    return float(jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(ys)))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--width", type=int, default=8,
+                    help="base width (paper: 16; 8 is CPU-fast)")
+    args = ap.parse_args()
+
+    cfg = ResNetConfig(widths=(args.width, args.width * 2, args.width * 4))
+    params = resnet.init(cfg, jax.random.PRNGKey(0))
+    opt = AdamW(learning_rate=3e-3, weight_decay=1e-4)
+    opt_state = opt.init(params)
+    xs, ys = synthetic_cifar(4096, seed=1)
+    xt, yt = synthetic_cifar(1024, seed=2)
+
+    @jax.jit
+    def step(params, opt_state, bx, by):
+        def loss_fn(p):
+            logits = resnet.forward(p, cfg, bx)
+            onehot = jax.nn.one_hot(by, cfg.num_classes)
+            return -jnp.mean(jnp.sum(onehot * jax.nn.log_softmax(logits), -1))
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        updates, opt_state, _ = opt.update(grads, opt_state, params)
+        return apply_updates(params, updates), opt_state, loss
+
+    bs = 128
+    t0 = time.time()
+    for i in range(args.steps):
+        j = (i * bs) % (len(ys) - bs)
+        params, opt_state, loss = step(params, opt_state, xs[j:j + bs], ys[j:j + bs])
+        if (i + 1) % 50 == 0:
+            print(f"step {i+1}: loss {float(loss):.4f}")
+    print(f"trained {args.steps} steps in {time.time()-t0:.1f}s")
+
+    # ---- quantization accuracy (the paper's 92% -> 90% experiment) ----
+    folded = resnet.fold_bn(params)
+    acc32 = accuracy(cfg, folded, xt, yt, folded=True)
+    acc16 = accuracy(cfg, fixed_point_tree(folded), xt, yt, folded=True)
+    acc8 = accuracy(cfg, dequantize_params(quantize_params(folded), jnp.float32),
+                    xt, yt, folded=True)
+    print(f"\naccuracy: fp32 {acc32:.3f} | fixed16 {acc16:.3f} "
+          f"(drop {acc32-acc16:+.3f}) | int8 {acc8:.3f} (drop {acc32-acc8:+.3f})")
+    print(f"paper:    fp32 0.92  | fixed16 0.90  (drop +0.020)")
+
+    # ---- measured CPU inference FPS (jitted, batch 64) ----
+    infer = jax.jit(lambda p, x: resnet.forward(p, cfg, x, folded=True))
+    xb = jnp.asarray(xt[:64])
+    infer(folded, xb).block_until_ready()
+    t0 = time.time()
+    for _ in range(20):
+        infer(folded, xb).block_until_ready()
+    fps = 64 * 20 / (time.time() - t0)
+    print(f"\nmeasured CPU inference: {fps:.0f} FPS (batch 64, jitted)")
+
+    # ---- the paper's FPS ladder through the calibrated perf model ----
+    gemms = [Gemm(n, m, k, nn, in_elems=m * k // 9 if k % 9 == 0 else m * k,
+                  out_elems=m * nn)
+             for (n, m, k, nn) in conv_layer_shapes(FULL_CFG, batch=1)]
+    fit = pm.calibrate(gemms)
+    print(f"\nZCU104 ladder (calibrated model vs paper Fig. 6):")
+    print(f"  {'strategy':24s} {'model FPS':>10s} {'paper FPS':>10s} {'err':>7s}")
+    for r in pm.ladder(gemms, fit=fit):
+        tgt = pm.PAPER_FPS[r.strategy]
+        print(f"  {r.strategy:24s} {r.fps:10.2f} {tgt:10.2f} "
+              f"{100*(r.fps-tgt)/tgt:+6.1f}%")
+    print(f"\npaper GOP/s 21.12 @ 5.21 W; model final rung "
+          f"{pm.ladder(gemms, fit=fit)[-1].gops:.2f} GOP/s")
+
+
+if __name__ == "__main__":
+    main()

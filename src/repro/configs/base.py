@@ -1,0 +1,157 @@
+"""Config dataclasses for the repro framework.
+
+Every assigned architecture is expressed as an ``ArchConfig``; the four
+assigned input shapes are ``ShapeConfig``s. ``MemoryStrategy`` names the
+paper's four optimization rungs (baseline / dual_clock / ultra_ram /
+compiler_large_local) — see DESIGN.md §2 for the FPGA→TPU mapping.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional, Tuple
+
+
+class Family(str, enum.Enum):
+    DENSE = "dense"
+    MOE = "moe"
+    ENCDEC = "encdec"  # [audio] whisper
+    SSM = "ssm"        # rwkv6
+    HYBRID = "hybrid"  # hymba
+    VLM = "vlm"        # llama-3.2-vision
+    CNN = "cnn"        # resnet20 (the paper's own model)
+
+
+class MemoryStrategy(str, enum.Enum):
+    """The paper's optimization ladder (§4.1-4.4), adapted to TPU VMEM."""
+
+    BASELINE = "baseline"                # small VMEM budget, no overlap credit
+    DUAL_CLOCK = "dual_clock"            # + movement/compute overlap (double buffering)
+    ULTRA_RAM = "ultra_ram"              # + large VMEM budget (fewer partitions)
+    COMPILER_LARGE_LOCAL = "compiler_large_local"  # + whole-layer residency planning
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input shape (seq_len x global_batch)."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+    @property
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524288, 1, "decode")
+
+ALL_SHAPES: Tuple[ShapeConfig, ...] = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+SHAPES_BY_NAME = {s.name: s for s in ALL_SHAPES}
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: Family
+    num_layers: int
+    d_model: int
+    num_heads: int          # query heads (0 for attn-free)
+    num_kv_heads: int       # GQA kv heads
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0       # 0 => d_model // num_heads
+    qkv_bias: bool = False
+    mlp_bias: bool = False
+    tie_embeddings: bool = False
+    norm: str = "rmsnorm"   # rmsnorm | layernorm
+    rope_theta: float = 10000.0
+    moe: Optional[MoEConfig] = None
+    # hybrid / ssm
+    ssm_state: int = 0
+    window: int = 0              # sliding-window size for attention heads (0 = full)
+    # enc-dec
+    encoder_layers: int = 0      # >0 => enc-dec; num_layers is decoder depth
+    # vlm
+    cross_attn_every: int = 0    # >0 => cross-attn image layers every N layers
+    num_image_tokens: int = 0
+    # training shape overrides / skips
+    skip_shapes: Tuple[str, ...] = ()
+    notes: str = ""
+
+    def __post_init__(self):
+        if self.head_dim == 0 and self.num_heads:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+
+    @property
+    def padded_vocab(self) -> int:
+        """Embedding/unembedding tables are padded to a 512 multiple so the
+        vocab dim shards evenly on any mesh axis up to 512; logits beyond
+        vocab_size are masked to -inf (layers.lm_logits)."""
+        return ((self.vocab_size + 511) // 512) * 512
+
+    # ----- parameter counting (for 6ND roofline + FSDP sizing) -----
+    def _attn_params(self) -> int:
+        if self.num_heads == 0:
+            return 0
+        hd = self.head_dim
+        q = self.d_model * self.num_heads * hd
+        kv = 2 * self.d_model * self.num_kv_heads * hd
+        o = self.num_heads * hd * self.d_model
+        b = (self.num_heads * hd + 2 * self.num_kv_heads * hd) if self.qkv_bias else 0
+        return q + kv + o + b
+
+    def _ffn_params(self, gated: bool = True) -> int:
+        mult = 3 if gated else 2
+        return mult * self.d_model * self.d_ff
+
+    def layer_params(self) -> int:
+        """Params of one decoder layer (dense part + routed experts)."""
+        p = self._attn_params() + 2 * self.d_model  # 2 norms
+        if self.moe:
+            p += self.moe.num_experts * self._ffn_params() + self.d_model * self.moe.num_experts
+        else:
+            p += self._ffn_params()
+        if self.family == Family.SSM:
+            # rwkv6: replaces attention with time-mix (r,k,v,w,g,o ~ 6 d^2) + channel-mix
+            p = 6 * self.d_model * self.d_model + 2 * self.d_model * self.d_ff + 2 * self.d_model
+        if self.family == Family.HYBRID:
+            p += 2 * self.d_model * self.d_model  # parallel SSM in/out projections
+        return p
+
+    def total_params(self) -> int:
+        emb = self.vocab_size * self.d_model
+        unemb = 0 if self.tie_embeddings else self.vocab_size * self.d_model
+        layers = self.num_layers * self.layer_params()
+        if self.encoder_layers:
+            enc = self.encoder_layers * (self._attn_params() + self._ffn_params(gated=False)
+                                         + 2 * self.d_model)
+            # decoder cross-attn blocks
+            layers += self.num_layers * self._attn_params()
+            layers += enc
+        if self.cross_attn_every:
+            n_cross = self.num_layers // self.cross_attn_every
+            layers += n_cross * self._attn_params()
+        return emb + unemb + layers + self.d_model  # final norm
+
+    def active_params(self) -> int:
+        """Activated params per token (= total for dense; routed top-k for MoE)."""
+        if not self.moe:
+            return self.total_params()
+        dense_layer = self._attn_params() + 2 * self.d_model + self.d_model * self.moe.num_experts
+        active_ffn = self.moe.top_k * self._ffn_params()
+        layers = self.num_layers * (dense_layer + active_ffn)
+        emb = self.vocab_size * self.d_model * (1 if self.tie_embeddings else 2)
+        return emb + layers + self.d_model

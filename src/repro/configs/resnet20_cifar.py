@@ -1,0 +1,27 @@
+"""ResNet20 / CIFAR-10 — the paper's own model (Tensil ResNet20-ZCU104 tutorial).
+Not part of the assigned LM pool; used for the faithful reproduction of the
+paper's FPS/accuracy ladder."""
+import dataclasses
+from repro.configs.base import ArchConfig, Family
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetConfig:
+    name: str = "resnet20-cifar"
+    num_blocks: tuple = (3, 3, 3)     # ResNet20 = 3 stages x 3 basic blocks
+    widths: tuple = (16, 32, 64)
+    num_classes: int = 10
+    image_size: int = 32
+    in_channels: int = 3
+
+
+CONFIG = ResNetConfig()
+
+# ArchConfig facade so the registry can treat it uniformly where needed.
+ARCH_FACADE = ArchConfig(
+    name="resnet20-cifar", family=Family.CNN,
+    num_layers=20, d_model=64, num_heads=0, num_kv_heads=0,
+    d_ff=64, vocab_size=10,
+    skip_shapes=("train_4k", "prefill_32k", "decode_32k", "long_500k"),
+    notes="paper model; evaluated via its own CIFAR shapes, not the LM shape pool",
+)

@@ -1,0 +1,110 @@
+"""Blockwise online-softmax attention (FlashAttention on TPU, GQA-aware).
+
+Grid: (B, H, Sq/bq, Sk/bk) with the KV index derived as h // (H // KV) so GQA
+shares K/V blocks across grouped query heads. Running max/denominator/acc live
+in VMEM scratch and persist across the innermost (kv) grid steps — the same
+"accumulators in on-chip RAM" structure as the paper's systolic design.
+
+Positions are block-index-derived (prefill layout: positions 0..S-1), causal
+and sliding-window masks are applied in-kernel; fully-masked kv blocks are
+skipped (pl.when), which is how the kernel keeps the long-context windowed
+archs sub-quadratic in *work*, not just memory.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window: int, block_q: int, block_k: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # whole-block skip test (static per grid step under interpret; cheap on TPU)
+    def in_range():
+        q = q_ref[0, :, 0, :].astype(jnp.float32) * scale          # (bq, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)                  # (bk, hd)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)    # (bq, bk)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        ok = jnp.ones((block_q, block_k), bool)
+        if causal:
+            ok &= q_pos >= k_pos
+        if window > 0:
+            ok &= (q_pos - k_pos) < window
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    if causal or window > 0:
+        # block fully below the causal diagonal or outside the window -> skip
+        relevant = jnp.array(True)
+        if causal:
+            relevant &= (q_start + block_q - 1) >= k_start
+        if window > 0:
+            relevant &= (k_start + block_k - 1) > (q_start - window)
+        pl.when(relevant)(in_range)
+    else:
+        in_range()
+
+    @pl.when(ki == nk - 1)
+    def _():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """q: (B,Sq,H,hd); k,v: (B,Sk,KV,hd) -> (B,Sq,H,hd)."""
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    assert H % KV == 0
+    G = H // KV
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0
+    grid = (B, H, Sq // block_q, Sk // block_k)
+    scale = 1.0 / math.sqrt(hd)
+    kernel = functools.partial(_kernel, scale=scale, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, hd), lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec((1, block_k, 1, hd), lambda b, h, qi, ki: (b, ki, h // G, 0)),
+            pl.BlockSpec((1, block_k, 1, hd), lambda b, h, qi, ki: (b, ki, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, hd), lambda b, h, qi, ki: (b, qi, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sq, H, hd), q.dtype),
+        scratch_shapes=[pltpu.VMEM((block_q,), jnp.float32),
+                        pltpu.VMEM((block_q,), jnp.float32),
+                        pltpu.VMEM((block_q, hd), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v)

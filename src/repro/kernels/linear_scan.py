@@ -1,0 +1,161 @@
+"""Chunked linear-attention scan kernels (RWKV6 wkv + mamba selective scan).
+
+TPU adaptation (DESIGN.md §2): GPU RWKV kernels exploit per-warp shuffles; the
+TPU-native structure is *chunked recurrence* — the sequence is cut into chunks
+that fit VMEM, the O(N^2) state is carried in VMEM scratch across the
+(sequential) grid steps, and within a chunk the interaction is computed in
+closed form in fp32 log-space (numerically safe for data-dependent decays).
+HBM traffic: each of r/k/v/w is read exactly once — the memory-roofline
+optimum for this op.
+
+wkv6 recurrence (per head, key-dim N):
+    y_t = r_t . (S_{t-1} + diag(u) k_t v_t^T),   S_t = diag(w_t) S_{t-1} + k_t v_t^T
+Chunked closed form with L_t = sum_{i<=t} log w_i:
+    y_t = (r_t * exp(L_{t-1})) @ S_chunk0
+        + sum_{j<t} [sum_n r_tn k_jn exp(L_{t-1,n} - L_{j,n})] v_j
+        + (sum_n r_tn u_n k_tn) v_t
+    S' = diag(exp(L_last)) S_chunk0 + (k * exp(L_last - L))^T @ v
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# --------------------------------------------------------------------- wkv6
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sT_ref,
+                 s_scr, *, chunk: int):
+    t = pl.program_id(2)
+    nt = pl.num_programs(2)
+
+    @pl.when(t == 0)
+    def _():
+        s_scr[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    r = r_ref[0, :, 0, :].astype(jnp.float32)      # (C, N)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    w = w_ref[0, :, 0, :].astype(jnp.float32)
+    u = u_ref[0, :].astype(jnp.float32)            # (N,)
+    S = s_scr[...]                                 # (N, N)
+
+    logw = jnp.log(jnp.maximum(w, 1e-38))
+    Lc = jnp.cumsum(logw, axis=0)                  # (C, N)
+    Lprev = Lc - logw                              # L_{t-1}
+
+    # state contribution
+    y = jnp.dot(r * jnp.exp(Lprev), S, preferred_element_type=jnp.float32)
+
+    # intra-chunk: A[t, j] = sum_n r_tn k_jn exp(Lprev_t - Lc_j), j < t
+    diff = Lprev[:, None, :] - Lc[None, :, :]      # (C, C, N)
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+           > jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1))
+    A = jnp.sum(r[:, None, :] * k[None, :, :] * jnp.exp(diff), axis=-1)
+    A = jnp.where(tri, A, 0.0)
+    A = A + jnp.diag(jnp.sum(r * u[None, :] * k, axis=-1))   # bonus diagonal
+    y = y + jnp.dot(A, v, preferred_element_type=jnp.float32)
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    # state update
+    Llast = Lc[-1]
+    kd = k * jnp.exp(Llast[None, :] - Lc)
+    s_scr[...] = (jnp.exp(Llast)[:, None] * S
+                  + jnp.dot(kd.T, v, preferred_element_type=jnp.float32))
+
+    @pl.when(t == nt - 1)
+    def _():
+        sT_ref[0, 0] = s_scr[...].astype(sT_ref.dtype)
+
+
+def wkv6(r, k, v, w, u, s0, *, chunk: int = 32, interpret: bool = False):
+    """r,k,v,w: (B,T,H,N); u: (H,N); s0: (B,H,N,N) -> (y (B,T,H,N), sT)."""
+    B, T, H, N = r.shape
+    chunk = min(chunk, T)
+    assert T % chunk == 0, (T, chunk)
+    grid = (B, H, T // chunk)
+    kernel = functools.partial(_wkv6_kernel, chunk=chunk)
+    y, sT = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, t: (b, t, h, 0)),
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, t: (b, t, h, 0)),
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, t: (b, t, h, 0)),
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, t: (b, t, h, 0)),
+            pl.BlockSpec((1, N), lambda b, h, t: (h, 0)),
+            pl.BlockSpec((1, 1, N, N), lambda b, h, t: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, t: (b, t, h, 0)),
+            pl.BlockSpec((1, 1, N, N), lambda b, h, t: (b, h, 0, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((B, T, H, N), jnp.float32),
+                   jax.ShapeDtypeStruct((B, H, N, N), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((N, N), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, s0)
+    return y, sT
+
+
+# ------------------------------------------------------------ selective scan
+def _sscan_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, h0_ref, y_ref, hT_ref,
+                  h_scr, *, chunk: int):
+    t = pl.program_id(1)
+    nt = pl.num_programs(1)
+
+    @pl.when(t == 0)
+    def _():
+        h_scr[...] = h0_ref[0].astype(jnp.float32)
+
+    a = a_ref[...].astype(jnp.float32)             # (D, N)
+
+    def step(i, h):
+        x_t = x_ref[0, i, :].astype(jnp.float32)   # (D,)
+        dt_t = dt_ref[0, i, :].astype(jnp.float32)
+        b_t = b_ref[0, i, :].astype(jnp.float32)   # (N,)
+        c_t = c_ref[0, i, :].astype(jnp.float32)
+        h = jnp.exp(a * dt_t[:, None]) * h + (dt_t * x_t)[:, None] * b_t[None, :]
+        y_ref[0, i, :] = jnp.dot(h, c_t, preferred_element_type=jnp.float32
+                                 ).astype(y_ref.dtype)
+        return h
+
+    h_scr[...] = jax.lax.fori_loop(0, chunk, step, h_scr[...])
+
+    @pl.when(t == nt - 1)
+    def _():
+        hT_ref[0] = h_scr[...].astype(hT_ref.dtype)
+
+
+def selective_scan(x, dt, b, c, a, h0, *, chunk: int = 64, interpret: bool = False):
+    """x,dt: (B,T,D); b,c: (B,T,N); a: (D,N); h0: (B,D,N) -> (y (B,T,D), hT)."""
+    B, T, D = x.shape
+    N = b.shape[-1]
+    chunk = min(chunk, T)
+    assert T % chunk == 0
+    grid = (B, T // chunk)
+    kernel = functools.partial(_sscan_kernel, chunk=chunk)
+    y, hT = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, D), lambda bi, t: (bi, t, 0)),
+            pl.BlockSpec((1, chunk, D), lambda bi, t: (bi, t, 0)),
+            pl.BlockSpec((1, chunk, N), lambda bi, t: (bi, t, 0)),
+            pl.BlockSpec((1, chunk, N), lambda bi, t: (bi, t, 0)),
+            pl.BlockSpec((D, N), lambda bi, t: (0, 0)),
+            pl.BlockSpec((1, D, N), lambda bi, t: (bi, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, D), lambda bi, t: (bi, t, 0)),
+            pl.BlockSpec((1, D, N), lambda bi, t: (bi, 0, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((B, T, D), jnp.float32),
+                   jax.ShapeDtypeStruct((B, D, N), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((D, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, b, c, a, h0)
+    return y, hT

@@ -1,0 +1,114 @@
+"""Systolic-array tiled matmul (Pallas, MXU target).
+
+This kernel is the TPU analogue of the Tensil 32x32 MAC array the paper sizes
+in §4.1: BlockSpec tiles play the role of the FPGA's local-memory (BRAM/URAM)
+vectors, the fp32 VMEM scratch plays the accumulators, and the *grid iteration
+order* selects the dataflow the paper discusses (§4.3):
+
+  output-stationary  grid (m, n, k): accumulator block resident, k streams.
+  weight-stationary  grid (n, k, m): weight block resident while M sweeps —
+                     Tensil's default dataflow; output partials re-stream to HBM.
+  input-stationary   grid (m, k, n): activation block resident, weights stream —
+                     the paper's "future work" dataflow, implemented here.
+
+The planner (core/planner.py) chooses block shapes so (bm*bk + bk*bn + bm*bn)
+bytes fit the VMEM budget — exactly the paper's stage/partition computation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DATAFLOWS = ("output_stationary", "weight_stationary", "input_stationary")
+
+
+def _os_kernel(x_ref, w_ref, o_ref, acc_ref):
+    """Output-stationary: k innermost, fp32 accumulator scratch."""
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _acc_kernel(x_ref, w_ref, o_ref, *, k_axis: int):
+    """Weight-/input-stationary: output block is revisited across k, so
+    partials accumulate through the (fp32) output ref itself — this is the
+    extra output-restreaming traffic WS/IS dataflows pay, which the planner's
+    traffic model (core/dataflow.py) charges them for."""
+    k = pl.program_id(k_axis)
+
+    @pl.when(k == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                          preferred_element_type=jnp.float32)
+
+
+def matmul(x, w, *, block_m: int = 128, block_n: int = 128, block_k: int = 128,
+           dataflow: str = "output_stationary", interpret: bool = False,
+           out_dtype=None):
+    """x: (M, K) @ w: (K, N) -> (M, N). Shapes must divide the block sizes
+    (ops.py pads). fp32 accumulation in all dataflows."""
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2, (x.shape, w.shape)
+    assert M % block_m == 0 and N % block_n == 0 and K % block_k == 0, (
+        (M, K, N), (block_m, block_k, block_n))
+    out_dtype = out_dtype or x.dtype
+    nm, nn, nk = M // block_m, N // block_n, K // block_k
+
+    if dataflow == "output_stationary":
+        grid = (nm, nn, nk)
+        x_map = lambda m, n, k: (m, k)
+        w_map = lambda m, n, k: (k, n)
+        o_map = lambda m, n, k: (m, n)
+        return pl.pallas_call(
+            _os_kernel,
+            grid=grid,
+            in_specs=[pl.BlockSpec((block_m, block_k), x_map),
+                      pl.BlockSpec((block_k, block_n), w_map)],
+            out_specs=pl.BlockSpec((block_m, block_n), o_map),
+            out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+            scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+            interpret=interpret,
+        )(x, w)
+
+    if dataflow == "weight_stationary":
+        grid = (nn, nk, nm)   # m innermost: weight block (k,n) held across m
+        x_map = lambda n, k, m: (m, k)
+        w_map = lambda n, k, m: (k, n)
+        o_map = lambda n, k, m: (m, n)
+        kernel = functools.partial(_acc_kernel, k_axis=1)
+    elif dataflow == "input_stationary":
+        grid = (nm, nk, nn)   # n innermost: input block (m,k) held across n
+        x_map = lambda m, k, n: (m, k)
+        w_map = lambda m, k, n: (k, n)
+        o_map = lambda m, k, n: (m, n)
+        kernel = functools.partial(_acc_kernel, k_axis=1)
+    else:
+        raise ValueError(f"unknown dataflow {dataflow!r}")
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_m, block_k), x_map),
+                  pl.BlockSpec((block_k, block_n), w_map)],
+        out_specs=pl.BlockSpec((block_m, block_n), o_map),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(x, w)
+    return out.astype(out_dtype)

@@ -1,0 +1,124 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On CPU (this container) kernels execute with ``interpret=True`` — the kernel
+body runs as traced JAX ops so correctness is validated end-to-end; on TPU the
+same calls compile to Mosaic. Wrappers pad inputs to block multiples and crop,
+and fall back to the jnp oracle for degenerate shapes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import linear_scan as _ls
+from repro.kernels import matmul as _mm
+from repro.kernels import quant_matmul as _qm
+from repro.kernels import ref as _ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, mult, axis):
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def _matmul_vjp(x, w, block_m, block_n, block_k, dataflow):
+    M, K = x.shape
+    _, N = w.shape
+    bm, bn, bk = (min(block_m, M), min(block_n, N), min(block_k, K))
+    xp = _pad_to(_pad_to(x, bm, 0), bk, 1)
+    wp = _pad_to(_pad_to(w, bk, 0), bn, 1)
+    out = _mm.matmul(xp, wp, block_m=bm, block_n=bn, block_k=bk,
+                     dataflow=dataflow, interpret=_interpret(), out_dtype=x.dtype)
+    return out[:M, :N]
+
+
+def _matmul_fwd(x, w, bm, bn, bk, df):
+    return _matmul_vjp(x, w, bm, bn, bk, df), (x, w)
+
+
+def _matmul_bwd(bm, bn, bk, df, res, g):
+    x, w = res
+    # dX = g @ W^T ; dW = X^T @ g — both through the systolic kernel
+    dx = _matmul_vjp(g, w.T, bm, bn, bk, df)
+    dw = _matmul_vjp(x.T, g, bm, bn, bk, df)
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+_matmul_vjp.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "dataflow"))
+def matmul(x, w, *, block_m: int = 128, block_n: int = 128, block_k: int = 128,
+           dataflow: str = "output_stationary"):
+    """Systolic tiled matmul; pads to block multiples, crops the result.
+    Differentiable: the custom VJP routes both gradient GEMMs back through
+    the kernel (training-usable, not just inference)."""
+    return _matmul_vjp(x, w, block_m, block_n, block_k, dataflow)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
+def quant_matmul(x, w_q, scales, *, block_m: int = 128, block_n: int = 128,
+                 block_k: int = 128):
+    M, K = x.shape
+    _, N = w_q.shape
+    bm, bn, bk = (min(block_m, M), min(block_n, N), min(block_k, K))
+    xp = _pad_to(_pad_to(x, bm, 0), bk, 1)
+    wp = _pad_to(_pad_to(w_q, bk, 0), bn, 1)
+    sp = _pad_to(scales, bn, 0)
+    out = _qm.quant_matmul(xp, wp, sp, block_m=bm, block_n=bn, block_k=bk,
+                           interpret=_interpret(), out_dtype=x.dtype)
+    return out[:M, :N]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    q_positions=None, k_positions=None):
+    """q: (B,Sq,H,hd); k,v: (B,Sk,KV,hd). Positions args accepted for API
+    parity with ref; the kernel derives prefill positions from block indices
+    (non-standard positions fall back to the oracle)."""
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    if q_positions is not None or k_positions is not None:
+        return _ref.flash_attention(q, k, v, causal=causal, window=window,
+                                    q_positions=q_positions,
+                                    k_positions=k_positions)
+    bq, bk = min(block_q, Sq), min(block_k, Sk)
+    if Sq % bq or Sk % bk:
+        return _ref.flash_attention(q, k, v, causal=causal, window=window)
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=bq, block_k=bk, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def wkv6(r, k, v, w, u, s0, *, chunk: int = 32):
+    T = r.shape[1]
+    c = min(chunk, T)
+    if T % c:
+        return _ref.wkv6(r, k, v, w, u, s0)
+    y, sT = _ls.wkv6(r, k, v, w, u, s0, chunk=c, interpret=_interpret())
+    return y, sT
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def selective_scan(x, dt, b, c, a, h0, *, chunk: int = 64):
+    T = x.shape[1]
+    ck = min(chunk, T)
+    if T % ck:
+        return _ref.selective_scan(x, dt, b, c, a, h0)
+    return _ls.selective_scan(x, dt, b, c, a, h0, chunk=ck, interpret=_interpret())

@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel. These are the ground truth the
+kernel tests assert against (and the CPU execution path for small problems)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(a, b):
+    """a: (M, K), b: (K, N) -> (M, N), f32 accumulation."""
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32)).astype(a.dtype)
+
+
+def quant_matmul(a, w_q, scales):
+    """a: (M, K) float; w_q: (K, N) int8; scales: (N,) per-output-channel.
+    out = a @ (w_q * scales) with f32 accumulation."""
+    w = w_q.astype(jnp.float32) * scales.astype(jnp.float32)[None, :]
+    return jnp.dot(a.astype(jnp.float32), w).astype(a.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, q_positions=None,
+                    k_positions=None):
+    """q: (B,Sq,H,hd); k,v: (B,Sk,KV,hd) -> (B,Sq,H,hd). GQA by head grouping."""
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(jnp.arange(Sq), (B, Sq))
+    if k_positions is None:
+        k_positions = jnp.broadcast_to(jnp.arange(Sk), (B, Sk))
+    qg = q.reshape(B, Sq, KV, G, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32) / math.sqrt(hd)
+    diff = q_positions[:, None, None, :, None] - k_positions[:, None, None, None, :]
+    ok = jnp.ones(diff.shape, bool)
+    if causal:
+        ok &= diff >= 0
+    if window > 0:
+        ok &= diff < window
+    s = jnp.where(ok, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    return jnp.einsum("bkgqs,bskh->bqkgh", p, v).reshape(B, Sq, H, hd)
+
+
+def wkv6(r, k, v, w, u, s0):
+    """RWKV6 recurrence oracle.
+    r,k,v,w: (B,T,H,N); u: (H,N); s0: (B,H,N,N) -> y (B,T,H,N), sT."""
+    def step(S, inp):
+        rt, kt, vt, wt = inp
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, S + u[None, :, :, None] * kv)
+        S = wt[..., None] * S + kv
+        return S, y
+    xs = tuple(jnp.moveaxis(t, 1, 0).astype(jnp.float32) for t in (r, k, v, w))
+    sT, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1), sT
+
+
+def selective_scan(x, dt, b, c, a, h0):
+    """Mamba-style scan oracle. x,dt: (B,T,D); b,c: (B,T,N); a: (D,N); h0: (B,D,N)."""
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp
+        decay = jnp.exp(a[None] * dt_t[..., None])
+        h = decay * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (x, dt, b, c))
+    hT, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), hT

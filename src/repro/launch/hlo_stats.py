@@ -1,0 +1,84 @@
+"""Extract roofline inputs from lowered/compiled XLA artifacts:
+
+  * flops / bytes from ``compiled.cost_analysis()``
+  * per-collective wire bytes parsed from the (SPMD-partitioned) HLO text —
+    the assignment's formula: sum of operand sizes over all-gather /
+    all-reduce / reduce-scatter / all-to-all / collective-permute.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_LINE_RE = re.compile(
+    r"=\s+(.+?)\s+(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start|-done)?\(")
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """PER-DEVICE wire bytes per collective kind, from the SPMD-partitioned
+    HLO (shapes there are per-device shards; operands print as names only, so
+    sizes come from the RESULT shape):
+
+      all-reduce / all-to-all / collective-permute : result == operand size
+      all-gather                                   : result ~= wire bytes recv
+      reduce-scatter                               : operand = result * group
+
+    collective term = per_chip_bytes / link_bw  ==  global/(chips * link_bw).
+    Bodies of while loops (lax.scan) appear once — callers compose with trip
+    multipliers (launch/probes.py)."""
+    out: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _COLL_LINE_RE.search(line)
+        if not m:
+            continue
+        result_ty, kind, suffix = m.group(1), m.group(2), m.group(3)
+        if suffix == "-done":
+            continue  # async pair: counted at -start
+        total = sum(shape_bytes(d, dims)
+                    for d, dims in _SHAPE_RE.findall(result_ty))
+        if kind == "all-reduce" and suffix == "-start":
+            total //= 2  # start result tuples alias (operand, result)
+        if kind == "reduce-scatter":
+            g = _GROUPS_RE.search(line)
+            total *= int(g.group(2)) if g else 1
+        out[kind] += total
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return dict(out)
+
+
+def cost_stats(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0))}
+
+
+def memory_stats(compiled) -> Dict[str, int]:
+    ma = compiled.memory_analysis()
+    return {
+        "argument_bytes": int(getattr(ma, "argument_size_in_bytes", 0)),
+        "output_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+        "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+        "alias_bytes": int(getattr(ma, "alias_size_in_bytes", 0)),
+        "code_bytes": int(getattr(ma, "generated_code_size_in_bytes", 0)),
+    }

@@ -1,0 +1,309 @@
+"""Per-layer roofline probes.
+
+XLA's ``cost_analysis()`` counts a ``lax.scan`` body ONCE (verified; DESIGN.md
+§5), and every LM here scans over layers. So per-cell roofline terms are
+composed as::
+
+    total(metric) = full_step(metric) + sum_probes (mult) * probe(metric)
+                    + analytic_recurrence_extra
+
+where each probe lowers ONE scan-body worth of computation with pinned
+shardings (mult = trip_count - 1), and the analytic extra covers recurrent
+scans *inside* a layer (rwkv6 wkv / hymba SSM), whose per-step bodies are
+likewise counted once.
+
+Probes intentionally use einsum attention: identical FLOPs to the chunked/
+flash path the full-step gate compiles, exact in HLO; HLO 'bytes accessed' for
+attention consequently reflects materialized scores — an upper bound vs the
+flash kernel; benchmarks/roofline.py substitutes the flash-optimal analytic
+bytes for the memory term and reports both.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, Family, ShapeConfig
+from repro.models import encdec, hybrid, ssm, transformer
+from repro.models.encdec import ENC_LEN
+from repro.models.registry import Model
+from repro.sharding import specs
+
+
+@dataclasses.dataclass
+class Probe:
+    name: str
+    mult: int
+    fn: Callable
+    args: tuple
+    shardings: Optional[tuple]   # logical-axis trees matching args
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _layer_param_sds(model: Model, key_name: str, extra_lead: int = 0):
+    """SDS tree for ONE scan slice of params[key_name] (drop leading L dim)."""
+    full = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    sub = full[key_name]
+    drop = 1
+    return jax.tree.map(lambda s: _sds(s.shape[drop:], s.dtype), sub)
+
+
+def _layer_logical(model: Model, key_name: str, zero_stage: int = 3):
+    """Logical tree for one scan slice (drop the leading None axis).
+    zero_stage=1 strips the 'fsdp' factor (params replicated across data)."""
+    lg = model.param_logical()[key_name]
+    def fix(ax):
+        ax = ax[1:]
+        if zero_stage < 3:
+            ax = tuple(None if a == "fsdp" else a for a in ax)
+        return ax
+    return jax.tree.map(fix, lg,
+                        is_leaf=lambda v: isinstance(v, tuple) and not isinstance(v, dict))
+
+
+def _x_sds(B, S, D, dtype):
+    return _sds((B, S, D), dtype)
+
+
+X_LOGICAL = ("batch", "seq_sp", None)
+
+
+def _grad_wrap(fn, remat: bool):
+    """fwd+bwd probe: grad of sum(output) wrt (x, layer_params) — the same
+    fwd+recompute+bwd structure the remat'd training scan body has."""
+    inner = jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable) \
+        if remat else fn
+
+    def probe(x, lp, *rest):
+        def scalar(x, lp):
+            return jnp.sum(inner(x, lp, *rest).astype(jnp.float32))
+        return jax.grad(scalar, argnums=(0, 1))(x, lp)
+    return probe
+
+
+# ------------------------------------------------------------ per family
+def probes_for(model: Model, shape: ShapeConfig, *, compute_dtype=jnp.bfloat16,
+               attn_impl: str = "einsum", remat: bool = True,
+               microbatches: int = 1, zero_stage: int = 3) -> List[Probe]:
+    """With gradient-accumulation microbatching, the full graph holds ONE
+    microbatch-scan body (itself holding one layer-scan body), so probes run
+    at B/microbatches and multiplicities scale by `microbatches`."""
+    cfg = model.cfg
+    B, S = shape.global_batch, shape.seq_len
+    kind = shape.kind
+    mb = microbatches if kind in ("train", "prefill") else 1
+    B = B // mb
+    D = cfg.d_model
+    probes: List[Probe] = []
+
+    def _mult(trips: int) -> int:
+        return mb * trips - 1
+
+    if cfg.family in (Family.DENSE, Family.MOE):
+        lp_sds = _layer_param_sds(model, "layers")
+        lp_log = _layer_logical(model, "layers", zero_stage)
+        if kind in ("train", "prefill"):
+            positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+            def fwd(x, lp):
+                return transformer._layer_apply(cfg, lp, x, positions, attn_impl)[0]
+            fn = _grad_wrap(fwd, remat) if kind == "train" else fwd
+            probes.append(Probe("layer", _mult(cfg.num_layers), fn,
+                                (_x_sds(B, S, D, compute_dtype), lp_sds),
+                                (X_LOGICAL, lp_log)))
+        else:
+            kv, hd = cfg.num_kv_heads, cfg.head_dim
+            ck = _sds((B, S, kv, hd), compute_dtype)
+            kv_log = model.cache_logical()["k"][1:]   # adaptive (drop L dim)
+
+            def dec(x, lp, ck, cv):
+                pos = jnp.asarray(S - 1, jnp.int32)
+                positions = jnp.full((B, 1), pos, jnp.int32)
+                return transformer._decode_layer(cfg, lp, x, ck, cv, pos, positions)
+            probes.append(Probe("layer", _mult(cfg.num_layers), dec,
+                                (_x_sds(B, 1, D, compute_dtype), lp_sds, ck, ck),
+                                (X_LOGICAL, lp_log, kv_log, kv_log)))
+
+    elif cfg.family == Family.VLM:
+        sp_sds = _layer_param_sds(model, "super")
+        sp_log = _layer_logical(model, "super", zero_stage)
+        n_super = cfg.num_layers // cfg.cross_attn_every
+        img = _sds((B, cfg.num_image_tokens, D), compute_dtype)
+        if kind in ("train", "prefill"):
+            positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+            def fwd(x, sp, image):
+                return transformer._super_apply_unrolled(cfg, sp, x, positions,
+                                                         image, attn_impl)
+            fn = _grad_wrap(fwd, remat) if kind == "train" else fwd
+            probes.append(Probe("super_layer", _mult(n_super), fn,
+                                (_x_sds(B, S, D, compute_dtype), sp_sds, img),
+                                (X_LOGICAL, sp_log, ("batch", None, None))))
+        else:
+            kv, hd = cfg.num_kv_heads, cfg.head_dim
+            per = cfg.cross_attn_every
+            ck = _sds((per, B, S, kv, hd), compute_dtype)
+
+            def dec(x, sp, ck, cv, image):
+                pos = jnp.asarray(S - 1, jnp.int32)
+                positions = jnp.full((B, 1), pos, jnp.int32)
+                return transformer._super_decode_unrolled(cfg, sp, x, ck, cv,
+                                                          image, pos, positions)
+            kv_log = (None,) + model.cache_logical()["k"][1:]
+            probes.append(Probe("super_layer", _mult(n_super), dec,
+                                (_x_sds(B, 1, D, compute_dtype), sp_sds, ck, ck, img),
+                                (X_LOGICAL, sp_log, kv_log, kv_log,
+                                 ("batch", None, None))))
+
+    elif cfg.family == Family.ENCDEC:
+        enc_sds = _layer_param_sds(model, "enc_layers")
+        enc_log = _layer_logical(model, "enc_layers", zero_stage)
+        dec_sds = _layer_param_sds(model, "dec_layers")
+        dec_log = _layer_logical(model, "dec_layers", zero_stage)
+        Se = ENC_LEN
+        enc_pos = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32), (B, Se))
+        if kind in ("train", "prefill"):
+            positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+            def enc_fwd(x, lp):
+                return encdec._enc_layer(cfg, lp, x, enc_pos, attn_impl)
+
+            def dec_fwd(x, lp, enc_out):
+                return encdec._dec_layer(cfg, lp, x, positions, enc_out,
+                                         enc_pos, attn_impl)
+            enc_fn = _grad_wrap(enc_fwd, remat) if kind == "train" else enc_fwd
+            dec_fn = _grad_wrap(dec_fwd, remat) if kind == "train" else dec_fwd
+            probes.append(Probe("enc_layer", _mult(cfg.encoder_layers), enc_fn,
+                                (_x_sds(B, Se, D, compute_dtype), enc_sds),
+                                (X_LOGICAL, enc_log)))
+            probes.append(Probe("dec_layer", _mult(cfg.num_layers), dec_fn,
+                                (_x_sds(B, S, D, compute_dtype), dec_sds,
+                                 _x_sds(B, Se, D, compute_dtype)),
+                                (X_LOGICAL, dec_log, X_LOGICAL)))
+        else:
+            kv, hd = cfg.num_kv_heads, cfg.head_dim
+            ck = _sds((B, S, kv, hd), compute_dtype)
+            xk = _sds((B, Se, kv, hd), compute_dtype)
+
+            def dec(x, lp, ck, cv, xk, xv):
+                pos = jnp.asarray(S - 1, jnp.int32)
+                positions = jnp.full((B, 1), pos, jnp.int32)
+                return encdec._decode_layer(cfg, lp, x, ck, cv, xk, xv, pos,
+                                            positions, enc_pos)
+            cl = model.cache_logical()
+            kv_log = cl["k"][1:]
+            xkv_log = cl["xk"][1:]
+            probes.append(Probe("dec_layer", _mult(cfg.num_layers), dec,
+                                (_x_sds(B, 1, D, compute_dtype), dec_sds, ck, ck,
+                                 xk, xk),
+                                (X_LOGICAL, dec_log, kv_log, kv_log,
+                                 xkv_log, xkv_log)))
+
+    elif cfg.family == Family.SSM:
+        lp_sds = _layer_param_sds(model, "layers")
+        lp_log = _layer_logical(model, "layers", zero_stage)
+        H, N = cfg.num_heads, cfg.head_dim
+        if kind in ("train", "prefill"):
+            def fwd(x, lp):
+                return ssm._layer_apply(cfg, lp, x, None, "scan")[0]
+            fn = _grad_wrap(fwd, remat) if kind == "train" else fwd
+            probes.append(Probe("layer", _mult(cfg.num_layers), fn,
+                                (_x_sds(B, S, D, compute_dtype), lp_sds),
+                                (X_LOGICAL, lp_log)))
+        else:
+            st = {"S": _sds((B, H, N, N), jnp.float32),
+                  "x_tm": _sds((B, D), jnp.float32),
+                  "x_cm": _sds((B, D), jnp.float32)}
+            st_log = {"S": ("batch", "heads", None, None),
+                      "x_tm": ("batch", None), "x_cm": ("batch", None)}
+
+            def dec(x, lp, st):
+                return ssm._layer_apply(cfg, lp, x, st, "scan")
+            probes.append(Probe("layer", _mult(cfg.num_layers), dec,
+                                (_x_sds(B, 1, D, compute_dtype), lp_sds, st),
+                                (X_LOGICAL, lp_log, st_log)))
+
+    elif cfg.family == Family.HYBRID:
+        lp_sds = _layer_param_sds(model, "layers")
+        lp_log = _layer_logical(model, "layers", zero_stage)
+        kv, hd, Nst = cfg.num_kv_heads, cfg.head_dim, cfg.ssm_state
+        if kind in ("train", "prefill"):
+            positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+            def fwd(x, lp):
+                return hybrid._layer_apply(cfg, lp, x, positions, attn_impl)
+            fn = _grad_wrap(fwd, remat) if kind == "train" else fwd
+            probes.append(Probe("layer", _mult(cfg.num_layers), fn,
+                                (_x_sds(B, S, D, compute_dtype), lp_sds),
+                                (X_LOGICAL, lp_log)))
+        else:
+            W = min(cfg.window, S)
+            ck = _sds((B, W, kv, hd), compute_dtype)
+            sp = _sds((B, W), jnp.int32)
+            hs = _sds((B, D, Nst), jnp.float32)
+            cv_t = _sds((B, hybrid.CONV_K - 1, D), jnp.float32)
+
+            def dec(x, lp, ck, cv, spos, hst, conv):
+                pos = jnp.asarray(S - 1, jnp.int32)
+                positions = jnp.full((B, 1), pos, jnp.int32)
+                return hybrid._decode_layer(cfg, lp, x, ck, cv, spos, hst, conv,
+                                            pos, positions)
+            probes.append(Probe("layer", _mult(cfg.num_layers), dec,
+                                (_x_sds(B, 1, D, compute_dtype), lp_sds, ck, ck,
+                                 sp, hs, cv_t),
+                                (X_LOGICAL, lp_log,
+                                 ("batch", None, "kv_heads", None),
+                                 ("batch", None, "kv_heads", None),
+                                 ("batch", None), ("batch", "d_ff", None),
+                                 ("batch", None, None))))
+    else:
+        raise ValueError(cfg.family)
+
+    # chunked-CE head: its scan body is likewise counted once by HLO
+    if kind == "train":
+        from repro.launch import steps as _steps
+        chunk = min(_steps.CE_CHUNK, S)
+        n_chunks = S // chunk
+        if mb * n_chunks > 1:
+            tied = cfg.tie_embeddings or cfg.family == Family.ENCDEC
+            Vp = cfg.padded_vocab
+            w_sds = _sds((Vp, D) if tied else (D, Vp), jnp.float32)
+            w_log = ("vocab", "fsdp") if tied else ("fsdp", "vocab")
+            vocab = cfg.vocab_size
+
+            def head_probe(x_c, w, labels_c):
+                f = jax.checkpoint(
+                    lambda x, ww: _steps.head_ce_chunk(x, ww, labels_c, vocab, tied),
+                    policy=jax.checkpoint_policies.nothing_saveable)
+                return jax.grad(f, argnums=(0, 1))(x_c, w)
+
+            probes.append(Probe("head_ce", _mult(n_chunks), head_probe,
+                                (_x_sds(B, chunk, D, compute_dtype), w_sds,
+                                 _sds((B, chunk), jnp.int32)),
+                                (X_LOGICAL, w_log, ("batch", None))))
+    return probes
+
+
+# ------------------------------------------------- analytic recurrence extras
+def recurrence_extra(cfg: ArchConfig, shape: ShapeConfig, kind: str) -> dict:
+    """FLOPs/bytes of per-token recurrent scans (counted once by HLO, so added
+    analytically for train/prefill; decode probes are scan-free and exact)."""
+    if kind == "decode" or cfg.family not in (Family.SSM, Family.HYBRID):
+        return {"flops": 0.0, "bytes": 0.0}
+    tokens = shape.tokens
+    mult = 3.0 if kind == "train" else 1.0   # fwd+recompute+bwd
+    if cfg.family == Family.SSM:
+        H, N = cfg.num_heads, cfg.head_dim
+        per_tok = 10.0 * H * N * N           # kv outer + bonus + read + decay-update
+    else:
+        per_tok = 8.0 * cfg.d_model * cfg.ssm_state
+    flops = mult * per_tok * tokens * cfg.num_layers
+    # recurrent state stays in VMEM in the chunked kernel; HBM extra ~ 0
+    return {"flops": flops, "bytes": 0.0}

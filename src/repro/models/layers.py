@@ -1,0 +1,625 @@
+"""Shared model layers: norms, RoPE, GQA attention (einsum / chunked / pallas),
+gated MLP, and the grouped-capacity MoE layer with expert parallelism.
+
+All layers are pure functions over pytrees of parameters. Initializers return
+param trees whose leaves carry a ``.logical`` sharding hint consumed by
+``sharding.specs.spec_tree`` via the companion ``*_logical`` functions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.specs import shard
+
+
+# ---------------------------------------------------------------- numerics
+def cast_compute(x, dtype):
+    return x.astype(dtype) if dtype is not None else x
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def layernorm(x, scale, bias, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def apply_norm(x, params, kind: str):
+    if kind == "rmsnorm":
+        return rmsnorm(x, params["scale"])
+    return layernorm(x, params["scale"], params["bias"])
+
+
+def norm_init(d: int, kind: str):
+    if kind == "rmsnorm":
+        return {"scale": jnp.zeros((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def norm_logical(kind: str):
+    if kind == "rmsnorm":
+        return {"scale": (None,)}
+    return {"scale": (None,), "bias": (None,)}
+
+
+# ---------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    sin = sin[..., :, None, :]  # broadcast over heads
+    cos = cos[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- dense init
+def _dense(key, shape, scale_dim=None, dtype=jnp.float32):
+    fan_in = scale_dim if scale_dim is not None else shape[0]
+    std = 1.0 / math.sqrt(fan_in)
+    return jax.random.normal(key, shape, dtype) * std
+
+
+# ---------------------------------------------------------------- attention
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    window: int = 0          # 0 = full causal
+    rope_theta: float = 10000.0
+    causal: bool = True
+
+
+def attn_init(key, dims: AttnDims):
+    ks = jax.random.split(key, 4)
+    D, H, KV, hd = dims.d_model, dims.num_heads, dims.num_kv_heads, dims.head_dim
+    p = {
+        "wq": _dense(ks[0], (D, H * hd)),
+        "wk": _dense(ks[1], (D, KV * hd)),
+        "wv": _dense(ks[2], (D, KV * hd)),
+        "wo": _dense(ks[3], (H * hd, D), scale_dim=H * hd),
+    }
+    if dims.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((KV * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((KV * hd,), jnp.float32)
+    return p
+
+
+def attn_logical(dims: AttnDims):
+    p = {
+        "wq": ("fsdp", "heads"),
+        "wk": ("fsdp", "kv_heads"),
+        "wv": ("fsdp", "kv_heads"),
+        "wo": ("heads", "fsdp"),
+    }
+    if dims.qkv_bias:
+        p.update({"bq": ("heads",), "bk": ("kv_heads",), "bv": ("kv_heads",)})
+    return p
+
+
+def _qkv(params, x, dims: AttnDims, positions):
+    B, S, _ = x.shape
+    H, KV, hd = dims.num_heads, dims.num_kv_heads, dims.head_dim
+    q = x @ params["wq"].astype(x.dtype)
+    k = x @ params["wk"].astype(x.dtype)
+    v = x @ params["wv"].astype(x.dtype)
+    if dims.qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KV, hd)
+    v = v.reshape(B, S, KV, hd)
+    if dims.rope_theta > 0:
+        q = apply_rope(q, positions, dims.rope_theta)
+        k = apply_rope(k, positions, dims.rope_theta)
+    # Adaptive TP: shard heads when they divide the model axis; otherwise fall
+    # back to sequence-parallel q (context parallelism) with replicated KV —
+    # keeps e.g. 25-head/5-kv archs runnable on a 16-way model axis.
+    from repro.sharding import specs as _sp
+    if H % max(_sp.axis_size("heads"), 1) == 0:
+        q = shard(q, "batch", None, "heads", None)
+    elif S > 1:
+        q = shard(q, "batch", "seq_sp", None, None)
+    if KV % max(_sp.axis_size("kv_heads"), 1) == 0:
+        k = shard(k, "batch", None, "kv_heads", None)
+        v = shard(v, "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+def _mask_bias(q_pos, k_pos, window: int, causal: bool):
+    """(..., Sq, Sk) additive mask from absolute positions."""
+    diff = q_pos[..., :, None] - k_pos[..., None, :]
+    ok = jnp.ones(diff.shape, bool)
+    if causal:
+        ok &= diff >= 0
+    if window > 0:
+        ok &= diff < window
+    return jnp.where(ok, 0.0, -1e30).astype(jnp.float32)
+
+
+def _sdpa_einsum(q, k, v, q_pos, k_pos, dims: AttnDims):
+    """Reference attention. q:(B,Sq,H,hd) k,v:(B,Sk,KV,hd).
+
+    GQA K/V are expanded to H heads so every attention tensor carries ONE
+    consistent head axis — a (KV,G) split head axis forces the SPMD
+    partitioner into 'involuntary full rematerialization' (replication) at
+    fwd/bwd sharding transitions. The expansion is a broadcast that shards
+    over 'heads' with everything else; the flash kernel path keeps true GQA."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+        from repro.sharding import specs as _sp
+        if H % max(_sp.axis_size("heads"), 1) == 0:
+            k = shard(k, "batch", None, "heads", None)
+            v = shard(v, "batch", None, "heads", None)
+    scores = jnp.einsum("bqhe,bshe->bhqs", q, k).astype(jnp.float32)
+    scores = scores / math.sqrt(hd)
+    scores = scores + _mask_bias(q_pos, k_pos, dims.window, dims.causal)[:, None]
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhqs,bshe->bqhe", probs, v)
+    return out
+
+
+def _sdpa_chunked(q, k, v, q_pos, k_pos, dims: AttnDims, q_chunk: int = 1024):
+    """Flash-style chunked attention in pure jnp: scan over query blocks —
+    bounds live memory to O(q_chunk * Sk). The chunk body is checkpointed so
+    scan-backward stores only chunk INPUTS (not scores/probs residuals) and
+    recomputes the chunk forward — without this, bwd stacks O(S^2) residuals
+    across chunks and defeats the memory bound entirely."""
+    B, Sq, H, hd = q.shape
+    n_chunks = max(1, Sq // q_chunk)
+    q_chunk = Sq // n_chunks
+
+    qs = q.reshape(B, n_chunks, q_chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    qp = q_pos.reshape(B, n_chunks, q_chunk).transpose(1, 0, 2)
+
+    @functools.partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def chunk_fwd(qc, qpc):
+        return _sdpa_einsum(qc, k, v, qpc, k_pos, dims)
+
+    def one_chunk(carry, inp):
+        qc, qpc = inp
+        return carry, chunk_fwd(qc, qpc)
+
+    _, outs = jax.lax.scan(one_chunk, None, (qs, qp))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, hd)
+
+
+def _sdpa_banded(q, k, v, dims: AttnDims, q_chunk: int = 1024):
+    """Sliding-window attention computing ONLY the diagonal band: each query
+    chunk attends to k/v rows [chunk_start - window, chunk_end) — work is
+    O(S * (window + chunk)), not O(S^2). Assumes prefill layout (positions
+    0..S-1). Unrolled over chunks so HLO FLOPs are exact (no scan-once
+    undercount); this is the beyond-paper optimization for windowed archs
+    (EXPERIMENTS.md §Perf, hymba prefill hillclimb)."""
+    B, Sq, H, hd = q.shape
+    W = dims.window
+    n_chunks = max(1, Sq // q_chunk)
+    q_chunk = Sq // n_chunks
+
+    @functools.partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def chunk_fn(qc, kc, vc, q_pos, k_pos):
+        return _sdpa_einsum(qc, kc, vc, q_pos, k_pos, dims)
+
+    outs = []
+    for ci in range(n_chunks):
+        qs = ci * q_chunk
+        ks = max(0, qs - W)
+        ke = qs + q_chunk
+        qc = jax.lax.slice_in_dim(q, qs, qs + q_chunk, axis=1)
+        kc = jax.lax.slice_in_dim(k, ks, ke, axis=1)
+        vc = jax.lax.slice_in_dim(v, ks, ke, axis=1)
+        q_pos = jnp.broadcast_to(jnp.arange(qs, qs + q_chunk), (B, q_chunk))
+        k_pos = jnp.broadcast_to(jnp.arange(ks, ke), (B, ke - ks))
+        outs.append(chunk_fn(qc, kc, vc, q_pos, k_pos))
+    return jnp.concatenate(outs, axis=1)
+
+
+def _sdpa_banded_cp(q, k, v, dims: AttnDims, q_chunk: int = 1024):
+    """Context-parallel banded attention: the chunk axis is sharded over the
+    'seq_sp' mesh axis via shard_map — every model-shard computes its OWN
+    whole chunks against (replicated) K/V band slices, so no per-chunk
+    resharding collectives occur (hillclimb C iteration 2; iteration 1's
+    plain banded form re-sharded a seq-sharded q at every slice)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding import specs as _sp
+
+    mesh = _sp.active_mesh()
+    B, S, H, hd = q.shape
+    n_chunks = max(1, S // q_chunk)
+    C = S // n_chunks
+    seq_ax = _sp._resolve_one("seq_sp", mesh) if mesh is not None else None
+    batch_ax = _sp._resolve_one("batch", mesh) if mesh is not None else None
+    n_seq = 1 if seq_ax is None else (
+        mesh.shape[seq_ax] if isinstance(seq_ax, str)
+        else int(np_prod([mesh.shape[a] for a in seq_ax])))
+    if mesh is None or seq_ax is None or n_chunks % n_seq or S < dims.window + C:
+        return _sdpa_banded(q, k, v, dims, q_chunk)
+    nc_local = n_chunks // n_seq
+    W = dims.window
+    band = W + C
+
+    if W > C * nc_local:   # halo wider than a shard's rows: fall back
+        return _sdpa_banded(q, k, v, dims, q_chunk)
+    n_shards = n_seq
+    perm = [(s, s + 1) for s in range(n_shards - 1)]   # send tail to next
+
+    def local(q_r, k_r, v_r):
+        # q_r: (B_l, nc_local, C, H, hd); k_r/v_r: (B_l, nc_local, C, KV, hd)
+        # K/V stay sequence-sharded; only a window-sized halo moves between
+        # neighbouring shards (ppermute) instead of all-gathering full K/V.
+        ci0 = jax.lax.axis_index(seq_ax) * nc_local
+        Bl = q_r.shape[0]
+        k_flat = k_r.reshape(Bl, nc_local * C, *k_r.shape[3:])
+        v_flat = v_r.reshape(Bl, nc_local * C, *v_r.shape[3:])
+        halo_k = jax.lax.ppermute(k_flat[:, -W:], seq_ax, perm)
+        halo_v = jax.lax.ppermute(v_flat[:, -W:], seq_ax, perm)
+        k_ext = jnp.concatenate([halo_k, k_flat], axis=1)  # rows [loc0-W, locN)
+        v_ext = jnp.concatenate([halo_v, v_flat], axis=1)
+
+        @functools.partial(jax.checkpoint,
+                           policy=jax.checkpoint_policies.nothing_saveable)
+        def chunk_fn(qc, kc, q_pos, k_pos, vc):
+            with _sp.use_mesh(None):
+                return _sdpa_einsum(qc, kc, vc, q_pos, k_pos, dims)
+
+        outs = []
+        for i in range(nc_local):
+            ci = ci0 + i
+            kc = jax.lax.slice_in_dim(k_ext, i * C, i * C + band, axis=1)
+            vc = jax.lax.slice_in_dim(v_ext, i * C, i * C + band, axis=1)
+            q_pos = jnp.broadcast_to(ci * C + jnp.arange(C), (Bl, C))
+            # k_ext row j holds global position ci0*C - W + i*C + j; rows
+            # before position 0 are shard-0's zero halo -> sentinel-masked
+            raw = (ci0 * C - W) + i * C + jnp.arange(band)
+            raw = jnp.where(raw >= 0, raw, S + W + 1)   # causal-masks zeros
+            k_pos = jnp.broadcast_to(raw, (Bl, band))
+            outs.append(chunk_fn(q_r[:, i], kc, q_pos, k_pos, vc))
+        return jnp.stack(outs, axis=1)
+
+    q_r = q.reshape(B, n_chunks, C, H, hd)
+    KV = k.shape[2]
+    k_r = k.reshape(B, n_chunks, C, KV, hd)
+    v_r = v.reshape(B, n_chunks, C, KV, hd)
+    out = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(batch_ax, seq_ax, None, None, None),
+                  P(batch_ax, seq_ax, None, None, None),
+                  P(batch_ax, seq_ax, None, None, None)),
+        out_specs=P(batch_ax, seq_ax, None, None, None),
+        check_rep=False)(q_r, k_r,
+                         v_r)
+    return out.reshape(B, S, H, hd)
+
+
+def np_prod(xs):
+    out = 1
+    for x in xs:
+        out *= x
+    return out
+
+
+def attention(params, x, dims: AttnDims, positions, impl: str = "einsum",
+              kv_override=None):
+    """Self-attention (or cross-attention when kv_override=(k,v,k_pos))."""
+    q, k, v = _qkv(params, x, dims, positions)
+    k_pos = positions
+    if kv_override is not None:
+        k, v, k_pos = kv_override
+    if impl == "banded" or (impl == "chunked" and dims.window > 0
+                            and dims.causal and kv_override is None):
+        out = _sdpa_banded_cp(q, k, v, dims)
+    elif impl == "chunked":
+        out = _sdpa_chunked(q, k, v, positions, k_pos, dims)
+    elif impl == "pallas":
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q, k, v, causal=dims.causal, window=dims.window,
+                                   q_positions=positions, k_positions=k_pos)
+    else:
+        out = _sdpa_einsum(q, k, v, positions, k_pos, dims)
+    B, S, H, hd = out.shape
+    out = out.reshape(B, S, H * hd)
+    out = out @ params["wo"].astype(x.dtype)
+    if S > 1:  # row-parallel wo output -> sequence-parallel (reduce-scatter)
+        out = shard(out, "batch", "seq_sp", None)
+    return out
+
+
+def _decode_sdpa_local(q, ck, cv, cache_pos, k_positions, window, hd):
+    """Partial-softmax decode attention over a LOCAL cache slice.
+    q: (B,1,KV,G,hd); ck/cv: (B,S_loc,KV,hd); k_positions: (S_loc,) global.
+    Returns (m (B,KV,G,1), l, acc (B,KV,G,1,hd)) for cross-shard combining."""
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", q, ck.astype(q.dtype)
+                        ).astype(jnp.float32) / math.sqrt(hd)
+    valid = k_positions[None, :] <= cache_pos
+    if window > 0:
+        valid &= k_positions[None, :] > cache_pos - window
+    scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
+    m = scores.max(axis=-1)                                   # (B,KV,G,1)
+    p = jnp.exp(scores - m[..., None])
+    l = p.sum(axis=-1)
+    acc = jnp.einsum("bkgqs,bskh->bkgqh", p.astype(q.dtype),
+                     cv.astype(q.dtype)).astype(jnp.float32)
+    return m, l, acc
+
+
+def attention_decode(params, x, dims: AttnDims, cache_k, cache_v, cache_pos,
+                     positions):
+    """Single-token decode: x (B,1,D); cache_{k,v}: (B,S_max,KV,hd).
+    Returns (out, new_k, new_v). Cache positions < cache_pos are valid.
+
+    When the cache sequence dim is sharded (adaptive cache_logical), attention
+    runs as flash-decode context parallelism via shard_map: each shard scans
+    ONLY its local cache rows and partial softmax stats (m, l, acc) combine
+    with three tiny psums — without this the SPMD partitioner replicates the
+    whole cache per chip (hillclimb A iteration 2)."""
+    q, k, v = _qkv(params, x, dims, positions)
+    B, S_max, KV, hd = cache_k.shape
+    H = dims.num_heads
+    G = H // KV
+    qg = q.reshape(B, 1, KV, G, hd)
+
+    from repro.sharding import specs as _sp
+    mesh = _sp.active_mesh()
+    seq_ax = _sp._resolve_one("seq_sp", mesh) if mesh is not None else None
+    kv_sharded = KV % max(_sp.axis_size("kv_heads"), 1) == 0 and \
+        _sp.axis_size("kv_heads") > 1
+    use_cp = (mesh is not None and seq_ax is not None and not kv_sharded
+              and isinstance(seq_ax, str) and S_max % mesh.shape[seq_ax] == 0)
+
+    if use_cp:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        batch_ax = _sp._resolve_one("batch", mesh)
+        n_shards = mesh.shape[seq_ax]
+        s_loc = S_max // n_shards
+
+        def local(qg, k_new, v_new, ck, cv, pos):
+            sid = jax.lax.axis_index(seq_ax)
+            # cache write happens LOCALLY on the owning shard (a global DUS
+            # on the sharded dim makes the partitioner replicate the cache)
+            rel = pos - sid * s_loc
+            safe = jnp.clip(rel, 0, s_loc - 1)
+            in_rng = (rel >= 0) & (rel < s_loc)
+            cur_k = jax.lax.dynamic_slice_in_dim(ck, safe, 1, axis=1)
+            cur_v = jax.lax.dynamic_slice_in_dim(cv, safe, 1, axis=1)
+            wk = jnp.where(in_rng, k_new.astype(ck.dtype), cur_k)
+            wv = jnp.where(in_rng, v_new.astype(cv.dtype), cur_v)
+            ck = jax.lax.dynamic_update_slice_in_dim(ck, wk, safe, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cv, wv, safe, axis=1)
+
+            k_positions = sid * s_loc + jnp.arange(s_loc)
+            m, l, acc = _decode_sdpa_local(qg, ck, cv, pos, k_positions,
+                                           dims.window, hd)
+            m_g = jax.lax.pmax(m, seq_ax)
+            corr = jnp.exp(m - m_g)
+            l_g = jax.lax.psum(l * corr, seq_ax)
+            acc_g = jax.lax.psum(acc * corr[..., None], seq_ax)
+            out = (acc_g / jnp.maximum(l_g, 1e-30)[..., None]).astype(qg.dtype)
+            return out, ck, cv
+
+        out, cache_k, cache_v = shard_map(
+            local, mesh=mesh,
+            in_specs=(P(batch_ax, None, None, None, None),
+                      P(batch_ax, None, None, None),
+                      P(batch_ax, None, None, None),
+                      P(batch_ax, seq_ax, None, None),
+                      P(batch_ax, seq_ax, None, None), P()),
+            out_specs=(P(batch_ax, None, None, None, None),
+                       P(batch_ax, seq_ax, None, None),
+                       P(batch_ax, seq_ax, None, None)),
+            check_rep=False)(qg, k, v, cache_k, cache_v, cache_pos)
+        out = out.transpose(0, 3, 1, 2, 4)       # (B,1,KV,G,hd)
+    else:
+        cache_k = jax.lax.dynamic_update_slice_in_dim(
+            cache_k, k.astype(cache_k.dtype), cache_pos, axis=1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(
+            cache_v, v.astype(cache_v.dtype), cache_pos, axis=1)
+        k_positions = jnp.arange(S_max)
+        m, l, acc = _decode_sdpa_local(qg, cache_k, cache_v, cache_pos,
+                                       k_positions, dims.window, hd)
+        out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        out = out.transpose(0, 3, 1, 2, 4)
+
+    out = out.reshape(B, 1, H * hd)
+    return out @ params["wo"].astype(x.dtype), cache_k, cache_v
+
+
+# ---------------------------------------------------------------- MLP
+def mlp_init(key, d_model: int, d_ff: int, gated: bool = True, bias: bool = False):
+    ks = jax.random.split(key, 3)
+    p = {"w_up": _dense(ks[0], (d_model, d_ff)),
+         "w_down": _dense(ks[1], (d_ff, d_model), scale_dim=d_ff)}
+    if gated:
+        p["w_gate"] = _dense(ks[2], (d_model, d_ff))
+    if bias:
+        p["b_up"] = jnp.zeros((d_ff,), jnp.float32)
+        p["b_down"] = jnp.zeros((d_model,), jnp.float32)
+    return p
+
+
+def mlp_logical(gated: bool = True, bias: bool = False):
+    p = {"w_up": ("fsdp", "d_ff"), "w_down": ("d_ff", "fsdp")}
+    if gated:
+        p["w_gate"] = ("fsdp", "d_ff")
+    if bias:
+        p["b_up"] = ("d_ff",)
+        p["b_down"] = (None,)
+    return p
+
+
+def mlp(params, x, act: str = "silu"):
+    up = x @ params["w_up"].astype(x.dtype)
+    if "b_up" in params:
+        up = up + params["b_up"].astype(x.dtype)
+    if "w_gate" in params:
+        gate = x @ params["w_gate"].astype(x.dtype)
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up) if act == "gelu" else jax.nn.silu(up)
+    h = shard(h, "batch", None, "d_ff")
+    out = h @ params["w_down"].astype(x.dtype)
+    if "b_down" in params:
+        out = out + params["b_down"].astype(x.dtype)
+    # constrain the row-parallel output to sequence-parallel BEFORE the
+    # residual add so the TP reduction lowers to reduce-scatter, not
+    # all-reduce (hillclimb C iteration 4: 1/TP the reduction wire bytes)
+    if out.ndim == 3 and out.shape[1] > 1:
+        out = shard(out, "batch", "seq_sp", None)
+    return out
+
+
+# ---------------------------------------------------------------- MoE
+@dataclasses.dataclass(frozen=True)
+class MoEDims:
+    d_model: int
+    d_ff: int
+    num_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    group_size: int = 128     # tokens per dispatch group (GShard-style)
+
+
+def moe_init(key, dims: MoEDims):
+    ks = jax.random.split(key, 4)
+    E, D, F = dims.num_experts, dims.d_model, dims.d_ff
+    return {
+        "router": _dense(ks[0], (D, E)),
+        "w_gate": _dense(ks[1], (E, D, F), scale_dim=D),
+        "w_up": _dense(ks[2], (E, D, F), scale_dim=D),
+        "w_down": _dense(ks[3], (E, F, D), scale_dim=F),
+    }
+
+
+def moe_logical():
+    return {
+        "router": (None, None),
+        "w_gate": ("expert", "fsdp", None),
+        "w_up": ("expert", "fsdp", None),
+        "w_down": ("expert", None, "fsdp"),
+    }
+
+
+def moe(params, x, dims: MoEDims):
+    """Grouped-capacity top-k MoE (GShard dispatch), expert-parallel over the
+    'expert' logical axis. x: (B, S, D) -> (B, S, D), plus aux losses."""
+    B, S, D = x.shape
+    E, K = dims.num_experts, dims.top_k
+    T = B * S
+    xt = x.reshape(T, D)
+
+    logits = (xt @ params["router"].astype(jnp.float32)).astype(jnp.float32)  # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)                            # (T,K)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # ---- aux losses (Switch-style load balance + router z-loss)
+    me = probs.mean(0)                                     # (E,)
+    onehot_top1 = jax.nn.one_hot(expert_idx[:, 0], E)
+    ce = onehot_top1.mean(0)
+    aux_loss = E * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+
+    # ---- grouped dispatch with fixed capacity
+    G = max(1, T // dims.group_size)
+    Sg = T // G
+    cap = max(1, int(math.ceil(Sg * K / E * dims.capacity_factor)))
+    xg = shard(xt.reshape(G, Sg, D), "batch", None, None)
+    idx_g = expert_idx.reshape(G, Sg, K)
+    gate_g = gate_vals.reshape(G, Sg, K)
+
+    # position of each (token, k) within its expert's capacity buffer.
+    # Everything carrying an E axis is sharded over 'expert' as well as the
+    # token-group axis — these (G,Sg,K,E[,cap]) tensors are the MoE dispatch
+    # working set and dominate backward memory if left expert-replicated.
+    eo = jax.nn.one_hot(idx_g, E, dtype=jnp.int32)          # (G,Sg,K,E)
+    eo = shard(eo, "batch", None, None, "expert")
+    flat = eo.reshape(G, Sg * K, E)
+    pos_in_e = jnp.cumsum(flat, axis=1) - flat              # (G,Sg*K,E)
+    pos = pos_in_e.reshape(G, Sg, K, E)
+    slot = (pos * eo).sum(-1)                               # (G,Sg,K)
+    keep = (slot < cap) & (gate_g > 0)
+    gate_g = jnp.where(keep, gate_g, 0.0)
+
+    # dispatch/combine one-hots: (G,Sg,K,E,cap) folded over K -> (G,Sg,E,cap)
+    kec = (jax.nn.one_hot(idx_g, E, dtype=jnp.float32)[..., None]
+           * jax.nn.one_hot(slot, cap, dtype=jnp.float32)[..., None, :]
+           * keep[..., None, None].astype(jnp.float32))
+    kec = shard(kec, "batch", None, None, "expert", None)
+    disp = shard(kec.sum(2).astype(x.dtype), "batch", None, "expert", None)
+    comb = shard((kec * gate_g[..., None, None]).sum(2),
+                 "batch", None, "expert", None)
+
+    # expert inputs: (E, G, cap, D) — sharded 'expert' x 'batch' (all_to_all here)
+    ein = jnp.einsum("gsec,gsd->egcd", disp, xg)
+    ein = shard(ein, "expert", "batch", None, None)
+    h = jnp.einsum("egcd,edf->egcf", ein, params["w_gate"].astype(x.dtype))
+    u = jnp.einsum("egcd,edf->egcf", ein, params["w_up"].astype(x.dtype))
+    h = jax.nn.silu(h) * u
+    eout = jnp.einsum("egcf,efd->egcd", h, params["w_down"].astype(x.dtype))
+    eout = shard(eout, "expert", "batch", None, None)
+
+    out = jnp.einsum("gsec,egcd->gsd", comb.astype(x.dtype), eout)
+    return out.reshape(B, S, D), {"moe_aux": aux_loss, "moe_z": z_loss}
+
+
+# ---------------------------------------------------------------- embeddings
+def embed_init(key, padded_vocab: int, d_model: int):
+    """Table rows are the PADDED vocab (configs.base.ArchConfig.padded_vocab)
+    so the vocab dim shards evenly; lm_logits masks the padding columns."""
+    return {"table": jax.random.normal(key, (padded_vocab, d_model), jnp.float32) * 0.02}
+
+
+def embed_logical():
+    return {"table": ("vocab", "fsdp")}
+
+
+def embed_lookup(params, ids, dtype):
+    return params["table"].astype(dtype)[ids]
+
+
+def lm_logits(params_embed, x, w_unembed=None, vocab: Optional[int] = None):
+    """x:(B,S,D) -> (B,S,V_padded), padding columns masked to -inf.
+    Uses the tied embedding table if w_unembed is None."""
+    table = w_unembed if w_unembed is not None else params_embed["table"]
+    logits = x @ table.astype(x.dtype).T if w_unembed is None else x @ table.astype(x.dtype)
+    logits = shard(logits, "batch", None, "vocab")
+    vp = logits.shape[-1]
+    if vocab is not None and vocab < vp:
+        mask = jax.lax.broadcasted_iota(jnp.int32, (vp,), 0) < vocab
+        logits = jnp.where(mask, logits, jnp.asarray(-1e30, logits.dtype))
+    return logits

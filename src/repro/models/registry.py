@@ -1,0 +1,100 @@
+"""Uniform model facade: every architecture family exposes
+init / param_logical / forward / init_cache / cache_logical / decode_step /
+input_specs through a single ``Model`` object keyed by arch id.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, Family, ShapeConfig
+from repro.models import encdec, hybrid, ssm, transformer
+from repro.models.encdec import ENC_LEN
+
+_FAMILY_MODULES = {
+    Family.DENSE: transformer,
+    Family.MOE: transformer,
+    Family.VLM: transformer,
+    Family.ENCDEC: encdec,
+    Family.SSM: ssm,
+    Family.HYBRID: hybrid,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    mod: Any
+
+    def init(self, key):
+        return self.mod.init(self.cfg, key)
+
+    def param_logical(self):
+        return self.mod.param_logical(self.cfg)
+
+    def forward(self, params, tokens, **kw):
+        return self.mod.forward(params, self.cfg, tokens, **kw)
+
+    def init_cache(self, batch: int, s_max: int, dtype=jnp.bfloat16):
+        return self.mod.init_cache(self.cfg, batch, s_max, dtype)
+
+    def cache_logical(self):
+        return self.mod.cache_logical(self.cfg)
+
+    def decode_step(self, params, token, cache, **kw):
+        return self.mod.decode_step(params, self.cfg, token, cache, **kw)
+
+    # -------------------------------------------------- input specs
+    def extra_inputs(self, batch: int, seq: int, dtype=jnp.bfloat16) -> dict:
+        """Modality-frontend STUB inputs (precomputed embeddings), per assignment."""
+        cfg = self.cfg
+        if cfg.family == Family.VLM:
+            return {"image_embeds": jax.ShapeDtypeStruct(
+                (batch, cfg.num_image_tokens, cfg.d_model), dtype)}
+        if cfg.family == Family.ENCDEC:
+            return {"frames": jax.ShapeDtypeStruct((batch, ENC_LEN, cfg.d_model), dtype)}
+        return {}
+
+    def input_specs(self, shape: ShapeConfig, dtype=jnp.bfloat16) -> dict:
+        """ShapeDtypeStruct stand-ins for every model input of a shape cell."""
+        B, S = shape.global_batch, shape.seq_len
+        if shape.kind == "train":
+            specs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                     "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        elif shape.kind == "prefill":
+            specs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        else:  # decode: one new token against a cache of length S
+            specs = {"token": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+        specs.update(self.extra_inputs(B, S, dtype))
+        return specs
+
+
+def get_model(cfg: ArchConfig) -> Model:
+    if cfg.family == Family.CNN:
+        raise ValueError("resnet20 uses models.resnet directly (paper pipeline)")
+    return Model(cfg=cfg, mod=_FAMILY_MODULES[cfg.family])
+
+
+def reduced_config(cfg: ArchConfig, **overrides) -> ArchConfig:
+    """Smoke-test-sized config of the same family (small dims, same structure)."""
+    defaults = dict(
+        num_layers=2 if not cfg.cross_attn_every else cfg.cross_attn_every,
+        d_model=64,
+        num_heads=4, num_kv_heads=max(1, 4 * cfg.num_kv_heads // max(cfg.num_heads, 1)),
+        d_ff=128, vocab_size=512, head_dim=16,
+        encoder_layers=2 if cfg.encoder_layers else 0,
+        num_image_tokens=8 if cfg.cross_attn_every else 0,
+        window=8 if cfg.window else 0,
+        ssm_state=cfg.ssm_state and 4,
+    )
+    if cfg.moe:
+        from repro.configs.base import MoEConfig
+        defaults["moe"] = MoEConfig(num_experts=4, top_k=2,
+                                    capacity_factor=cfg.moe.capacity_factor)
+    if cfg.cross_attn_every:
+        defaults["num_layers"] = 2 * cfg.cross_attn_every  # 2 super-layers
+    defaults.update(overrides)
+    return dataclasses.replace(cfg, **defaults)

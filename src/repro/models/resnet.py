@@ -1,0 +1,159 @@
+"""ResNet20 / CIFAR-10 — the paper's evaluation model (Tensil ResNet20-ZCU104).
+
+Convolutions are expressed two ways, mirroring how the Tensil systolic array
+executes them:
+  * ``conv_impl="lax"``    — jax.lax.conv_general_dilated (oracle / CPU-fast)
+  * ``conv_impl="im2col"`` — explicit im2col + matmul, the exact lowering a
+    32x32 (FPGA) / 128x128 (MXU) systolic array performs; this path can route
+    through the Pallas systolic matmul kernel and is what the capacity planner
+    partitions (stages x partitions, DESIGN.md C3/C4).
+
+BatchNorm is folded at inference (``fold_bn``) exactly as Tensil's compiler does.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.resnet20_cifar import ResNetConfig
+
+
+# ------------------------------------------------------------------ init
+def _conv_init(key, k, cin, cout):
+    fan_in = k * k * cin
+    w = jax.random.normal(key, (k, k, cin, cout), jnp.float32)
+    return w * jnp.sqrt(2.0 / fan_in)
+
+
+def _bn_init(c):
+    return {"scale": jnp.ones((c,), jnp.float32), "bias": jnp.zeros((c,), jnp.float32),
+            "mean": jnp.zeros((c,), jnp.float32), "var": jnp.ones((c,), jnp.float32)}
+
+
+def init(cfg: ResNetConfig, key):
+    keys = iter(jax.random.split(key, 64))
+    params = {"stem": {"w": _conv_init(next(keys), 3, cfg.in_channels, cfg.widths[0]),
+                       "bn": _bn_init(cfg.widths[0])}}
+    cin = cfg.widths[0]
+    stages = []
+    for si, (n, cout) in enumerate(zip(cfg.num_blocks, cfg.widths)):
+        blocks = []
+        for bi in range(n):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            blk = {"conv1": {"w": _conv_init(next(keys), 3, cin, cout), "bn": _bn_init(cout)},
+                   "conv2": {"w": _conv_init(next(keys), 3, cout, cout), "bn": _bn_init(cout)}}
+            if stride != 1 or cin != cout:
+                blk["proj"] = {"w": _conv_init(next(keys), 1, cin, cout), "bn": _bn_init(cout)}
+            blocks.append(blk)
+            cin = cout
+        stages.append(blocks)
+    params["stages"] = stages
+    params["head"] = {"w": jax.random.normal(next(keys), (cin, cfg.num_classes),
+                                             jnp.float32) * 0.01,
+                      "b": jnp.zeros((cfg.num_classes,), jnp.float32)}
+    return params
+
+
+# ------------------------------------------------------------------ conv paths
+def _im2col(x, k, stride, pad):
+    """x: (B,H,W,C) -> patches (B, Ho, Wo, k*k*C)."""
+    B, H, W, C = x.shape
+    x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    Ho = (H + 2 * pad - k) // stride + 1
+    Wo = (W + 2 * pad - k) // stride + 1
+    cols = []
+    for di in range(k):
+        for dj in range(k):
+            cols.append(jax.lax.slice(
+                x, (0, di, dj, 0),
+                (B, di + (Ho - 1) * stride + 1, dj + (Wo - 1) * stride + 1, C),
+                (1, stride, stride, 1)))
+    return jnp.concatenate(cols, axis=-1)
+
+
+def conv2d(x, w, stride=1, impl="lax", matmul_fn=None):
+    """x: (B,H,W,Cin), w: (k,k,Cin,Cout), SAME padding."""
+    k = w.shape[0]
+    pad = (k - 1) // 2
+    if impl == "lax":
+        return jax.lax.conv_general_dilated(
+            x, w, (stride, stride), [(pad, pad), (pad, pad)],
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    patches = _im2col(x, k, stride, pad)                   # (B,Ho,Wo,k*k*Cin)
+    B, Ho, Wo, P = patches.shape
+    wm = w.reshape(-1, w.shape[-1])                        # (k*k*Cin, Cout)
+    lhs = patches.reshape(B * Ho * Wo, P)
+    out = matmul_fn(lhs, wm) if matmul_fn is not None else lhs @ wm
+    return out.reshape(B, Ho, Wo, w.shape[-1])
+
+
+def _bn(x, p, eps=1e-5):
+    inv = jax.lax.rsqrt(p["var"] + eps) * p["scale"]
+    return x * inv + (p["bias"] - p["mean"] * inv)
+
+
+def fold_bn(params):
+    """Fold BN into conv weights (Tensil-compiler style) for inference."""
+    def fold(conv):
+        p = conv["bn"]
+        inv = jax.lax.rsqrt(p["var"] + 1e-5) * p["scale"]
+        w = conv["w"] * inv[None, None, None, :]
+        b = p["bias"] - p["mean"] * inv
+        return {"w": w, "b": b}
+    out = {"stem": fold(params["stem"]), "head": params["head"], "stages": []}
+    for blocks in params["stages"]:
+        nb = []
+        for blk in blocks:
+            f = {"conv1": fold(blk["conv1"]), "conv2": fold(blk["conv2"])}
+            if "proj" in blk:
+                f["proj"] = fold(blk["proj"])
+            nb.append(f)
+        out["stages"].append(nb)
+    return out
+
+
+# ------------------------------------------------------------------ forward
+def forward(params, cfg: ResNetConfig, images, *, folded=False, impl="lax",
+            matmul_fn=None, compute_dtype=jnp.float32):
+    """images: (B, H, W, C) -> logits (B, num_classes)."""
+    conv = functools.partial(conv2d, impl=impl, matmul_fn=matmul_fn)
+    x = images.astype(compute_dtype)
+
+    def apply_cb(cb, x, stride):
+        y = conv(x, cb["w"].astype(compute_dtype), stride)
+        if folded:
+            return y + cb["b"].astype(compute_dtype)
+        return _bn(y, jax.tree.map(lambda t: t.astype(compute_dtype), cb["bn"]))
+
+    x = jax.nn.relu(apply_cb(params["stem"], x, 1))
+    for si, blocks in enumerate(params["stages"]):
+        for bi, blk in enumerate(blocks):
+            stride = 2 if (si > 0 and bi == 0) else 1   # derived, not a param
+            h = jax.nn.relu(apply_cb(blk["conv1"], x, stride))
+            h = apply_cb(blk["conv2"], h, 1)
+            sc = apply_cb(blk["proj"], x, stride) if "proj" in blk else x
+            x = jax.nn.relu(h + sc)
+    x = x.mean(axis=(1, 2))
+    return x @ params["head"]["w"].astype(compute_dtype) + params["head"]["b"].astype(compute_dtype)
+
+
+def conv_layer_shapes(cfg: ResNetConfig, batch: int = 1):
+    """(name, M, K, N) im2col GEMM dims per conv — input to the capacity planner
+    (the paper's per-layer stage/partition table)."""
+    shapes = []
+    hw = cfg.image_size
+    shapes.append(("stem", batch * hw * hw, 3 * 3 * cfg.in_channels, cfg.widths[0]))
+    cin = cfg.widths[0]
+    for si, (n, cout) in enumerate(zip(cfg.num_blocks, cfg.widths)):
+        for bi in range(n):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            hw_out = hw // stride
+            shapes.append((f"s{si}b{bi}c1", batch * hw_out * hw_out, 3 * 3 * cin, cout))
+            shapes.append((f"s{si}b{bi}c2", batch * hw_out * hw_out, 3 * 3 * cout, cout))
+            if stride != 1 or cin != cout:
+                shapes.append((f"s{si}b{bi}proj", batch * hw_out * hw_out, cin, cout))
+            cin, hw = cout, hw_out
+    return shapes

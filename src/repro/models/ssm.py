@@ -1,0 +1,239 @@
+"""RWKV6 "Finch" — attention-free LM with data-dependent per-channel decay.
+
+Time-mix:  y_t = r_t · (S_{t-1} + diag(u) k_t v_tᵀ),  S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+with w_t = exp(-exp(w0 + lora_w(x_w))) (data-dependent decay) and DDLerp token-shift
+mixing for r/k/v/w/g. Channel-mix: squared-relu MLP with token shift.
+
+Heads: cfg.num_heads x head_dim (64). State per layer: (B, H, N, N).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.sharding.specs import shard
+
+LORA_R = 32
+DECAY_R = 64
+
+
+def _shift(x):
+    """Token shift: x_{t-1} (zeros at t=0). x: (B, T, D)."""
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+# ------------------------------------------------------------------ init
+def _layer_init(key, cfg: ArchConfig):
+    D, F = cfg.d_model, cfg.d_ff
+    H, N = cfg.num_heads, cfg.head_dim
+    ks = jax.random.split(key, 12)
+    return {
+        "ln1": L.norm_init(D, "layernorm"),
+        "ln2": L.norm_init(D, "layernorm"),
+        # DDLerp mixing params: mu_x plus one per stream (r,k,v,w,g)
+        "mu_x": jnp.zeros((D,), jnp.float32),
+        "mu": jnp.zeros((5, D), jnp.float32),
+        "lora_A": L._dense(ks[0], (5, D, LORA_R)),
+        "lora_B": jnp.zeros((5, LORA_R, D), jnp.float32),
+        # decay
+        "w0": jnp.full((D,), -2.0, jnp.float32),
+        "wA": L._dense(ks[1], (D, DECAY_R)),
+        "wB": jnp.zeros((DECAY_R, D), jnp.float32),
+        "u": jnp.zeros((H, N), jnp.float32),  # bonus
+        "wr": L._dense(ks[2], (D, D)),
+        "wk": L._dense(ks[3], (D, D)),
+        "wv": L._dense(ks[4], (D, D)),
+        "wg": L._dense(ks[5], (D, D)),
+        "wo": L._dense(ks[6], (D, D)),
+        "gn_scale": jnp.ones((H, N), jnp.float32),
+        # channel mix
+        "cmu_k": jnp.zeros((D,), jnp.float32),
+        "cmu_r": jnp.zeros((D,), jnp.float32),
+        "ck": L._dense(ks[7], (D, F)),
+        "cv": L._dense(ks[8], (F, D), scale_dim=F),
+        "cr": L._dense(ks[9], (D, D)),
+    }
+
+
+def _layer_logical(cfg: ArchConfig):
+    return {
+        "ln1": L.norm_logical("layernorm"), "ln2": L.norm_logical("layernorm"),
+        "mu_x": (None,), "mu": (None, None),
+        "lora_A": (None, "fsdp", None), "lora_B": (None, None, "fsdp"),
+        "w0": (None,), "wA": ("fsdp", None), "wB": (None, "fsdp"),
+        "u": ("heads", None),
+        "wr": ("fsdp", "heads"), "wk": ("fsdp", "heads"), "wv": ("fsdp", "heads"),
+        "wg": ("fsdp", "heads"), "wo": ("heads", "fsdp"),
+        "gn_scale": ("heads", None),
+        "cmu_k": (None,), "cmu_r": (None,),
+        "ck": ("fsdp", "d_ff"), "cv": ("d_ff", "fsdp"), "cr": ("fsdp", None),
+    }
+
+
+def init(cfg: ArchConfig, key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    keys = jax.random.split(k2, cfg.num_layers)
+    return {
+        "embed": L.embed_init(k1, cfg.padded_vocab, cfg.d_model),
+        "layers": jax.vmap(lambda kk: _layer_init(kk, cfg))(keys),
+        "final_norm": L.norm_init(cfg.d_model, "layernorm"),
+        "unembed": {"w": L._dense(k3, (cfg.d_model, cfg.padded_vocab))},
+    }
+
+
+def param_logical(cfg: ArchConfig):
+    def stacked(tree):
+        return jax.tree.map(lambda ax: (None,) + ax, tree,
+                            is_leaf=lambda v: isinstance(v, tuple))
+    return {
+        "embed": L.embed_logical(),
+        "layers": stacked(_layer_logical(cfg)),
+        "final_norm": L.norm_logical("layernorm"),
+        "unembed": {"w": ("fsdp", "vocab")},
+    }
+
+
+# ------------------------------------------------------------------ time-mix
+def _ddlerp(lp, x, xprev):
+    """Data-dependent lerp producing (x_r, x_k, x_v, x_w, x_g)."""
+    xx = xprev - x
+    base = x + xx * lp["mu_x"].astype(x.dtype)
+    lo = jnp.einsum("btd,sdr->sbtr", jnp.tanh(base), lp["lora_A"].astype(x.dtype))
+    lo = jnp.einsum("sbtr,srd->sbtd", lo, lp["lora_B"].astype(x.dtype))
+    mix = lp["mu"].astype(x.dtype)[:, None, None, :] + lo        # (5,B,T,D)
+    return x[None] + xx[None] * mix
+
+
+def _wkv_scan(r, k, v, w, u, state):
+    """Sequential reference recurrence.
+    r,k,v,w: (B,T,H,N); u: (H,N); state: (B,H,N,N) -> (y (B,T,H,N), state)."""
+    def step(S, inp):
+        rt, kt, vt, wt = inp  # (B,H,N)
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, S + u[None, :, :, None] * kv)
+        S = wt[..., None] * S + kv
+        return S, y
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+def _time_mix(lp, x, cfg: ArchConfig, state, impl: str = "scan"):
+    B, T, D = x.shape
+    H, N = cfg.num_heads, cfg.head_dim
+    xprev = _shift(x)
+    if state is not None and "x_tm" in state:
+        xprev = xprev.at[:, 0].set(state["x_tm"].astype(x.dtype))
+    xs = _ddlerp(lp, x, xprev)
+    x_r, x_k, x_v, x_w, x_g = xs[0], xs[1], xs[2], xs[3], xs[4]
+    r = (x_r @ lp["wr"].astype(x.dtype)).reshape(B, T, H, N)
+    k = (x_k @ lp["wk"].astype(x.dtype)).reshape(B, T, H, N)
+    v = (x_v @ lp["wv"].astype(x.dtype)).reshape(B, T, H, N)
+    g = jax.nn.silu(x_g @ lp["wg"].astype(x.dtype))
+    r = shard(r, "batch", None, "heads", None)
+    k = shard(k, "batch", None, "heads", None)
+    v = shard(v, "batch", None, "heads", None)
+    dec = (lp["w0"].astype(jnp.float32)
+           + jnp.tanh(x_w.astype(jnp.float32) @ lp["wA"].astype(jnp.float32))
+           @ lp["wB"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(dec)).reshape(B, T, H, N).astype(x.dtype)
+
+    S0 = (state["S"].astype(jnp.float32) if state is not None
+          else jnp.zeros((B, H, N, N), jnp.float32))
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        y, S = kops.wkv6(r, k, v, w, lp["u"].astype(x.dtype), S0)
+    else:
+        y, S = _wkv_scan(r.astype(jnp.float32), k.astype(jnp.float32),
+                         v.astype(jnp.float32), w.astype(jnp.float32),
+                         lp["u"].astype(jnp.float32), S0)
+    # per-head groupnorm
+    mu = y.mean(-1, keepdims=True)
+    var = y.var(-1, keepdims=True)
+    y = (y - mu) * jax.lax.rsqrt(var + 1e-5) * lp["gn_scale"].astype(jnp.float32)[None, None]
+    y = (y.reshape(B, T, D).astype(x.dtype)) * g
+    out = y @ lp["wo"].astype(x.dtype)
+    new_state = {"S": S, "x_tm": x[:, -1].astype(jnp.float32)}
+    return out, new_state
+
+
+def _channel_mix(lp, x, state):
+    xprev = _shift(x)
+    if state is not None and "x_cm" in state:
+        xprev = xprev.at[:, 0].set(state["x_cm"].astype(x.dtype))
+    xx = xprev - x
+    xk = x + xx * lp["cmu_k"].astype(x.dtype)
+    xr = x + xx * lp["cmu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(xk @ lp["ck"].astype(x.dtype)))
+    k = shard(k, "batch", None, "d_ff")
+    r = jax.nn.sigmoid(xr @ lp["cr"].astype(x.dtype))
+    out = r * (k @ lp["cv"].astype(x.dtype))
+    return out, {"x_cm": x[:, -1].astype(jnp.float32)}
+
+
+def _layer_apply(cfg, lp, x, state, impl):
+    h = L.apply_norm(x, lp["ln1"], "layernorm")
+    tm, st1 = _time_mix(lp, h, cfg, state, impl)
+    x = shard(x + tm, "batch", "seq_sp", None)
+    h = L.apply_norm(x, lp["ln2"], "layernorm")
+    cm, st2 = _channel_mix(lp, h, state)
+    x = shard(x + cm, "batch", "seq_sp", None)
+    return x, {**st1, **st2}
+
+
+# ------------------------------------------------------------------ public
+def forward(params, cfg: ArchConfig, tokens, *, compute_dtype=jnp.bfloat16,
+            attn_impl: str = "einsum", remat: bool = False, scan_impl: str = "scan",
+            return_features: bool = False, **_):
+    del attn_impl
+    x = L.embed_lookup(params["embed"], tokens, compute_dtype)
+    x = shard(x, "batch", "seq_sp", None)
+
+    def body(x, lp):
+        x, _ = _layer_apply(cfg, lp, x, None, scan_impl)
+        return x, jnp.zeros(())
+    if remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = L.apply_norm(x, params["final_norm"], "layernorm")
+    if return_features:
+        return x, {"moe_aux": jnp.zeros(()), "moe_z": jnp.zeros(())}
+    logits = L.lm_logits(params["embed"], x, params["unembed"]["w"], vocab=cfg.vocab_size)
+    return logits.astype(jnp.float32), {"moe_aux": jnp.zeros(()), "moe_z": jnp.zeros(())}
+
+
+def init_cache(cfg: ArchConfig, batch: int, s_max: int, dtype=jnp.bfloat16):
+    """Decode state: wkv state + token-shift carries per layer. O(1) in s_max."""
+    H, N, D, Lr = cfg.num_heads, cfg.head_dim, cfg.d_model, cfg.num_layers
+    return {
+        "S": jnp.zeros((Lr, batch, H, N, N), jnp.float32),
+        "x_tm": jnp.zeros((Lr, batch, D), jnp.float32),
+        "x_cm": jnp.zeros((Lr, batch, D), jnp.float32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_logical(cfg: ArchConfig):
+    return {"S": (None, "batch", "heads", None, None),
+            "x_tm": (None, "batch", None), "x_cm": (None, "batch", None),
+            "pos": ()}
+
+
+def decode_step(params, cfg: ArchConfig, token, cache, *, compute_dtype=jnp.bfloat16,
+                **_):
+    x = L.embed_lookup(params["embed"], token, compute_dtype)  # (B,1,D)
+
+    def body(x, xs):
+        lp, S, x_tm, x_cm = xs
+        st = {"S": S, "x_tm": x_tm, "x_cm": x_cm}
+        x, new_st = _layer_apply(cfg, lp, x, st, "scan")
+        return x, (new_st["S"], new_st["x_tm"], new_st["x_cm"])
+
+    x, (S, x_tm, x_cm) = jax.lax.scan(
+        body, x, (params["layers"], cache["S"], cache["x_tm"], cache["x_cm"]))
+    x = L.apply_norm(x, params["final_norm"], "layernorm")
+    logits = L.lm_logits(params["embed"], x, params["unembed"]["w"], vocab=cfg.vocab_size)
+    new_cache = {"S": S, "x_tm": x_tm, "x_cm": x_cm, "pos": cache["pos"] + 1}
+    return logits.astype(jnp.float32), new_cache

@@ -1,0 +1,331 @@
+"""Decoder-only transformer LM covering the dense, MoE, and VLM (interleaved
+cross-attention) families. Layers are stacked along a leading axis and executed
+with ``lax.scan`` so 40–64-layer configs lower/compile quickly at 512 devices.
+
+Public API (used by models.registry):
+    init(cfg, key)                      -> params
+    param_logical(cfg)                  -> pytree of logical axis tuples
+    forward(params, cfg, tokens, ...)   -> logits, aux      (train / prefill)
+    init_cache(cfg, batch, s_max, ...)  -> cache
+    decode_step(params, cfg, token, cache, ...) -> logits, cache
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, Family
+from repro.models import layers as L
+from repro.sharding.specs import shard
+
+
+# ------------------------------------------------------------------ helpers
+def _attn_dims(cfg: ArchConfig, causal: bool = True) -> L.AttnDims:
+    return L.AttnDims(
+        d_model=cfg.d_model, num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.head_dim, qkv_bias=cfg.qkv_bias, window=cfg.window,
+        rope_theta=cfg.rope_theta, causal=causal)
+
+
+def _cross_dims(cfg: ArchConfig) -> L.AttnDims:
+    d = _attn_dims(cfg, causal=False)
+    return L.AttnDims(**{**d.__dict__, "causal": False, "window": 0, "rope_theta": 0.0})
+
+
+def _moe_dims(cfg: ArchConfig) -> L.MoEDims:
+    return L.MoEDims(d_model=cfg.d_model, d_ff=cfg.d_ff,
+                     num_experts=cfg.moe.num_experts, top_k=cfg.moe.top_k,
+                     capacity_factor=cfg.moe.capacity_factor)
+
+
+def _remat_policy(remat):
+    """remat=True/'nothing' -> save only layer inputs; 'save_outs' -> also
+    keep the named post-collective attention/MLP outputs (skips their
+    recompute — and the recomputed collectives — in backward)."""
+    if remat == "save_outs":
+        return jax.checkpoint_policies.save_only_these_names(
+            "attn_out", "mlp_out")
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def _gated(cfg: ArchConfig) -> bool:
+    return cfg.norm == "rmsnorm" or cfg.family in (Family.DENSE, Family.MOE, Family.VLM)
+
+
+# ------------------------------------------------------------------ init
+def _layer_init(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": L.norm_init(cfg.d_model, cfg.norm),
+        "attn": L.attn_init(ks[0], _attn_dims(cfg)),
+        "ln2": L.norm_init(cfg.d_model, cfg.norm),
+    }
+    if cfg.moe:
+        p["moe"] = L.moe_init(ks[1], _moe_dims(cfg))
+    else:
+        p["mlp"] = L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, gated=_gated(cfg),
+                              bias=cfg.mlp_bias)
+    return p
+
+
+def _layer_logical(cfg: ArchConfig):
+    p = {
+        "ln1": L.norm_logical(cfg.norm),
+        "attn": L.attn_logical(_attn_dims(cfg)),
+        "ln2": L.norm_logical(cfg.norm),
+    }
+    if cfg.moe:
+        p["moe"] = L.moe_logical()
+    else:
+        p["mlp"] = L.mlp_logical(gated=_gated(cfg), bias=cfg.mlp_bias)
+    return p
+
+
+def _cross_init(key, cfg: ArchConfig):
+    return {"ln": L.norm_init(cfg.d_model, cfg.norm),
+            "attn": L.attn_init(key, _cross_dims(cfg)),
+            "gate": jnp.zeros((), jnp.float32)}
+
+
+def _cross_logical(cfg: ArchConfig):
+    return {"ln": L.norm_logical(cfg.norm),
+            "attn": L.attn_logical(_cross_dims(cfg)),
+            "gate": ()}
+
+
+def _stack(key, n, init_fn):
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def init(cfg: ArchConfig, key) -> dict:
+    k_emb, k_layers, k_cross, k_head = jax.random.split(key, 4)
+    params = {
+        "embed": L.embed_init(k_emb, cfg.padded_vocab, cfg.d_model),
+        "final_norm": L.norm_init(cfg.d_model, cfg.norm),
+    }
+    if cfg.cross_attn_every:
+        per = cfg.cross_attn_every
+        n_super = cfg.num_layers // per
+        def super_init(k):
+            k1, k2 = jax.random.split(k)
+            return {"blocks": _stack(k1, per, lambda kk: _layer_init(kk, cfg)),
+                    "cross": _cross_init(k2, cfg)}
+        params["super"] = _stack(k_layers, n_super, super_init)
+    else:
+        params["layers"] = _stack(k_layers, cfg.num_layers,
+                                  lambda kk: _layer_init(kk, cfg))
+    if not cfg.tie_embeddings:
+        params["unembed"] = {"w": L._dense(k_head, (cfg.d_model, cfg.padded_vocab))}
+    return params
+
+
+def param_logical(cfg: ArchConfig) -> dict:
+    def stacked(tree):  # prepend None for the layer-stack dim
+        return jax.tree.map(lambda ax: (None,) + ax, tree,
+                            is_leaf=lambda v: isinstance(v, tuple) and not isinstance(v, dict))
+    out = {
+        "embed": L.embed_logical(),
+        "final_norm": L.norm_logical(cfg.norm),
+    }
+    if cfg.cross_attn_every:
+        out["super"] = {"blocks": stacked(stacked(_layer_logical(cfg))),
+                        "cross": stacked(_cross_logical(cfg))}
+    else:
+        out["layers"] = stacked(_layer_logical(cfg))
+    if not cfg.tie_embeddings:
+        out["unembed"] = {"w": ("fsdp", "vocab")}
+    return out
+
+
+def _super_apply_unrolled(cfg: ArchConfig, sp, x, positions, img, attn_impl):
+    """One VLM super-layer (cross_attn_every dense layers + cross block) with
+    the inner loop unrolled — used by roofline probes so no nested scan hides
+    FLOPs from cost_analysis."""
+    for i in range(cfg.cross_attn_every):
+        lp = jax.tree.map(lambda t: t[i], sp["blocks"])
+        x, _ = _layer_apply(cfg, lp, x, positions, attn_impl)
+    return _cross_apply(cfg, sp["cross"], x, img, attn_impl)
+
+
+def _super_decode_unrolled(cfg: ArchConfig, sp, x, ck, cv, img, pos, positions):
+    cks, cvs = [], []
+    for i in range(cfg.cross_attn_every):
+        lp = jax.tree.map(lambda t: t[i], sp["blocks"])
+        x, c1, c2 = _decode_layer(cfg, lp, x, ck[i], cv[i], pos, positions)
+        cks.append(c1)
+        cvs.append(c2)
+    x = _cross_apply(cfg, sp["cross"], x, img, "einsum")
+    return x, jnp.stack(cks), jnp.stack(cvs)
+
+
+# ------------------------------------------------------------------ forward
+def _layer_apply(cfg: ArchConfig, lp, x, positions, attn_impl):
+    from jax.ad_checkpoint import checkpoint_name
+    h = L.apply_norm(x, lp["ln1"], cfg.norm)
+    a = L.attention(lp["attn"], h, _attn_dims(cfg), positions, impl=attn_impl)
+    # named saves: under the 'save_outs' remat policy the backward pass reuses
+    # these post-collective tensors instead of re-running attention/MLP (and
+    # their all-to-all / all-reduce resharding) — hillclimb B iteration 2
+    x = x + checkpoint_name(a, "attn_out")
+    x = shard(x, "batch", "seq_sp", None)
+    h = L.apply_norm(x, lp["ln2"], cfg.norm)
+    if cfg.moe:
+        y, aux = L.moe(lp["moe"], h, _moe_dims(cfg))
+    else:
+        y, aux = L.mlp(lp["mlp"], h), {"moe_aux": jnp.zeros(()), "moe_z": jnp.zeros(())}
+    x = shard(x + checkpoint_name(y, "mlp_out"), "batch", "seq_sp", None)
+    return x, aux
+
+
+def _cross_apply(cfg: ArchConfig, cp, x, image_kv, attn_impl):
+    """Gated cross-attention to (precomputed) image K/V embeds: (B, T_img, D)."""
+    h = L.apply_norm(x, cp["ln"], cfg.norm)
+    B, S, _ = x.shape
+    t_img = image_kv.shape[1]
+    img_pos = jnp.zeros((B, t_img), jnp.int32)
+    dims = _cross_dims(cfg)
+    # project image tokens with this layer's k/v weights
+    k = (image_kv @ cp["attn"]["wk"].astype(x.dtype)).reshape(B, t_img, dims.num_kv_heads, dims.head_dim)
+    v = (image_kv @ cp["attn"]["wv"].astype(x.dtype)).reshape(B, t_img, dims.num_kv_heads, dims.head_dim)
+    out = L.attention(cp["attn"], h, dims, jnp.zeros((B, S), jnp.int32),
+                      impl="einsum", kv_override=(k, v, img_pos))
+    return x + jnp.tanh(cp["gate"]).astype(x.dtype) * out
+
+
+def forward(params, cfg: ArchConfig, tokens, *, image_embeds=None,
+            compute_dtype=jnp.bfloat16, attn_impl: str = "einsum",
+            remat: bool = False, positions=None, return_features: bool = False):
+    """tokens: (B, S) int32 -> logits (B, S, V) in float32, aux dict."""
+    B, S = tokens.shape
+    x = L.embed_lookup(params["embed"], tokens, compute_dtype)
+    x = shard(x, "batch", "seq_sp", None)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def body(x, lp):
+        return _layer_apply(cfg, lp, x, positions, attn_impl)
+
+    if remat:
+        body = jax.checkpoint(body, policy=_remat_policy(remat))
+
+    if cfg.cross_attn_every:
+        assert image_embeds is not None, "VLM forward needs image_embeds"
+        img = image_embeds.astype(compute_dtype)
+
+        def super_body(x, sp):
+            x, aux = jax.lax.scan(body, x, sp["blocks"])
+            x = _cross_apply(cfg, sp["cross"], x, img, attn_impl)
+            return x, jax.tree.map(jnp.sum, aux)
+        if remat:
+            super_body = jax.checkpoint(super_body,
+                                        policy=jax.checkpoint_policies.nothing_saveable)
+        x, aux = jax.lax.scan(super_body, x, params["super"])
+    else:
+        x, aux = jax.lax.scan(body, x, params["layers"])
+
+    x = L.apply_norm(x, params["final_norm"], cfg.norm)
+    aux = jax.tree.map(jnp.sum, aux)
+    if return_features:
+        return x, aux
+    w_un = params["unembed"]["w"] if not cfg.tie_embeddings else None
+    logits = L.lm_logits(params["embed"], x, w_un, vocab=cfg.vocab_size)
+    return logits.astype(jnp.float32), aux
+
+
+# ------------------------------------------------------------------ decode
+def init_cache(cfg: ArchConfig, batch: int, s_max: int, dtype=jnp.bfloat16):
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    shape = (cfg.num_layers, batch, s_max, kv, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def cache_logical(cfg: ArchConfig):
+    """Adaptive: shard kv heads when they divide the model axis, else shard
+    the cache sequence dim (context-parallel decode)."""
+    from repro.sharding import specs as _sp
+    if cfg.num_kv_heads % max(_sp.axis_size("kv_heads"), 1) == 0:
+        kv = (None, "batch", None, "kv_heads", None)
+    else:
+        kv = (None, "batch", "seq_sp", None, None)
+    return {"k": kv, "v": kv, "pos": ()}
+
+
+def _decode_layer(cfg: ArchConfig, lp, x, ck, cv, pos, positions):
+    """One decode layer: returns (x, new_ck, new_cv). Exposed for roofline
+    probes (launch/probes.py) as well as the decode scan body."""
+    h = L.apply_norm(x, lp["ln1"], cfg.norm)
+    out, ck, cv = L.attention_decode(lp["attn"], h, _attn_dims(cfg), ck, cv,
+                                     pos, positions)
+    x = x + out
+    h = L.apply_norm(x, lp["ln2"], cfg.norm)
+    if cfg.moe:
+        y, _ = L.moe(lp["moe"], h, _moe_dims(cfg))
+    else:
+        y = L.mlp(lp["mlp"], h)
+    return x + y, ck, cv
+
+
+def _index_tree(tree, i):
+    return jax.tree.map(
+        lambda t: jax.lax.dynamic_index_in_dim(t, i, 0, keepdims=False), tree)
+
+
+def decode_step(params, cfg: ArchConfig, token, cache, *, image_embeds=None,
+                compute_dtype=jnp.bfloat16):
+    """token: (B, 1) int32. Returns (logits (B,1,V), new cache).
+
+    Layers run in a fori_loop carrying the FULL (L,B,S,KV,hd) cache with
+    in-place dynamic updates — a lax.scan over per-layer cache slices stacks
+    fresh output buffers (a full extra cache copy in HBM) because XLA cannot
+    alias scan ys to donated inputs."""
+    B = token.shape[0]
+    pos = cache["pos"]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    x = L.embed_lookup(params["embed"], token, compute_dtype)
+
+    if cfg.cross_attn_every:
+        assert image_embeds is not None
+        img = image_embeds.astype(compute_dtype)
+        per = cfg.cross_attn_every
+        n_super = cfg.num_layers // per
+        ck0 = cache["k"].reshape(n_super, per, *cache["k"].shape[1:])
+        cv0 = cache["v"].reshape(n_super, per, *cache["v"].shape[1:])
+
+        def body(i, carry):
+            x, ck_all, cv_all = carry
+            sp = _index_tree(params["super"], i)
+            ck = jax.lax.dynamic_index_in_dim(ck_all, i, 0, keepdims=False)
+            cv = jax.lax.dynamic_index_in_dim(cv_all, i, 0, keepdims=False)
+            x, ck, cv = _super_decode_unrolled(cfg, sp, x, ck, cv, img, pos,
+                                               positions)
+            ck_all = jax.lax.dynamic_update_index_in_dim(ck_all, ck, i, 0)
+            cv_all = jax.lax.dynamic_update_index_in_dim(cv_all, cv, i, 0)
+            return x, ck_all, cv_all
+
+        x, ck, cv = jax.lax.fori_loop(0, n_super, body, (x, ck0, cv0))
+        new_k = ck.reshape(cache["k"].shape)
+        new_v = cv.reshape(cache["v"].shape)
+    else:
+        def body(i, carry):
+            x, ck_all, cv_all = carry
+            lp = _index_tree(params["layers"], i)
+            ck = jax.lax.dynamic_index_in_dim(ck_all, i, 0, keepdims=False)
+            cv = jax.lax.dynamic_index_in_dim(cv_all, i, 0, keepdims=False)
+            x, ck, cv = _decode_layer(cfg, lp, x, ck, cv, pos, positions)
+            ck_all = jax.lax.dynamic_update_index_in_dim(ck_all, ck, i, 0)
+            cv_all = jax.lax.dynamic_update_index_in_dim(cv_all, cv, i, 0)
+            return x, ck_all, cv_all
+
+        x, new_k, new_v = jax.lax.fori_loop(
+            0, cfg.num_layers, body, (x, cache["k"], cache["v"]))
+
+    x = L.apply_norm(x, params["final_norm"], cfg.norm)
+    w_un = params["unembed"]["w"] if not cfg.tie_embeddings else None
+    logits = L.lm_logits(params["embed"], x, w_un, vocab=cfg.vocab_size)
+    new_cache = {"k": new_k, "v": new_v, "pos": pos + 1}
+    return logits.astype(jnp.float32), new_cache

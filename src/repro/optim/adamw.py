@@ -1,0 +1,65 @@
+"""AdamW with decoupled weight decay, global-norm clipping and schedule
+support — pure-pytree (no optax dependency). Optimizer state mirrors the
+parameter tree so it inherits parameter shardings (ZeRO-3 under FSDP rules).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: Callable[[jax.Array], jax.Array] | float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+
+    def init(self, params):
+        zeros = lambda p: jnp.zeros_like(p)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def _lr(self, count):
+        if callable(self.learning_rate):
+            return self.learning_rate(count)
+        return jnp.asarray(self.learning_rate, jnp.float32)
+
+    def update(self, grads, state, params):
+        count = state["count"] + 1
+        if self.clip_norm is not None:
+            gn = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gn, 1e-12))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        else:
+            gn = global_norm(grads)
+        b1, b2 = self.b1, self.b2
+        m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g, state["m"], grads)
+        v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * g * g, state["v"], grads)
+        c = count.astype(jnp.float32)
+        mhat_scale = 1.0 / (1 - b1 ** c)
+        vhat_scale = 1.0 / (1 - b2 ** c)
+        lr = self._lr(count)
+
+        def upd(p, mm, vv):
+            u = (mm * mhat_scale) / (jnp.sqrt(vv * vhat_scale) + self.eps)
+            u = u + self.weight_decay * p
+            return (-lr * u).astype(p.dtype)
+
+        updates = jax.tree.map(upd, params, m, v)
+        return updates, {"m": m, "v": v, "count": count}, gn
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)

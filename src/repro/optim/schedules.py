@@ -1,0 +1,39 @@
+"""LR schedules: cosine (default) and WSD (warmup-stable-decay — MiniCPM,
+arXiv:2404.06395 §4), both as count->lr callables for AdamW."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+           min_ratio: float = 0.1):
+    def fn(count):
+        c = count.astype(jnp.float32)
+        warm = peak_lr * c / max(warmup_steps, 1)
+        frac = jnp.clip((c - warmup_steps) / max(total_steps - warmup_steps, 1),
+                        0.0, 1.0)
+        cos = peak_lr * (min_ratio + (1 - min_ratio) * 0.5
+                         * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(c < warmup_steps, warm, cos)
+    return fn
+
+
+def wsd(peak_lr: float, warmup_steps: int, stable_steps: int, decay_steps: int,
+        min_ratio: float = 0.01):
+    """Warmup-Stable-Decay: linear warmup, long flat stable phase, short
+    exponential-ish (linear here) decay tail."""
+    def fn(count):
+        c = count.astype(jnp.float32)
+        warm = peak_lr * c / max(warmup_steps, 1)
+        stable = jnp.asarray(peak_lr, jnp.float32)
+        dfrac = jnp.clip((c - warmup_steps - stable_steps) / max(decay_steps, 1),
+                         0.0, 1.0)
+        decay = peak_lr * (1.0 - (1.0 - min_ratio) * dfrac)
+        out = jnp.where(c < warmup_steps, warm,
+                        jnp.where(c < warmup_steps + stable_steps, stable, decay))
+        return out
+    return fn
+
+
+def constant(lr: float):
+    return lambda count: jnp.asarray(lr, jnp.float32)

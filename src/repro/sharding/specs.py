@@ -1,0 +1,175 @@
+"""Logical-axis sharding: model code names *logical* axes; a rule table maps
+them to mesh axes. Keeps model definitions mesh-agnostic (single-pod, multi-pod,
+pipeline) — the same pattern MaxText/flax-linen use, reimplemented standalone.
+
+Usage::
+
+    with use_mesh(mesh, DEFAULT_RULES):
+        y = shard(x, "batch", "seq", None)   # inside jit: with_sharding_constraint
+
+Outside a mesh context ``shard`` is the identity, so models run untouched in
+single-device tests.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Logical = Union[str, None, Tuple[str, ...]]
+
+# logical axis -> mesh axis (or tuple of mesh axes). Entries whose mesh axes
+# are absent from the active mesh are dropped at resolution time.
+DEFAULT_RULES: Tuple[Tuple[str, Logical], ...] = (
+    ("batch", ("pod", "data")),      # data parallel over pod x data
+    ("seq_sp", "model"),             # sequence parallelism at layer boundaries
+    ("heads", "model"),              # tensor parallel attention heads
+    ("kv_heads", "model"),
+    ("d_ff", "model"),               # tensor parallel MLP
+    ("vocab", "model"),
+    ("expert", "model"),             # expert parallel
+    ("fsdp", "data"),                # ZeRO-3 weight sharding
+    ("kv_seq", None),                # KV-cache sequence dim (kept unsharded)
+    ("stage", "pod"),                # pipeline axis (when PP enabled)
+)
+
+# Rules for pure-DP pods (default production config): identical to DEFAULT_RULES.
+# Rules for pipeline-parallel pods: batch only over "data", stage over "pod".
+PIPELINE_RULES: Tuple[Tuple[str, Logical], ...] = tuple(
+    ("batch", "data") if k == "batch" else (k, v) for k, v in DEFAULT_RULES
+)
+
+# Serving rules: weights sharded over the model axis ONLY (replicated across
+# data) — no optimizer state exists at serve time, so ZeRO-3 'fsdp' sharding
+# buys nothing and costs a full per-layer weight all-gather every step; with
+# model-only sharding each chip streams its resident 1/TP weight slice.
+# (hillclimb A iteration 1 — EXPERIMENTS.md §Perf.)
+SERVE_RULES: Tuple[Tuple[str, Logical], ...] = tuple(
+    (k, None) if k == "fsdp" else (k, v) for k, v in DEFAULT_RULES
+)
+
+
+class _Ctx:
+    def __init__(self, mesh: Optional[Mesh], rules):
+        self.mesh = mesh
+        self.rules = dict(rules) if rules else {}
+
+
+_CTX: contextvars.ContextVar[_Ctx] = contextvars.ContextVar(
+    "shard_ctx", default=_Ctx(None, DEFAULT_RULES)
+)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], rules=DEFAULT_RULES):
+    token = _CTX.set(_Ctx(mesh, rules))
+    try:
+        # NamedShardings built here carry the mesh explicitly, so no global
+        # jax mesh context is required; `with mesh:` also works but is not
+        # needed for with_sharding_constraint/jit in_shardings.
+        yield mesh
+    finally:
+        _CTX.reset(token)
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _CTX.get().mesh
+
+
+def _resolve_one(logical: Logical, mesh: Mesh) -> Logical:
+    if logical is None:
+        return None
+    rules = _CTX.get().rules
+    mapped = rules.get(logical, None) if isinstance(logical, str) else logical
+    if mapped is None:
+        return None
+    if isinstance(mapped, str):
+        mapped = (mapped,)
+    present = tuple(a for a in mapped if a in mesh.axis_names)
+    if not present:
+        return None
+    return present if len(present) > 1 else present[0]
+
+
+def resolve(*logical_axes: Logical) -> P:
+    """Resolve logical axes to a PartitionSpec under the active mesh."""
+    mesh = active_mesh()
+    if mesh is None:
+        return P(*([None] * len(logical_axes)))
+    return P(*(_resolve_one(a, mesh) for a in logical_axes))
+
+
+def named_sharding(*logical_axes: Logical) -> Optional[NamedSharding]:
+    mesh = active_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, resolve(*logical_axes))
+
+
+def axis_size(logical: Logical) -> int:
+    """Product of mesh-axis sizes a logical axis resolves to (1 if unmapped)."""
+    mesh = active_mesh()
+    if mesh is None:
+        return 1
+    resolved = _resolve_one(logical, mesh)
+    if resolved is None:
+        return 1
+    if isinstance(resolved, str):
+        resolved = (resolved,)
+    size = 1
+    for a in resolved:
+        size *= mesh.shape[a]
+    return size
+
+
+def _fit_axes(shape, logical_axes):
+    """Drop logical axes whose resolved mesh size does not divide the dim —
+    the shape-aware fallback (replicate) for non-divisible dims (e.g. kv=5
+    heads on a 16-way model axis, or batch=1 long-context cells)."""
+    out = []
+    for dim, ax in zip(shape, logical_axes):
+        out.append(ax if (ax is not None and dim % max(axis_size(ax), 1) == 0
+                          and axis_size(ax) > 1) else None)
+    return tuple(out)
+
+
+def shard(x, *logical_axes: Logical):
+    """with_sharding_constraint against the active mesh (identity if none).
+    Non-divisible axes are dropped (replicated) rather than erroring."""
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    if x.ndim != len(logical_axes):
+        raise ValueError(
+            f"rank mismatch: array rank {x.ndim} vs {len(logical_axes)} logical axes"
+        )
+    fitted = _fit_axes(x.shape, logical_axes)
+    return jax.lax.with_sharding_constraint(x, named_sharding(*fitted))
+
+
+def _is_logical_leaf(v):
+    return isinstance(v, tuple) and all(
+        isinstance(a, (str, type(None), tuple)) for a in v)
+
+
+def spec_tree(tree_of_logical):
+    """Map a pytree of logical-axis tuples to NamedShardings (for in_shardings)."""
+    return jax.tree.map(lambda ax: named_sharding(*ax), tree_of_logical,
+                        is_leaf=_is_logical_leaf)
+
+
+def shardings_for(tree_of_logical, sds_tree):
+    """Shape-aware spec_tree: builds NamedShardings per leaf, dropping logical
+    axes whose mesh size does not divide that leaf's dim (pjit *arguments*
+    require exact divisibility, unlike internal constraints)."""
+    flat_log, _ = jax.tree.flatten(tree_of_logical, is_leaf=_is_logical_leaf)
+    flat_sds, treedef = jax.tree.flatten(sds_tree)
+    assert len(flat_log) == len(flat_sds), (len(flat_log), len(flat_sds))
+    out = []
+    for ax, s in zip(flat_log, flat_sds):
+        fitted = _fit_axes(s.shape, ax)
+        out.append(named_sharding(*fitted))
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,209 @@
+"""Multi-device tests (subprocess with --xla_force_host_platform_device_count):
+sharded training equivalence, elastic re-shard restore, pipeline parallelism,
+compressed gradient all-reduce, and the sharding-spec resolution logic."""
+import numpy as np
+import pytest
+
+from repro.sharding import specs
+
+
+# ---------------------------------------------------- spec resolution (local)
+def test_resolve_without_mesh_is_identity():
+    import jax.numpy as jnp
+    x = jnp.ones((4, 4))
+    assert specs.shard(x, "batch", None) is x
+    assert specs.axis_size("batch") == 1
+
+
+def test_rule_filtering():
+    """Axes absent from the active mesh drop out of resolved specs."""
+    import jax
+    mesh = jax.make_mesh((1,), ("data",))
+    with specs.use_mesh(mesh):
+        p = specs.resolve("batch", "heads", None)
+        # 'pod' filtered (absent), 'model' filtered (absent) -> heads -> None
+        assert p[1] is None
+
+
+# ------------------------------------------------------------- multi-device
+def test_sharded_training_matches_single_device(multidevice):
+    out = multidevice("""
+import jax, jax.numpy as jnp, numpy as np
+from repro import configs
+from repro.launch import steps as steps_mod
+from repro.models.registry import get_model, reduced_config
+from repro.optim.adamw import AdamW
+from repro.sharding import specs
+
+cfg = reduced_config(configs.get_config("codeqwen1.5-7b"))
+model = get_model(cfg)
+opt = AdamW(learning_rate=1e-3)
+toks = jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0, cfg.vocab_size)
+batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
+
+losses = {}
+for mesh_shape in [None, (2, 4)]:
+    mesh = jax.make_mesh(mesh_shape, ("data", "model")) if mesh_shape else None
+    with specs.use_mesh(mesh):
+        state = steps_mod.init_train_state(model, opt, jax.random.PRNGKey(0))
+        step = steps_mod.make_train_step(model, opt, compute_dtype=jnp.float32,
+                                         remat=False)
+        if mesh is not None:
+            sds = jax.eval_shape(lambda: state)
+            sh = steps_mod.state_shardings(model, sds)
+            bsh = steps_mod.batch_shardings(model, jax.eval_shape(lambda: batch))
+            state = jax.tree.map(lambda x, s: jax.device_put(x, s), state, sh)
+            fn = jax.jit(step, in_shardings=(sh, bsh))
+        else:
+            fn = jax.jit(step)
+        for _ in range(3):
+            state, metrics = fn(state, batch)
+        losses[str(mesh_shape)] = float(metrics["loss"])
+vals = list(losses.values())
+assert abs(vals[0] - vals[1]) < 1e-3, losses
+print("SHARDED_OK", vals[0], vals[1])
+""")
+    assert "SHARDED_OK" in out
+
+
+def test_elastic_reshard_restore(multidevice):
+    """Save on a (2,4) mesh, restore on (4,2) and (8,1): losses continue
+    identically — a pod loss / re-slice survival scenario."""
+    out = multidevice("""
+import jax, jax.numpy as jnp, numpy as np, tempfile
+from repro import configs
+from repro.checkpoint.manager import CheckpointManager
+from repro.launch import steps as steps_mod
+from repro.models.registry import get_model, reduced_config
+from repro.optim.adamw import AdamW
+from repro.runtime.elastic import choose_mesh_shape
+from repro.sharding import specs
+
+cfg = reduced_config(configs.get_config("minicpm-2b"))
+model = get_model(cfg)
+opt = AdamW(learning_rate=1e-3)
+toks = jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0, cfg.vocab_size)
+batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
+tmp = tempfile.mkdtemp()
+mgr = CheckpointManager(tmp, async_save=False)
+
+def one_step_from(mesh_shape, state=None):
+    mesh = jax.make_mesh(mesh_shape, ("data", "model"))
+    with specs.use_mesh(mesh):
+        sds = jax.eval_shape(lambda k: steps_mod.init_train_state(model, opt, k),
+                             jax.random.PRNGKey(0))
+        sh = steps_mod.state_shardings(model, sds)
+        if state is None:
+            state, meta = mgr.restore(shardings=sh)
+        step = jax.jit(steps_mod.make_train_step(model, opt,
+                       compute_dtype=jnp.float32, remat=False),
+                       in_shardings=(sh, steps_mod.batch_shardings(
+                           model, jax.eval_shape(lambda: batch))))
+        state, metrics = step(state, batch)
+        return float(metrics["loss"])
+
+# train 2 steps on (2,4), checkpoint
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+with specs.use_mesh(mesh):
+    state = steps_mod.init_train_state(model, opt, jax.random.PRNGKey(0))
+    step = jax.jit(steps_mod.make_train_step(model, opt,
+                   compute_dtype=jnp.float32, remat=False))
+    state, m = step(state, batch)
+    mgr.save(1, state)
+
+losses = [one_step_from(s) for s in [(2, 4), (4, 2), (8, 1)]]
+assert max(losses) - min(losses) < 1e-4, losses
+shape, axes = choose_mesh_shape(6, model_parallel=4)
+assert shape[0] * shape[1] == 6
+print("ELASTIC_OK", losses)
+""")
+    assert "ELASTIC_OK" in out
+
+
+def test_pipeline_parallel_matches_sequential(multidevice):
+    out = multidevice("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.sharding.pipeline import bubble_fraction, make_pipeline
+
+mesh = jax.make_mesh((4,), ("pod",))
+P_stages, n_micro, B, D = 4, 8, 2, 16
+key = jax.random.PRNGKey(0)
+# stage params: [P, D, D]
+ws = jax.random.normal(key, (P_stages, D, D)) / np.sqrt(D)
+
+def stage_fn(p, x):
+    return jnp.tanh(x @ p["w"])
+
+pipe = make_pipeline(mesh, stage_fn, {"w": P("pod")}, stage_axis="pod",
+                     n_micro=n_micro)
+x = jax.random.normal(jax.random.PRNGKey(1), (n_micro, B, D))
+got = pipe({"w": ws}, x)
+
+# sequential reference
+ref = x
+for s in range(P_stages):
+    ref = jax.vmap(lambda xm: stage_fn({"w": ws[s]}, xm))(ref)
+np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=2e-5, atol=2e-5)
+assert abs(bubble_fraction(4, 8) - 3/11) < 1e-9
+print("PIPELINE_OK")
+""")
+    assert "PIPELINE_OK" in out
+
+
+def test_compressed_allreduce(multidevice):
+    out = multidevice("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.optim.grad_compress import init_error, make_compressed_allreduce
+
+mesh = jax.make_mesh((8,), ("data",))
+key = jax.random.PRNGKey(0)
+g_global = jax.random.normal(key, (8, 64, 32))   # per-shard grads
+specs_tree = {"w": P()}                          # grads replicated per shard
+ar = make_compressed_allreduce(mesh, {"w": P("data", None, None)},
+                               dp_axes=("data",))
+grads = {"w": jax.device_put(g_global, NamedSharding(mesh, P("data", None, None)))}
+err = init_error(grads)
+mean, new_err = jax.jit(ar)(grads, err)
+want = np.mean(np.asarray(g_global), axis=0)
+got = np.asarray(mean["w"])   # every shard row should now hold the mean
+for i in range(8):
+    np.testing.assert_allclose(got[i], want, rtol=0.04, atol=0.04)
+# error feedback: residual bounded by quantization step
+scale = np.abs(np.asarray(g_global)).max(axis=(1,2), keepdims=True) / 127.0
+assert np.abs(np.asarray(new_err["w"])).max() <= scale.max() * 0.51 + 1e-6
+# over repeated steps with the same gradient, EF keeps mean error ~0
+total = np.zeros_like(want)
+err = init_error(grads)
+for _ in range(8):
+    mean, err = jax.jit(ar)(grads, err)
+    total += np.asarray(mean["w"])[0]
+np.testing.assert_allclose(total / 8, want, rtol=0.02, atol=0.002)
+print("COMPRESS_OK")
+""")
+    assert "COMPRESS_OK" in out
+
+
+def test_moe_expert_parallel_consistency(multidevice):
+    """MoE forward agrees between single-device and expert-parallel meshes."""
+    out = multidevice("""
+import jax, jax.numpy as jnp, numpy as np
+from repro import configs
+from repro.models.registry import get_model, reduced_config
+from repro.sharding import specs
+
+cfg = reduced_config(configs.get_config("dbrx-132b"))
+model = get_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+toks = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, cfg.vocab_size)
+
+ref, _ = model.forward(params, toks, compute_dtype=jnp.float32)
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+with specs.use_mesh(mesh):
+    fn = jax.jit(lambda p, t: model.forward(p, t, compute_dtype=jnp.float32)[0])
+    got = fn(params, toks)
+np.testing.assert_allclose(np.asarray(ref), np.asarray(got), rtol=2e-3, atol=2e-3)
+print("MOE_EP_OK")
+""")
+    assert "MOE_EP_OK" in out

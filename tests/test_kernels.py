@@ -1,0 +1,129 @@
+"""Per-kernel shape/dtype sweeps asserting allclose against the ref.py
+pure-jnp oracles (kernels run interpret=True on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype) * scale
+
+
+@pytest.mark.parametrize("dataflow", ["output_stationary", "weight_stationary",
+                                      "input_stationary"])
+@pytest.mark.parametrize("mkn", [(256, 256, 256), (192, 320, 128),
+                                 (130, 70, 200), (64, 512, 96)])
+def test_matmul_dataflows(dataflow, mkn):
+    m, k, n = mkn
+    ks = jax.random.split(KEY, 2)
+    x = _rand(ks[0], (m, k))
+    w = _rand(ks[1], (k, n))
+    got = ops.matmul(x, w, block_m=64, block_n=64, block_k=64, dataflow=dataflow)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.matmul(x, w)),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_dtypes(dtype):
+    ks = jax.random.split(KEY, 2)
+    x = _rand(ks[0], (128, 128), dtype)
+    w = _rand(ks[1], (128, 128), dtype)
+    got = ops.matmul(x, w, block_m=64, block_n=64, block_k=64)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref.matmul(x, w), np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("shape", [(128, 256, 192), (256, 128, 64)])
+def test_quant_matmul(shape):
+    m, k, n = shape
+    ks = jax.random.split(KEY, 3)
+    x = _rand(ks[0], (m, k))
+    wq = jax.random.randint(ks[1], (k, n), -127, 127, jnp.int8)
+    sc = jax.random.uniform(ks[2], (n,), jnp.float32, 0.01, 0.1)
+    got = ops.quant_matmul(x, wq, sc, block_m=64, block_n=64, block_k=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.quant_matmul(x, wq, sc)),
+                               rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("cfg", [
+    dict(Sq=256, Sk=256, H=4, KV=2, causal=True, window=0),
+    dict(Sq=256, Sk=256, H=4, KV=4, causal=False, window=0),
+    dict(Sq=256, Sk=256, H=8, KV=2, causal=True, window=64),
+    dict(Sq=128, Sk=512, H=2, KV=1, causal=False, window=0),
+])
+def test_flash_attention(cfg):
+    ks = jax.random.split(KEY, 3)
+    q = _rand(ks[0], (2, cfg["Sq"], cfg["H"], 64))
+    k = _rand(ks[1], (2, cfg["Sk"], cfg["KV"], 64))
+    v = _rand(ks[2], (2, cfg["Sk"], cfg["KV"], 64))
+    got = ops.flash_attention(q, k, v, causal=cfg["causal"],
+                              window=cfg["window"], block_q=64, block_k=64)
+    want = ref.flash_attention(q, k, v, causal=cfg["causal"],
+                               window=cfg["window"])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("T,chunk", [(64, 16), (64, 32), (128, 64), (33, 16)])
+def test_wkv6(T, chunk):
+    B, H, N = 2, 3, 16
+    ks = jax.random.split(KEY, 6)
+    r, k, v = (_rand(kk, (B, T, H, N), scale=0.5) for kk in ks[:3])
+    w = jax.nn.sigmoid(_rand(ks[3], (B, T, H, N))) * 0.5 + 0.5
+    u = _rand(ks[4], (H, N), scale=0.1)
+    s0 = _rand(ks[5], (B, H, N, N), scale=0.1)
+    y1, sT1 = ops.wkv6(r, k, v, w, u, s0, chunk=chunk)
+    y2, sT2 = ref.wkv6(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(sT1), np.asarray(sT2), rtol=3e-4, atol=3e-4)
+
+
+def test_wkv6_strong_decay():
+    """Numerical safety with aggressive decays (w near 0)."""
+    B, T, H, N = 1, 64, 2, 8
+    ks = jax.random.split(KEY, 5)
+    r, k, v = (_rand(kk, (B, T, H, N), scale=0.5) for kk in ks[:3])
+    w = jnp.full((B, T, H, N), 0.05)
+    u = _rand(ks[3], (H, N), scale=0.1)
+    s0 = jnp.zeros((B, H, N, N))
+    y1, _ = ops.wkv6(r, k, v, w, u, s0, chunk=16)
+    y2, _ = ref.wkv6(r, k, v, w, u, s0)
+    assert np.isfinite(np.asarray(y1)).all()
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("T,chunk", [(64, 16), (128, 64)])
+def test_selective_scan(T, chunk):
+    B, D, N = 2, 32, 8
+    ks = jax.random.split(KEY, 6)
+    x = _rand(ks[0], (B, T, D))
+    dt = jax.nn.softplus(_rand(ks[1], (B, T, D)))
+    b = _rand(ks[2], (B, T, N))
+    c = _rand(ks[3], (B, T, N))
+    a = -jnp.exp(_rand(ks[4], (D, N), scale=0.5))
+    h0 = _rand(ks[5], (B, D, N), scale=0.1)
+    y1, h1 = ops.selective_scan(x, dt, b, c, a, h0, chunk=chunk)
+    y2, h2 = ref.selective_scan(x, dt, b, c, a, h0)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), rtol=2e-4, atol=2e-4)
+
+
+def test_matmul_grad_flows():
+    """Kernels are differentiable via interpret mode (training usability)."""
+    ks = jax.random.split(KEY, 2)
+    x = _rand(ks[0], (64, 64))
+    w = _rand(ks[1], (64, 64))
+
+    def f(x, w):
+        return jnp.sum(ops.matmul(x, w, block_m=64, block_n=64, block_k=64) ** 2)
+    gx, gw = jax.grad(f, argnums=(0, 1))(x, w)
+    gx2, gw2 = jax.grad(lambda x, w: jnp.sum((x @ w) ** 2), argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(gx2), rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(gw2), rtol=1e-3, atol=1e-3)

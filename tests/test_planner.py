@@ -1,0 +1,84 @@
+"""Capacity planner invariants — including hypothesis property tests."""
+import math
+
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.configs.base import MemoryStrategy
+from repro.core.dataflow import DATAFLOWS, Gemm, Tiling, reload_factor, traffic_bytes
+from repro.core.planner import MXU_DIM, PlannerConfig, plan_gemm
+from repro.core.strategies import ZCU104, TPU_V5E, planner_config
+
+gemm_st = st.builds(
+    Gemm,
+    name=st.just("g"),
+    m=st.integers(1, 8192),
+    k=st.integers(1, 8192),
+    n=st.integers(1, 8192),
+)
+
+
+@given(gemm_st, st.sampled_from([4 * 2**20, 16 * 2**20, 64 * 2**20]),
+       st.booleans())
+def test_plan_fits_budget(g, budget, overlap):
+    cfg = PlannerConfig(vmem_budget=budget, overlap=overlap)
+    plan = plan_gemm(g, cfg)
+    assert plan.vmem_used <= budget
+    assert plan.stages >= 1 and plan.partitions >= 1
+
+
+@given(gemm_st)
+def test_traffic_at_least_resident_optimum(g):
+    """No dataflow can move fewer bytes than touching each tensor once."""
+    t = Tiling(128, 128, 128)
+    opt = g.a_size + g.w_size + g.o_size
+    for df in DATAFLOWS:
+        assert traffic_bytes(g, t, df) >= opt * 0.999
+        assert reload_factor(g, t, df) >= 0.999
+
+
+@given(gemm_st)
+def test_bigger_budget_never_more_traffic(g):
+    """The paper's Ultra-RAM claim as an invariant: more local memory can
+    only reduce (or keep) planned HBM traffic."""
+    small = plan_gemm(g, PlannerConfig(vmem_budget=2 * 2**20, overlap=False))
+    big = plan_gemm(g, PlannerConfig(vmem_budget=64 * 2**20, overlap=False))
+    assert big.traffic <= small.traffic
+
+
+def test_resident_plan_when_fits():
+    """§4.4: when the whole layer fits, the planner pins it (1 stage, 1
+    partition, reload factor 1)."""
+    g = Gemm("small", 512, 512, 512)
+    cfg = planner_config(MemoryStrategy.COMPILER_LARGE_LOCAL, TPU_V5E)
+    plan = plan_gemm(g, cfg)
+    assert plan.dataflow == "resident"
+    assert plan.stages == 1 and plan.partitions == 1
+    assert abs(plan.reload - 1.0) < 1e-6
+
+
+def test_partitioning_when_too_big():
+    """A GEMM far beyond the budget must split into multiple stages (Fig. 3)."""
+    g = Gemm("big", 16384, 16384, 16384)
+    cfg = planner_config(MemoryStrategy.BASELINE, ZCU104)
+    plan = plan_gemm(g, cfg)
+    assert plan.stages > 1
+    assert plan.reload > 1.0
+
+
+def test_overlap_halves_usable_tiles():
+    """Double buffering (dual-clock analogue) needs 2x stream buffers, so the
+    same budget admits smaller tiles."""
+    g = Gemm("g", 4096, 4096, 4096)
+    no = plan_gemm(g, PlannerConfig(vmem_budget=8 * 2**20, overlap=False))
+    yes = plan_gemm(g, PlannerConfig(vmem_budget=8 * 2**20, overlap=True))
+    assert yes.vmem_used <= 8 * 2**20
+    assert yes.tiling.bm * yes.tiling.bk <= no.tiling.bm * no.tiling.bk * 2
+
+
+@given(st.integers(1, 4096), st.integers(1, 4096), st.integers(1, 4096))
+def test_mxu_alignment(m, k, n):
+    plan = plan_gemm(Gemm("g", m, k, n),
+                     PlannerConfig(vmem_budget=64 * 2**20, overlap=True))
+    t = plan.tiling
+    assert t.bm % MXU_DIM == 0 and t.bk % MXU_DIM == 0 and t.bn % MXU_DIM == 0

@@ -1,0 +1,170 @@
+"""Data pipeline, checkpoint manager, perf model, fault-tolerance runtime."""
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import MemoryStrategy
+from repro.core import perfmodel as pm
+from repro.core.dataflow import Gemm
+from repro.data import cifar
+from repro.data.synthetic import TokenStream, synthetic_cifar
+from repro.models.resnet import conv_layer_shapes
+from repro.configs.resnet20_cifar import CONFIG as RCFG
+from repro.runtime.fault import RestartPolicy, StragglerDetector, run_with_recovery
+
+
+# ------------------------------------------------------------------ data
+def test_token_stream_deterministic_restart():
+    s1 = TokenStream(1000, 4, 32, seed=3)
+    s2 = TokenStream(1000, 4, 32, seed=3)
+    b1 = s1.batch_at(17)
+    b2 = s2.batch_at(17)   # fresh object, same step -> identical batch
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(s1.batch_at(18)["tokens"], b1["tokens"])
+
+
+def test_token_stream_has_structure():
+    """labels are next-tokens of a sparse Markov chain, not iid noise."""
+    s = TokenStream(100, 2, 64, seed=0, branching=4)
+    b = s.batch_at(0)
+    assert b["tokens"].shape == (2, 64)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+    follows = set()
+    for t in range(63):
+        follows.add((b["tokens"][0, t], b["tokens"][0, t + 1]))
+    # each token has only 4 successors => pairs repeat far below 63 unique
+    assert len(follows) <= 63
+
+
+def test_cifar_binary_roundtrip(tmp_path):
+    xs, ys = synthetic_cifar(64, seed=0)
+    xs = np.clip(xs * 0.2 + 0.5, 0, 1)
+    path = tmp_path / "test_batch.bin"
+    cifar.write_binary(path, xs, ys)
+    xs2, ys2 = cifar.read_binary(path)
+    np.testing.assert_array_equal(ys, ys2)
+    assert np.abs(xs - xs2).max() < 1 / 255.0 + 1e-6
+    batches = list(cifar.batches(xs2, ys2, 16, train=False))
+    assert len(batches) == 4 and batches[0][0].shape == (16, 32, 32, 3)
+
+
+# ------------------------------------------------------------------ ckpt
+def _tree(step):
+    return {"params": {"w": jnp.full((4, 4), float(step)),
+                       "b": jnp.arange(3.0)},
+            "opt": {"m": (jnp.zeros(2), jnp.ones(2)), "count": jnp.int32(step)},
+            "step": jnp.int32(step)}
+
+
+def test_checkpoint_roundtrip_and_retention(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2, async_save=False)
+    for s in (1, 2, 3):
+        mgr.save(s, _tree(s))
+    assert mgr.all_steps() == [2, 3]          # keep=2 retention
+    tree, meta = mgr.restore()
+    assert meta["step"] == 3
+    assert float(tree["params"]["w"][0, 0]) == 3.0
+    assert isinstance(tree["opt"]["m"], tuple)  # tuple structure preserved
+    tree2, meta2 = mgr.restore(step=2)
+    assert meta2["step"] == 2
+
+
+def test_checkpoint_async_and_atomic(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3, async_save=True)
+    mgr.save(10, _tree(10))
+    mgr.wait()
+    assert mgr.latest_step() == 10
+    # no stray tmp dirs after commit
+    assert not list(pathlib.Path(tmp_path).glob(".tmp*"))
+
+
+def test_checkpoint_kill_resume_bitwise(tmp_path):
+    """Simulated failure: the run crashes mid-flight, restarts from the last
+    checkpoint, and the recovered state stream is bitwise identical."""
+    mgr = CheckpointManager(tmp_path, async_save=False)
+    state = {"x": jnp.zeros(()), "step": jnp.int32(0)}
+
+    def reference_run(n):
+        s = {"x": jnp.zeros(()), "step": jnp.int32(0)}
+        for i in range(n):
+            s = {"x": s["x"] * 1.5 + i, "step": s["step"] + 1}
+        return s
+
+    holder = {"state": state, "crashed": False}
+
+    def step_fn(i):
+        if i == 7 and not holder["crashed"]:
+            holder["crashed"] = True
+            raise RuntimeError("simulated chip failure")
+        s = holder["state"]
+        holder["state"] = {"x": s["x"] * 1.5 + i, "step": s["step"] + 1}
+
+    def save_fn(i):
+        mgr.save(i, holder["state"])
+
+    def restore_fn():
+        tree, meta = mgr.restore()
+        if tree is None:
+            holder["state"] = {"x": jnp.zeros(()), "step": jnp.int32(0)}
+            return 0
+        holder["state"] = jax.tree.map(jnp.asarray, tree)
+        return meta["step"]
+
+    stats = run_with_recovery(num_steps=12, step_fn=step_fn, save_fn=save_fn,
+                              restore_fn=restore_fn, checkpoint_every=5,
+                              sleep=lambda s: None)
+    assert stats["failures"] == 1
+    ref = reference_run(12)
+    assert float(holder["state"]["x"]) == float(ref["x"])
+    assert int(holder["state"]["step"]) == 12
+
+
+# ------------------------------------------------------------------ fault
+def test_straggler_detector():
+    det = StragglerDetector(window=30, z_threshold=4.0, min_steps=10)
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        det.record(0.100 + rng.normal(0, 0.002))
+    assert det.record(0.500) is True          # 5x median => flagged
+    assert det.record(0.101) is False
+
+
+def test_restart_policy_budget():
+    pol = RestartPolicy(max_restarts=2, backoff_s=0.1)
+    assert pol.on_failure(ValueError()) == pytest.approx(0.1)
+    assert pol.on_failure(ValueError()) == pytest.approx(0.2)
+    with pytest.raises(RuntimeError):
+        pol.on_failure(ValueError())
+
+
+# ------------------------------------------------------------------ perf
+@pytest.fixture(scope="module")
+def resnet_gemms():
+    return [Gemm(n, m, k, nn, in_elems=m * k // 9 if k % 9 == 0 else m * k,
+                 out_elems=m * nn)
+            for (n, m, k, nn) in conv_layer_shapes(RCFG, batch=1)]
+
+
+def test_ladder_monotone(resnet_gemms):
+    """Each paper optimization rung must not be slower than the previous."""
+    fps = [r.fps for r in pm.ladder(resnet_gemms)]
+    assert fps[0] <= fps[1] <= fps[2] <= fps[3] + 1e-9
+
+
+def test_calibrated_ladder_matches_paper(resnet_gemms):
+    fit = pm.calibrate(resnet_gemms)
+    for r in pm.ladder(resnet_gemms, fit=fit):
+        tgt = pm.PAPER_FPS[r.strategy]
+        assert abs(r.fps - tgt) / tgt < 0.15, (r.strategy, r.fps, tgt)
+
+
+def test_final_rung_traffic_amortized(resnet_gemms):
+    """§4.4 mechanism: whole-model residency eliminates steady-state traffic."""
+    evals = {r.strategy: r for r in pm.ladder(resnet_gemms)}
+    assert evals["compiler_large_local"].traffic < \
+        0.1 * evals["baseline"].traffic
