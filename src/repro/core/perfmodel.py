@@ -27,6 +27,7 @@ the paper's mechanism. The v5e projection uses independent datasheet constants.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
 from typing import List, Sequence
 
@@ -80,9 +81,15 @@ class StrategyEval:
     bottleneck: str
 
 
+@functools.lru_cache(maxsize=None)
 def _layer_traffic(g: Gemm, strategy: MemoryStrategy, cfg: PlannerConfig,
                    amortize_weights: bool) -> tuple:
-    """(bytes moved for this layer per image, dram blocks)."""
+    """(bytes moved for this layer per image, dram blocks).
+
+    Memoized: traffic depends only on (gemm, strategy, planner config) — all
+    frozen/hashable — and NOT on the FitConstants being searched, so
+    ``calibrate()``'s grid search prices thousands of candidate fits without
+    re-running the partition planner (~20x faster calibration)."""
     plan = plan_gemm(g, cfg)
     p = plan.partitions
     w = 0 if amortize_weights else g.w_size

@@ -54,7 +54,8 @@ def quantize_per_channel(w, axis: int = -1) -> QuantizedTensor:
 def quantize_params(params, *, predicate: Optional[Callable[[str, Any], bool]] = None):
     """Quantize every >=2D floating leaf to int8 (per last-dim channel).
     Returns a pytree where selected leaves become QuantizedTensor."""
-    flat, treedef = jax.tree.flatten_with_path(params)
+    # jax.tree.flatten_with_path only exists on newer jax; use tree_util
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
     out = []
     for path, leaf in flat:
         name = "/".join(str(p) for p in path)

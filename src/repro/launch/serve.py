@@ -1,17 +1,26 @@
-"""Serving driver: continuous-batched decode against a KV/state cache, with
-optional int8 weight quantization (the paper's C5 on the TPU path).
+"""Serving driver — thin CLI shim over ``repro.serve.ServeEngine``.
 
-Request flow: prefill each new request (computing its cache entries via the
-forward pass), then step the whole batch one token at a time; finished
-requests free their slot for waiting ones (continuous batching).
+The engine owns the real serving path: single-dispatch batched prefill per
+request (never stepping other slots), per-slot cache positions, continuous
+batching with a priority/FIFO scheduler, greedy or temperature sampling, and
+TTFT / tokens-per-s / p50-p95 metrics (see ``repro/serve/__init__.py`` for
+the request lifecycle).
 
   PYTHONPATH=src python -m repro.launch.serve --arch hymba-1.5b --reduced \
       --requests 8 --gen-len 16
+
+``LegacyServer`` preserves the seed's token-by-token prefill path, which
+stepped the ENTIRE batch once per prompt token — O(prompt_len) dispatches
+and, worse, it advanced every other active slot's cache while doing so
+(cross-slot corruption). It exists only as the regression baseline for
+``tests/test_serve.py`` and ``benchmarks/serve_bench.py``. Do not serve with
+it.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import logging
 import time
 from typing import List, Optional
@@ -21,9 +30,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.launch import steps as steps_mod
-from repro.models.registry import Model, get_model, reduced_config
-from repro.sharding import specs
+from repro.models.registry import get_model, reduced_config
+from repro.serve.engine import ServeEngine
 
 log = logging.getLogger("repro.serve")
 
@@ -39,10 +47,69 @@ class ServeConfig:
     gen_len: int = 16
     seed: int = 0
     quantize_int8: bool = False
+    temperature: float = 0.0
+
+
+def build_engine(sc: ServeConfig) -> ServeEngine:
+    return ServeEngine.build(
+        sc.arch, reduced=sc.reduced, batch_slots=sc.batch_slots,
+        s_max=sc.s_max, seed=sc.seed, quantize_int8=sc.quantize_int8,
+        temperature=sc.temperature)
 
 
 class Server:
-    """Slot-based continuous batching decode server."""
+    """Backwards-compatible slot API over the engine.
+
+    ``add_request`` prefills into a free slot with ONE jitted batch-1 call —
+    it can no longer advance other active slots' caches (the seed bug).
+    """
+
+    def __init__(self, sc: ServeConfig):
+        self.sc = sc
+        self.engine = build_engine(sc)
+        self.cfg = self.engine.cfg
+        self.model = self.engine.model
+        self.params = self.engine.params
+        # last request to occupy each slot (outputs survive slot recycling
+        # until the slot is reused, matching the legacy outputs[] contract)
+        self._slot_hist: List[Optional[object]] = [None] * sc.batch_slots
+
+    @property
+    def cache(self):
+        return self.engine.cache
+
+    @property
+    def slot_free(self) -> List[bool]:
+        return [r is None for r in self.engine.slot_req]
+
+    @property
+    def outputs(self) -> List[List[int]]:
+        return [list(r.tokens) if r is not None else []
+                for r in self._slot_hist]
+
+    def add_request(self, prompt: np.ndarray, gen_len: int) -> Optional[int]:
+        """Prefill a prompt into a free slot; returns the slot or None."""
+        free = self.engine.free_slots
+        if not free:
+            return None
+        req = self.engine.submit(prompt, gen_len)
+        self.engine.admit()
+        self._slot_hist[req.slot] = req
+        return req.slot
+
+    def step_all(self) -> int:
+        """One decode tick for every active slot; returns #active."""
+        return self.engine.step()
+
+
+class LegacyServer:
+    """SEED-PATH REPLICA (quarantined): token-by-token full-batch prefill.
+
+    Prefill reuses the lockstep decode step once per prompt token at the FULL
+    batch width, so every other active slot's cache advances too — the
+    cross-slot corruption the engine's isolated prefill fixes. Kept verbatim
+    so tests can demonstrate the bug and benchmarks can quantify the win.
+    """
 
     def __init__(self, sc: ServeConfig):
         cfg = configs.get_config(sc.arch)
@@ -53,22 +120,19 @@ class Server:
         self.params = self.model.init(jax.random.PRNGKey(sc.seed))
         if sc.quantize_int8:
             from repro.core.quantize import dequantize_params, quantize_params
-            # PTQ then dequant-on-load (structural int8 path; the pallas
-            # quant_matmul kernel consumes q directly on TPU)
             self.params = dequantize_params(quantize_params(self.params),
                                             jnp.float32)
         self.cache = self.model.init_cache(sc.batch_slots, sc.s_max, jnp.float32)
-        self.decode = jax.jit(
-            steps_mod.make_decode_step(self.model, compute_dtype=jnp.float32),
-            donate_argnums=(1,))
+        # share the engine's jit cache so legacy-vs-engine benchmarks compare
+        # steady-state serving, not compile amortization
+        from repro.serve.engine import _jitted_decode
+        self.decode = _jitted_decode(self.model, jnp.float32)
         self.slot_free = [True] * sc.batch_slots
         self.slot_remaining = [0] * sc.batch_slots
         self.cur_token = np.zeros((sc.batch_slots, 1), np.int32)
         self.outputs: List[List[int]] = [[] for _ in range(sc.batch_slots)]
 
     def add_request(self, prompt: np.ndarray, gen_len: int) -> Optional[int]:
-        """Prefill a prompt into a free slot (teacher-forced decode prefill —
-        batch-1 models reuse the decode path per prompt token)."""
         if True not in self.slot_free:
             return None
         slot = self.slot_free.index(True)
@@ -90,7 +154,6 @@ class Server:
         return logits, cache
 
     def step_all(self) -> int:
-        """One decode tick for every active slot; returns #active."""
         logits, self.cache = self._step()
         nxt = np.asarray(jnp.argmax(logits[:, 0, : self.cfg.vocab_size], -1))
         active = 0
@@ -107,28 +170,36 @@ class Server:
         return active
 
 
-def run(sc: ServeConfig) -> dict:
-    server = Server(sc)
+def make_prompts(sc: ServeConfig, vocab: int) -> List[np.ndarray]:
     rng = np.random.default_rng(sc.seed)
-    pending = [rng.integers(0, server.cfg.vocab_size, sc.prompt_len)
-               for _ in range(sc.requests)]
-    done = 0
+    return [rng.integers(0, vocab, sc.prompt_len) for _ in range(sc.requests)]
+
+
+def run(sc: ServeConfig) -> dict:
+    """Serve sc.requests synthetic prompts through the engine; returns stats
+    (legacy keys ``requests``/``wall_s``/``tokens_per_s`` plus the full
+    engine metrics summary under ``metrics``)."""
+    engine = build_engine(sc)
+    for prompt in make_prompts(sc, engine.cfg.vocab_size):
+        engine.submit(prompt, sc.gen_len)
+    summary = engine.run()
+    return {"requests": summary["requests"], "wall_s": summary["wall_s"],
+            "tokens_per_s": summary["throughput_tokens_per_s"],
+            "metrics": summary}
+
+
+def run_legacy(sc: ServeConfig) -> dict:
+    """Seed-path driver loop over LegacyServer (benchmark baseline only)."""
+    server = LegacyServer(sc)
+    pending = make_prompts(sc, server.cfg.vocab_size)
     t0 = time.time()
-    tokens_out = 0
-    while done < sc.requests or not all(server.slot_free):
+    while pending or not all(server.slot_free):
         while pending and True in server.slot_free:
             server.add_request(pending.pop(), sc.gen_len)
         server.step_all()
-        tokens_out += sum(0 if f else 1 for f in server.slot_free) + \
-            sum(1 for s in range(sc.batch_slots)
-                if server.slot_free[s] and server.outputs[s])
-        done = sc.requests - len(pending) - sum(
-            0 if f else 1 for f in server.slot_free)
     dt = time.time() - t0
-    total_tokens = sum(len(o) for o in server.outputs if o) + \
-        sc.requests * sc.gen_len  # approximation across recycled slots
-    return {"wall_s": dt, "requests": sc.requests,
-            "tokens_per_s": sc.requests * sc.gen_len / dt}
+    total = sc.requests * sc.gen_len
+    return {"requests": sc.requests, "wall_s": dt, "tokens_per_s": total / dt}
 
 
 def main():
@@ -137,15 +208,24 @@ def main():
     for f in dataclasses.fields(ServeConfig):
         name = "--" + f.name.replace("_", "-")
         if isinstance(f.default, bool):
-            ap.add_argument(name, action="store_true", default=f.default)
+            # BooleanOptionalAction also emits --no-<name>: a True default
+            # (e.g. --reduced) was previously impossible to turn off
+            ap.add_argument(name, action=argparse.BooleanOptionalAction,
+                            default=f.default)
         else:
             ap.add_argument(name, type=type(f.default), default=f.default)
+    ap.add_argument("--json", action="store_true", help="print full metrics")
     args = ap.parse_args()
     sc = ServeConfig(**{f.name: getattr(args, f.name)
                         for f in dataclasses.fields(ServeConfig)})
     stats = run(sc)
+    if args.json:
+        print(json.dumps(stats["metrics"], indent=2, default=float))
+    m = stats["metrics"]
     print(f"served {stats['requests']} requests, "
-          f"{stats['tokens_per_s']:.1f} tok/s")
+          f"{stats['tokens_per_s']:.1f} tok/s | "
+          f"ttft p50 {m['ttft_s']['p50'] * 1e3:.1f} ms | "
+          f"latency p95 {m['latency_s']['p95'] * 1e3:.1f} ms")
 
 
 if __name__ == "__main__":

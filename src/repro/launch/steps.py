@@ -196,13 +196,65 @@ def make_train_step(model: Model, optimizer: AdamW, *,
 
 # ------------------------------------------------------------------ serve
 def make_prefill(model: Model, *, compute_dtype=jnp.bfloat16,
-                 attn_impl: str = "chunked", batch_chunks: int = 1):
-    """Full-sequence forward; returns LAST-position logits only (the decode
-    bootstrap a serving system actually needs — avoids a (B,S,V) output).
+                 attn_impl: str = "chunked", batch_chunks: int = 1,
+                 return_cache: bool = False, s_max: int = 0,
+                 cache_dtype=jnp.float32):
+    """Prefill step builder.
 
-    batch_chunks > 1 processes the request batch in sequential slices
-    (lax.scan) — bounds prefill activation memory exactly like gradient-
-    accumulation microbatching does for training."""
+    Default (``return_cache=False``): full-sequence forward returning
+    LAST-position logits only (the decode bootstrap a serving system actually
+    needs — avoids a (B,S,V) output). batch_chunks > 1 processes the request
+    batch in sequential slices (lax.scan) — bounds prefill activation memory
+    exactly like gradient-accumulation microbatching does for training.
+
+    ``return_cache=True`` (the serving engine's path): returns
+    ``(last_logits, cache)`` where the cache holds every prompt position's
+    K/V / recurrent state at pos == prompt_len, ready for decode. The prompt
+    is teacher-forced through ``decode_step`` under a single ``lax.scan``
+    inside ONE jitted call — one dispatch per request instead of one per
+    prompt token, and crucially at the REQUEST's batch size (1 in the engine)
+    so it never touches other slots' cache entries. ``s_max`` sizes the
+    returned cache's sequence capacity (must match the serving cache);
+    for encoder-decoder models the cross-attention K/V are precomputed from
+    the encoder pass first, exactly once."""
+    if return_cache:
+        if s_max <= 0:
+            raise ValueError("return_cache=True requires s_max > 0")
+        from repro.configs.base import Family
+
+        def prefill_cache(params, batch):
+            tokens = batch["tokens"]
+            B, S = tokens.shape
+            cache = model.init_cache(B, s_max, cache_dtype)
+            extras = _batch_extras(model, batch)
+            if model.cfg.family == Family.ENCDEC:
+                from repro.models import encdec
+                frames = batch.get("frames")
+                if frames is None:
+                    frames = jnp.zeros((B, encdec.ENC_LEN, model.cfg.d_model),
+                                       compute_dtype)
+                enc_out = encdec.encode(params, model.cfg,
+                                        frames.astype(compute_dtype),
+                                        compute_dtype=compute_dtype,
+                                        attn_impl="einsum", remat=False)
+                xk, xv = encdec.precompute_cross_kv(params, model.cfg, enc_out)
+                cache = dict(cache, xk=xk.astype(cache["xk"].dtype),
+                             xv=xv.astype(cache["xv"].dtype))
+                extras = {}
+
+            def body(carry, tok):
+                cache, _ = carry
+                logits, cache = model.decode_step(params, tok, cache,
+                                                  compute_dtype=compute_dtype,
+                                                  **extras)
+                return (cache, logits), None
+
+            logits0 = jnp.zeros((B, 1, model.cfg.padded_vocab), jnp.float32)
+            toks = jnp.moveaxis(tokens, 1, 0)[:, :, None]        # (S, B, 1)
+            (cache, logits), _ = jax.lax.scan(body, (cache, logits0), toks)
+            return logits, cache
+        return prefill_cache
+
     def one(params, batch):
         feats, _ = model.forward(params, batch["tokens"],
                                  compute_dtype=compute_dtype,

@@ -227,9 +227,11 @@ def decode_step(params, cfg: ArchConfig, token, cache, *, compute_dtype=jnp.bflo
                 **_):
     B = token.shape[0]
     pos = cache["pos"]
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    positions = L.decode_positions(pos, B)
+    # learned decoder position embedding, per-row: (B,1) -> (B,1,D)
+    x_pos = params["pos_dec"][jnp.minimum(positions, 8191)].astype(compute_dtype)
     x = L.embed_lookup(params["embed"], token, compute_dtype)
-    x = x + params["pos_dec"][jnp.minimum(pos, 8191)].astype(compute_dtype)[None, None]
+    x = x + x_pos
     Se = cache["xk"].shape[2]
     enc_pos = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32), (B, Se))
 

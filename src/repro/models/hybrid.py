@@ -192,21 +192,33 @@ def cache_logical(cfg: ArchConfig):
 
 
 def _window_attn_decode(lp, h, cfg, ck, cv, slot_pos, pos, positions):
-    """Decode attention over a ring-buffer window cache."""
+    """Decode attention over a ring-buffer window cache. ``pos`` is a scalar
+    (lockstep batch) or a (B,) per-slot position vector (serving engine)."""
     dims = _attn_dims(cfg)
     q, k, v = L._qkv(lp["attn"], h, dims, positions)
     W = ck.shape[1]
-    slot = pos % W
-    ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), slot, axis=1)
-    cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), slot, axis=1)
-    slot_pos = jax.lax.dynamic_update_slice_in_dim(
-        slot_pos, jnp.broadcast_to(pos, slot_pos[:, :1].shape), slot, axis=1)
     B = q.shape[0]
+    if jnp.ndim(pos) == 1:
+        # per-slot ring-buffer writes: row b lands in ring slot pos[b] % W
+        slot = pos % W
+        b_idx = jnp.arange(B)
+        ck = ck.at[b_idx, slot].set(k[:, 0].astype(ck.dtype))
+        cv = cv.at[b_idx, slot].set(v[:, 0].astype(cv.dtype))
+        slot_pos = slot_pos.at[b_idx, slot].set(pos)
+        mask_pos = pos[:, None]                              # (B,1) -> (B,W)
+    else:
+        slot = pos % W
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), slot, axis=1)
+        slot_pos = jax.lax.dynamic_update_slice_in_dim(
+            slot_pos, jnp.broadcast_to(pos, slot_pos[:, :1].shape), slot, axis=1)
+        mask_pos = pos
     H, KV, hd = dims.num_heads, dims.num_kv_heads, dims.head_dim
     G = H // KV
     qg = q.reshape(B, 1, KV, G, hd)
     scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, ck.astype(q.dtype)) / math.sqrt(hd)
-    valid = (slot_pos >= 0) & (slot_pos <= pos) & (slot_pos > pos - cfg.window)
+    valid = (slot_pos >= 0) & (slot_pos <= mask_pos) & \
+        (slot_pos > mask_pos - cfg.window)
     scores = jnp.where(valid[:, None, None, None, :], scores.astype(jnp.float32), -1e30)
     probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     out = jnp.einsum("bkgqs,bskh->bqkgh", probs, cv.astype(q.dtype)).reshape(B, 1, H * hd)
@@ -231,7 +243,7 @@ def decode_step(params, cfg: ArchConfig, token, cache, *, compute_dtype=jnp.bflo
                 **_):
     B = token.shape[0]
     pos = cache["pos"]
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    positions = L.decode_positions(pos, B)
     x = L.embed_lookup(params["embed"], token, compute_dtype)
 
     def body(x, xs):

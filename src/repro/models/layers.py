@@ -359,9 +359,20 @@ def attention(params, x, dims: AttnDims, positions, impl: str = "einsum",
     return out
 
 
+def decode_positions(pos, batch: int):
+    """(B,1) query positions from a cache ``pos`` that is either a scalar
+    (lockstep batch) or a (B,) per-slot vector — THE cross-family convention
+    for serving decode (see models/registry.py); every family's decode_step
+    goes through here so the two layouts cannot desynchronize."""
+    if jnp.ndim(pos) == 1:
+        return pos[:, None]
+    return jnp.full((batch, 1), pos, jnp.int32)
+
+
 def _decode_sdpa_local(q, ck, cv, cache_pos, k_positions, window, hd):
     """Partial-softmax decode attention over a LOCAL cache slice.
-    q: (B,1,KV,G,hd); ck/cv: (B,S_loc,KV,hd); k_positions: (S_loc,) global.
+    q: (B,1,KV,G,hd); ck/cv: (B,S_loc,KV,hd); k_positions: (S_loc,) global;
+    cache_pos: scalar (lockstep) or (B,1) per-slot positions.
     Returns (m (B,KV,G,1), l, acc (B,KV,G,1,hd)) for cross-shard combining."""
     scores = jnp.einsum("bqkgh,bskh->bkgqs", q, ck.astype(q.dtype)
                         ).astype(jnp.float32) / math.sqrt(hd)
@@ -382,6 +393,13 @@ def attention_decode(params, x, dims: AttnDims, cache_k, cache_v, cache_pos,
     """Single-token decode: x (B,1,D); cache_{k,v}: (B,S_max,KV,hd).
     Returns (out, new_k, new_v). Cache positions < cache_pos are valid.
 
+    ``cache_pos`` is either a scalar (every batch row at the same position —
+    the lockstep train/dryrun path) or a (B,) vector of PER-SLOT positions
+    (the serving engine's continuous-batching path, where each slot is at a
+    different point in its own sequence). The vector path writes the new K/V
+    row with a per-batch scatter and masks per-row; out-of-range positions
+    (already-finished slots) are dropped by the scatter.
+
     When the cache sequence dim is sharded (adaptive cache_logical), attention
     runs as flash-decode context parallelism via shard_map: each shard scans
     ONLY its local cache rows and partial softmax stats (m, l, acc) combine
@@ -392,6 +410,7 @@ def attention_decode(params, x, dims: AttnDims, cache_k, cache_v, cache_pos,
     H = dims.num_heads
     G = H // KV
     qg = q.reshape(B, 1, KV, G, hd)
+    vector_pos = jnp.ndim(cache_pos) == 1
 
     from repro.sharding import specs as _sp
     mesh = _sp.active_mesh()
@@ -399,6 +418,7 @@ def attention_decode(params, x, dims: AttnDims, cache_k, cache_v, cache_pos,
     kv_sharded = KV % max(_sp.axis_size("kv_heads"), 1) == 0 and \
         _sp.axis_size("kv_heads") > 1
     use_cp = (mesh is not None and seq_ax is not None and not kv_sharded
+              and not vector_pos
               and isinstance(seq_ax, str) and S_max % mesh.shape[seq_ax] == 0)
 
     if use_cp:
@@ -445,12 +465,23 @@ def attention_decode(params, x, dims: AttnDims, cache_k, cache_v, cache_pos,
             check_rep=False)(qg, k, v, cache_k, cache_v, cache_pos)
         out = out.transpose(0, 3, 1, 2, 4)       # (B,1,KV,G,hd)
     else:
-        cache_k = jax.lax.dynamic_update_slice_in_dim(
-            cache_k, k.astype(cache_k.dtype), cache_pos, axis=1)
-        cache_v = jax.lax.dynamic_update_slice_in_dim(
-            cache_v, v.astype(cache_v.dtype), cache_pos, axis=1)
+        if vector_pos:
+            # per-slot positions: scatter row b's new K/V at cache_pos[b];
+            # OOB rows (finished slots stepped past S_max) are dropped
+            b_idx = jnp.arange(B)
+            cache_k = cache_k.at[b_idx, cache_pos].set(
+                k[:, 0].astype(cache_k.dtype), mode="drop")
+            cache_v = cache_v.at[b_idx, cache_pos].set(
+                v[:, 0].astype(cache_v.dtype), mode="drop")
+            mask_pos = cache_pos[:, None]                    # (B,1) -> (B,S)
+        else:
+            cache_k = jax.lax.dynamic_update_slice_in_dim(
+                cache_k, k.astype(cache_k.dtype), cache_pos, axis=1)
+            cache_v = jax.lax.dynamic_update_slice_in_dim(
+                cache_v, v.astype(cache_v.dtype), cache_pos, axis=1)
+            mask_pos = cache_pos
         k_positions = jnp.arange(S_max)
-        m, l, acc = _decode_sdpa_local(qg, cache_k, cache_v, cache_pos,
+        m, l, acc = _decode_sdpa_local(qg, cache_k, cache_v, mask_pos,
                                        k_positions, dims.window, hd)
         out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
         out = out.transpose(0, 3, 1, 2, 4)

@@ -78,6 +78,60 @@ def get_model(cfg: ArchConfig) -> Model:
     return Model(cfg=cfg, mod=_FAMILY_MODULES[cfg.family])
 
 
+# ------------------------------------------------------------------ serving
+# Every family's cache obeys one layout convention: leaves are (L, B, ...)
+# with the slot/batch axis at position 1, plus a "pos" leaf that is a scalar
+# (lockstep batch) or a (B,) per-slot position vector. The serving engine
+# relies on that convention to splice per-request prefill caches into the
+# resident batched cache without touching other slots.
+
+def vectorize_cache_pos(cache, batch: int):
+    """Scalar-pos cache (init_cache output) -> per-slot (B,) position cache
+    for the continuous-batching decode path."""
+    pos = cache["pos"]
+    if jnp.ndim(pos) == 0:
+        cache = dict(cache, pos=jnp.full((batch,), pos, jnp.int32))
+    return cache
+
+
+def insert_cache_slot(cache, request_cache, slot):
+    """Write a batch-1 request cache (a fresh prefill) into slot ``slot`` of a
+    batched per-slot-pos serving cache — other slots' entries are untouched
+    bit-for-bit. Thin wrapper over insert_cache_rows so there is exactly one
+    implementation of the batch-axis splice. ``slot`` may be a traced scalar,
+    so one jit covers every slot."""
+    return insert_cache_rows(cache, request_cache,
+                             jnp.reshape(jnp.asarray(slot, jnp.int32), (1,)))
+
+
+def insert_cache_rows(cache, request_cache, slots):
+    """Write a batch-K request cache (one joint prefill of K same-length
+    prompts) into rows ``slots`` (a (K,) index vector) of a batched serving
+    cache. Same isolation contract as insert_cache_slot: a scatter on the
+    batch axis only."""
+    slots = jnp.asarray(slots, jnp.int32)
+    out = {}
+    for key, leaf in cache.items():
+        req = request_cache[key]
+        if key == "pos":
+            # prefill pos is a scalar (all K rows at prompt_len) or (K,)
+            out[key] = leaf.at[slots].set(jnp.asarray(req, leaf.dtype))
+        else:
+            out[key] = leaf.at[:, slots].set(req.astype(leaf.dtype))
+    return out
+
+
+def extract_cache_slot(cache, slot: int):
+    """Batch-1 view of one slot's cache entries (testing/debug helper)."""
+    out = {}
+    for key, leaf in cache.items():
+        if key == "pos":
+            out[key] = leaf if jnp.ndim(leaf) == 0 else leaf[slot]
+        else:
+            out[key] = leaf[:, slot:slot + 1]
+    return out
+
+
 def reduced_config(cfg: ArchConfig, **overrides) -> ArchConfig:
     """Smoke-test-sized config of the same family (small dims, same structure)."""
     defaults = dict(

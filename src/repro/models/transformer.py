@@ -282,10 +282,13 @@ def decode_step(params, cfg: ArchConfig, token, cache, *, image_embeds=None,
     Layers run in a fori_loop carrying the FULL (L,B,S,KV,hd) cache with
     in-place dynamic updates — a lax.scan over per-layer cache slices stacks
     fresh output buffers (a full extra cache copy in HBM) because XLA cannot
-    alias scan ys to donated inputs."""
+    alias scan ys to donated inputs.
+
+    cache["pos"] may be a scalar (lockstep batch) or a (B,) per-slot vector
+    (serving engine with continuous batching)."""
     B = token.shape[0]
     pos = cache["pos"]
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    positions = L.decode_positions(pos, B)
     x = L.embed_lookup(params["embed"], token, compute_dtype)
 
     if cfg.cross_attn_every:

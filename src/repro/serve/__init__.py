@@ -1,0 +1,43 @@
+"""Serving subsystem: batched-prefill engine, request scheduler, metrics.
+
+The paper's headline FPS ladder comes from restructuring how work is fed to
+the accelerator — overlapping movement with compute and keeping state
+resident — without changing the math. This package reproduces that lesson at
+the request level: prefill work is fused into one dispatch, decode state
+stays resident in per-slot caches, and the scheduler keeps every slot busy.
+
+Request lifecycle
+-----------------
+
+1. **submit** — ``ServeEngine.submit(prompt, gen_len, priority)`` wraps the
+   prompt in a :class:`~repro.serve.scheduler.Request` and enqueues it on the
+   :class:`~repro.serve.scheduler.Scheduler` (priority heap, FIFO within a
+   priority level). Metrics record the arrival time.
+2. **admit / prefill** — the moment batch slots are free, the engine pops
+   waiting requests and prefills them with ONE jitted call
+   (``steps.make_prefill(return_cache=True)``): prompts are teacher-forced
+   through ``decode_step`` under a single ``lax.scan`` at the admitted
+   group's batch size (same-length requests batch together; never the full
+   slot width), producing each request's full cache state plus next-token
+   logits. The group's cache rows are spliced into exactly the admitted
+   slots of the resident batched cache (a batch-axis scatter) — other slots'
+   entries are untouched bit-for-bit (the prefill-isolation guarantee). The
+   first generated token is sampled from the prefill logits; its timestamp
+   is the request's time-to-first-token.
+3. **decode** — ``step()`` runs one batched decode tick for all slots against
+   the per-slot-position cache (``cache["pos"]`` is a (B,) vector, so slots
+   at different sequence depths coexist), samples one token per active slot
+   (greedy or temperature), and retires requests that reach ``gen_len``.
+4. **complete** — a finished request frees its slot; the scheduler admits the
+   next waiting request on the same tick (continuous batching). Metrics
+   record completion and compute per-request TTFT / tokens-per-second and
+   engine-level p50/p95 latency and throughput.
+
+``launch/serve.py`` remains a thin CLI shim over this package.
+"""
+from repro.serve.engine import ServeEngine
+from repro.serve.metrics import MetricsRecorder
+from repro.serve.scheduler import Request, RequestState, Scheduler
+
+__all__ = ["ServeEngine", "MetricsRecorder", "Request", "RequestState",
+           "Scheduler"]

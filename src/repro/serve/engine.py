@@ -1,0 +1,278 @@
+"""Batched-prefill continuous-batching serve engine.
+
+Core invariants (see the package docstring for the request lifecycle):
+
+* **One dispatch per prefill wave.** New requests are prefilled by a single
+  jitted ``make_prefill(return_cache=True)`` call — prompts are
+  teacher-forced under one ``lax.scan``, not one device dispatch per token,
+  and never at the full batch width (the legacy path's O(prompt_len)
+  full-batch stepping). Same-length requests admitted on the same tick are
+  prefilled jointly at batch K (the batched-prefill fan-in); a lone request
+  runs at batch 1.
+* **Slot isolation.** The batch-K prefill cache is spliced into the resident
+  batched cache with ``registry.insert_cache_rows`` — a scatter on the batch
+  axis covering exactly the admitted slots — so concurrent prefills cannot
+  perturb other slots' cache entries or positions.
+* **Per-slot positions.** The batched cache's ``pos`` is a (B,) vector, so
+  slots at different sequence depths decode together in one tick.
+* **Continuous batching.** The scheduler admits waiting requests the moment a
+  slot frees, on the same tick.
+
+Prefill compiles once per distinct prompt length (cached); pad or bucket
+prompts client-side to bound compilation count. Chunked prefill and paged KV
+are ROADMAP follow-ons.
+"""
+from __future__ import annotations
+
+import functools
+import logging
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.launch import steps as steps_mod
+from repro.models.registry import (Model, get_model, insert_cache_rows,
+                                   reduced_config, vectorize_cache_pos)
+from repro.serve.metrics import MetricsRecorder
+from repro.serve.scheduler import Request, RequestState, Scheduler
+
+log = logging.getLogger("repro.serve.engine")
+
+
+# Jitted step functions are cached at module level keyed on the (frozen,
+# hashable) Model so several engine instances over the same architecture —
+# e.g. benchmark repetitions — share one compiled executable instead of
+# re-tracing per instance (compile time would otherwise dominate short runs).
+@functools.lru_cache(maxsize=64)
+def _jitted_decode(model: Model, compute_dtype):
+    return jax.jit(steps_mod.make_decode_step(model, compute_dtype=compute_dtype),
+                   donate_argnums=(1,))
+
+
+@functools.lru_cache(maxsize=64)
+def _jitted_prefill(model: Model, compute_dtype, s_max: int, cache_dtype):
+    return jax.jit(steps_mod.make_prefill(
+        model, compute_dtype=compute_dtype, return_cache=True, s_max=s_max,
+        cache_dtype=cache_dtype))
+
+
+@functools.lru_cache(maxsize=1)
+def _jitted_insert_rows():
+    return jax.jit(insert_cache_rows, donate_argnums=(0,))
+
+
+class ServeEngine:
+    """Slot-based continuous-batching engine over a per-slot-position cache.
+
+    sampling: ``temperature == 0`` is greedy argmax; ``temperature > 0``
+    samples from softmax(logits / temperature) with a per-event PRNG fold so
+    runs are reproducible for a fixed seed.
+    """
+
+    def __init__(self, model: Model, params, *, batch_slots: int, s_max: int,
+                 compute_dtype=jnp.float32, cache_dtype=None,
+                 temperature: float = 0.0, seed: int = 0,
+                 scheduler: Optional[Scheduler] = None,
+                 metrics: Optional[MetricsRecorder] = None):
+        self.model = model
+        self.cfg = model.cfg
+        self.params = params
+        self.batch_slots = batch_slots
+        self.s_max = s_max
+        self.compute_dtype = compute_dtype
+        self.cache_dtype = cache_dtype or compute_dtype
+        self.temperature = float(temperature)
+        self.scheduler = scheduler or Scheduler()
+        self.metrics = metrics or MetricsRecorder()
+
+        self.cache = vectorize_cache_pos(
+            model.init_cache(batch_slots, s_max, self.cache_dtype), batch_slots)
+        self._decode = _jitted_decode(model, compute_dtype)
+        self._insert_rows = _jitted_insert_rows()
+
+        self.slot_req: List[Optional[Request]] = [None] * batch_slots
+        self.cur_token = np.zeros((batch_slots, 1), np.int32)
+        self.requests: Dict[int, Request] = {}
+        self._next_rid = 0
+        self._key = jax.random.PRNGKey(seed)
+        self._events = 0      # PRNG fold counter (one per sampling event)
+
+    # ------------------------------------------------------------ factory
+    @classmethod
+    def build(cls, arch: str = "hymba-1.5b", *, reduced: bool = True,
+              batch_slots: int = 4, s_max: int = 64, seed: int = 0,
+              quantize_int8: bool = False, temperature: float = 0.0,
+              compute_dtype=jnp.float32) -> "ServeEngine":
+        """Construct model + params from an arch id; the int8 PTQ path is the
+        same structural quantize->dequant-on-load as the paper's C5 (the
+        pallas quant_matmul kernel consumes q directly on TPU)."""
+        cfg = configs.get_config(arch)
+        if reduced:
+            cfg = reduced_config(cfg)
+        model = get_model(cfg)
+        params = model.init(jax.random.PRNGKey(seed))
+        if quantize_int8:
+            from repro.core.quantize import dequantize_params, quantize_params
+            params = dequantize_params(quantize_params(params), compute_dtype)
+        return cls(model, params, batch_slots=batch_slots, s_max=s_max,
+                   compute_dtype=compute_dtype, temperature=temperature,
+                   seed=seed)
+
+    # ------------------------------------------------------------ extras
+    def _decode_extras(self) -> dict:
+        return self._prefill_extras(self.batch_slots)
+
+    def _prefill_extras(self, batch: int) -> dict:
+        if self.cfg.cross_attn_every:
+            return {"image_embeds": jnp.zeros(
+                (batch, self.cfg.num_image_tokens, self.cfg.d_model),
+                self.compute_dtype)}
+        return {}
+
+    def _prefill_fn(self) -> Callable:
+        return _jitted_prefill(self.model, self.compute_dtype, self.s_max,
+                               self.cache_dtype)
+
+    # ------------------------------------------------------------ sampling
+    def _sample_rows(self, logits) -> np.ndarray:
+        """logits: (B, 1, V_padded) -> (B,) sampled token per row."""
+        row = logits[:, 0, : self.cfg.vocab_size]
+        if self.temperature <= 0.0:
+            return np.asarray(jnp.argmax(row, axis=-1), np.int32)
+        key = jax.random.fold_in(self._key, self._events)
+        self._events += 1
+        toks = jax.random.categorical(key, row / self.temperature, axis=-1)
+        return np.asarray(toks, np.int32)
+
+    # ------------------------------------------------------------ lifecycle
+    def submit(self, prompt, gen_len: int, priority: int = 0) -> Request:
+        """Enqueue a request; admission happens on the next step()/run().
+
+        Rejects up front anything that cannot fit the slot cache: prefill
+        writes K/V at positions 0 .. prompt_len-1 and the gen_len-1 fed-back
+        decode tokens write at prompt_len .. prompt_len+gen_len-2 (the final
+        sampled token is never written), so the last write lands at index
+        prompt_len+gen_len-2 and must stay < s_max. A write past s_max would
+        be silently DROPPED by the scatter (attention then reads
+        never-written zero rows — wrong tokens, no error). Validating here
+        also keeps admission infallible, so a bad request can never strand
+        already-popped good ones."""
+        prompt = np.asarray(prompt, np.int32)
+        if len(prompt) > self.s_max or \
+                len(prompt) + int(gen_len) - 1 > self.s_max:
+            raise ValueError(
+                f"prompt_len {len(prompt)} + gen_len {gen_len} does not fit "
+                f"s_max {self.s_max}; raise s_max or shorten the request")
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid=rid, prompt=prompt,
+                      gen_len=int(gen_len), priority=priority)
+        self.requests[rid] = req
+        self.metrics.on_submit(rid, len(req.prompt))
+        self.scheduler.submit(req)
+        return req
+
+    @property
+    def free_slots(self) -> List[int]:
+        return [s for s, r in enumerate(self.slot_req) if r is None]
+
+    @property
+    def active(self) -> int:
+        return sum(1 for r in self.slot_req if r is not None)
+
+    def admit(self) -> int:
+        """Prefill waiting requests into free slots; returns #admitted.
+
+        Requests admitted on the same tick are grouped by prompt length and
+        prefilled JOINTLY — one dispatch fills K slots (the batched-prefill
+        part of the engine; mixed lengths fall back to one group each).
+        Isolation holds either way: the group's batch-K cache rows scatter
+        into exactly the group's slots."""
+        pairs = []
+        for slot in self.free_slots:
+            req = self.scheduler.next_request()
+            if req is None:
+                break
+            pairs.append((slot, req))
+        groups: Dict[int, list] = {}
+        for slot, req in pairs:
+            groups.setdefault(len(req.prompt), []).append((slot, req))
+        for group in groups.values():
+            self._prefill_group(group)
+        return len(pairs)
+
+    def _prefill_group(self, group):
+        """Jointly prefill K same-length requests into their slots. Cannot
+        fail on request contents: submit() already validated capacity, so
+        popped requests are never stranded mid-admission."""
+        plen = len(group[0][1].prompt)
+        prompts = jnp.asarray(np.stack([r.prompt for _, r in group]))  # (K,P)
+        for _, req in group:
+            self.metrics.on_prefill(req.rid, plen)
+        logits, rcache = self._prefill_fn()(
+            self.params,
+            {"tokens": prompts, **self._prefill_extras(len(group))})
+        slots = jnp.asarray(np.array([s for s, _ in group], np.int32))
+        self.cache = self._insert_rows(self.cache, rcache, slots)
+        toks = self._sample_rows(logits)
+        for i, (slot, req) in enumerate(group):
+            req.state = RequestState.RUNNING
+            req.slot = slot
+            self.slot_req[slot] = req
+            if req.gen_len <= 0:                 # nothing to generate
+                self._finish(slot)
+                continue
+            req.tokens.append(int(toks[i]))
+            self.cur_token[slot, 0] = int(toks[i])
+            self.metrics.on_first_token(req.rid)
+            if req.done:
+                self._finish(slot)
+
+    def _finish(self, slot: int):
+        req = self.slot_req[slot]
+        req.state = RequestState.DONE
+        self.metrics.on_done(req.rid)
+        self.slot_req[slot] = None
+
+    def step(self) -> int:
+        """Admit waiting requests, then one decode tick for every active
+        slot; returns #active after the tick."""
+        self.admit()
+        if self.active == 0:
+            return 0
+        batch = {"token": jnp.asarray(self.cur_token), **self._decode_extras()}
+        logits, self.cache = self._decode(self.params, self.cache, batch)
+        self.metrics.on_decode_step()
+        nxt = self._sample_rows(logits)
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            req.tokens.append(int(nxt[slot]))
+            self.cur_token[slot, 0] = int(nxt[slot])
+            self.metrics.on_token(req.rid)
+            if req.done:
+                self._finish(slot)
+        self.admit()        # refill freed slots on the SAME tick
+        return self.active
+
+    def drain_completed(self) -> List[Request]:
+        """Remove and return finished requests (the engine otherwise retains
+        every request — prompt and token list — for its lifetime; a
+        long-running deployment should drain periodically). Metric records
+        are kept so summary() percentiles stay complete."""
+        done = [r for r in self.requests.values()
+                if r.state == RequestState.DONE]
+        for r in done:
+            del self.requests[r.rid]
+        return done
+
+    def run(self) -> dict:
+        """Serve until queue and slots drain; returns the metrics summary."""
+        self.metrics.on_start()
+        while self.scheduler.waiting or self.active:
+            self.step()
+        self.metrics.on_stop()
+        return self.metrics.summary()

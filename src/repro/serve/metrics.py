@@ -1,0 +1,125 @@
+"""Serving metrics: per-request time-to-first-token, tokens/s, and request
+latency, plus engine-level p50/p95 and throughput. Pure host-side bookkeeping
+— the engine calls the ``on_*`` hooks; ``summary()`` aggregates.
+
+The clock is injectable so tests can drive deterministic timelines.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    rid: int
+    prompt_len: int
+    t_submit: float
+    t_first_token: Optional[float] = None     # prefill done, token 1 sampled
+    t_done: Optional[float] = None
+    n_tokens: int = 0
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        if self.t_first_token is None:
+            return None
+        return self.t_first_token - self.t_submit
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        if self.t_done is None:
+            return None
+        return self.t_done - self.t_submit
+
+    @property
+    def tokens_per_s(self) -> Optional[float]:
+        lat = self.latency_s
+        if lat is None or self.n_tokens == 0:
+            return None
+        return self.n_tokens / max(lat, 1e-9)
+
+
+def percentile(xs: List[float], q: float) -> float:
+    if not xs:
+        return float("nan")
+    return float(np.percentile(np.asarray(xs, np.float64), q))
+
+
+class MetricsRecorder:
+    """Collects request lifecycle timestamps and engine counters."""
+
+    def __init__(self, clock: Callable[[], float] = time.perf_counter):
+        self._clock = clock
+        self.requests: Dict[int, RequestRecord] = {}
+        self.decode_steps = 0
+        self.prefills = 0
+        self.prefill_tokens = 0
+        self._t_start: Optional[float] = None
+        self._t_stop: Optional[float] = None
+
+    # ------------------------------------------------------------ hooks
+    def on_start(self):
+        if self._t_start is None:
+            self._t_start = self._clock()
+
+    def on_stop(self):
+        self._t_stop = self._clock()
+
+    def on_submit(self, rid: int, prompt_len: int):
+        self.requests[rid] = RequestRecord(rid=rid, prompt_len=prompt_len,
+                                           t_submit=self._clock())
+
+    def on_prefill(self, rid: int, prompt_len: int):
+        self.prefills += 1
+        self.prefill_tokens += prompt_len
+
+    def on_first_token(self, rid: int):
+        rec = self.requests[rid]
+        if rec.t_first_token is None:
+            rec.t_first_token = self._clock()
+        rec.n_tokens += 1
+
+    def on_token(self, rid: int):
+        self.requests[rid].n_tokens += 1
+
+    def on_done(self, rid: int):
+        self.requests[rid].t_done = self._clock()
+
+    def on_decode_step(self):
+        self.decode_steps += 1
+
+    # ------------------------------------------------------------ summary
+    def summary(self) -> dict:
+        recs = list(self.requests.values())
+        done = [r for r in recs if r.t_done is not None]
+        ttfts = [r.ttft_s for r in done if r.ttft_s is not None]
+        lats = [r.latency_s for r in done]
+        tps = [r.tokens_per_s for r in done if r.tokens_per_s is not None]
+        total_tokens = sum(r.n_tokens for r in recs)
+        t_end = self._t_stop if self._t_stop is not None else self._clock()
+        # without on_start() (engine driven via step(), not run()) there is
+        # no wall clock — report NaN like the other missing-data fields, not
+        # a 1e9x-inflated throughput over a zero denominator
+        wall = (t_end - self._t_start) if self._t_start is not None else \
+            float("nan")
+        return {
+            "requests": len(recs),
+            "completed": len(done),
+            "wall_s": wall,
+            "total_tokens": total_tokens,
+            "throughput_tokens_per_s": (total_tokens / wall if wall > 0
+                                        else float("nan")),
+            "decode_steps": self.decode_steps,
+            "prefills": self.prefills,
+            "prefill_tokens": self.prefill_tokens,
+            "ttft_s": {"mean": float(np.mean(ttfts)) if ttfts else float("nan"),
+                       "p50": percentile(ttfts, 50),
+                       "p95": percentile(ttfts, 95)},
+            "latency_s": {"p50": percentile(lats, 50),
+                          "p95": percentile(lats, 95)},
+            "request_tokens_per_s": {"p50": percentile(tps, 50),
+                                     "p95": percentile(tps, 95)},
+        }

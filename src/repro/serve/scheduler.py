@@ -1,0 +1,76 @@
+"""Request queue for the serving engine: priority levels, FIFO within a
+level, O(log n) admission. The engine pops a request the moment a batch slot
+frees (continuous batching); nothing here touches device state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import heapq
+import itertools
+from typing import List, Optional
+
+import numpy as np
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"
+    RUNNING = "running"
+    DONE = "done"
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request. ``priority`` is ascending: 0 is served before
+    1 (think nice levels); equal priorities are FIFO by submission order."""
+    rid: int
+    prompt: np.ndarray            # (prompt_len,) int token ids
+    gen_len: int
+    priority: int = 0
+    state: RequestState = RequestState.QUEUED
+    slot: Optional[int] = None
+    tokens: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def remaining(self) -> int:
+        return max(0, self.gen_len - len(self.tokens))
+
+    @property
+    def done(self) -> bool:
+        return len(self.tokens) >= self.gen_len
+
+
+class Scheduler:
+    """Priority + FIFO admission queue.
+
+    ``submit`` pushes; ``next_request`` pops the lowest (priority, seq) pair.
+    A monotone sequence number breaks priority ties so equal-priority
+    requests leave in arrival order and the heap never compares Request
+    objects directly.
+    """
+
+    def __init__(self):
+        self._heap: list = []
+        self._seq = itertools.count()
+
+    def submit(self, req: Request) -> Request:
+        if req.state != RequestState.QUEUED:
+            raise ValueError(f"request {req.rid} is {req.state}, not QUEUED")
+        heapq.heappush(self._heap, (req.priority, next(self._seq), req))
+        return req
+
+    def next_request(self) -> Optional[Request]:
+        if not self._heap:
+            return None
+        _, _, req = heapq.heappop(self._heap)
+        return req
+
+    @property
+    def waiting(self) -> int:
+        return len(self._heap)
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)

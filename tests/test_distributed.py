@@ -49,11 +49,18 @@ for mesh_shape in [None, (2, 4)]:
         step = steps_mod.make_train_step(model, opt, compute_dtype=jnp.float32,
                                          remat=False)
         if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
             sds = jax.eval_shape(lambda: state)
             sh = steps_mod.state_shardings(model, sds)
             bsh = steps_mod.batch_shardings(model, jax.eval_shape(lambda: batch))
             state = jax.tree.map(lambda x, s: jax.device_put(x, s), state, sh)
-            fn = jax.jit(step, in_shardings=(sh, bsh))
+            # constrain OUTPUT state to the planned shardings too: with
+            # in_shardings alone, GSPMD may pick a different layout for an
+            # output leaf and the committed array then mismatches
+            # in_shardings on the next iteration (pjit ValueError)
+            _, metrics_sds = jax.eval_shape(step, sds, jax.eval_shape(lambda: batch))
+            msh = jax.tree.map(lambda _: NamedSharding(mesh, P()), metrics_sds)
+            fn = jax.jit(step, in_shardings=(sh, bsh), out_shardings=(sh, msh))
         else:
             fn = jax.jit(step)
         for _ in range(3):

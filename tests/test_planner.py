@@ -1,34 +1,37 @@
-"""Capacity planner invariants — including hypothesis property tests."""
+"""Capacity planner invariants — property tests when hypothesis is
+available, a fixed deterministic GEMM sample otherwise (the suite must run,
+and collect, without the optional dependency)."""
 import math
 
+import numpy as np
 import pytest
-from hypothesis import given, strategies as st
 
 from repro.configs.base import MemoryStrategy
 from repro.core.dataflow import DATAFLOWS, Gemm, Tiling, reload_factor, traffic_bytes
 from repro.core.planner import MXU_DIM, PlannerConfig, plan_gemm
 from repro.core.strategies import ZCU104, TPU_V5E, planner_config
 
-gemm_st = st.builds(
-    Gemm,
-    name=st.just("g"),
-    m=st.integers(1, 8192),
-    k=st.integers(1, 8192),
-    n=st.integers(1, 8192),
-)
+try:
+    from hypothesis import given, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 
-@given(gemm_st, st.sampled_from([4 * 2**20, 16 * 2**20, 64 * 2**20]),
-       st.booleans())
-def test_plan_fits_budget(g, budget, overlap):
+def _sample_gemms(n=25, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Gemm("g", int(m), int(k), int(nn))
+            for m, k, nn in rng.integers(1, 8192, (n, 3))]
+
+
+def _check_plan_fits_budget(g, budget, overlap):
     cfg = PlannerConfig(vmem_budget=budget, overlap=overlap)
     plan = plan_gemm(g, cfg)
     assert plan.vmem_used <= budget
     assert plan.stages >= 1 and plan.partitions >= 1
 
 
-@given(gemm_st)
-def test_traffic_at_least_resident_optimum(g):
+def _check_traffic_at_least_resident_optimum(g):
     """No dataflow can move fewer bytes than touching each tensor once."""
     t = Tiling(128, 128, 128)
     opt = g.a_size + g.w_size + g.o_size
@@ -37,13 +40,42 @@ def test_traffic_at_least_resident_optimum(g):
         assert reload_factor(g, t, df) >= 0.999
 
 
-@given(gemm_st)
-def test_bigger_budget_never_more_traffic(g):
+def _check_bigger_budget_never_more_traffic(g):
     """The paper's Ultra-RAM claim as an invariant: more local memory can
     only reduce (or keep) planned HBM traffic."""
     small = plan_gemm(g, PlannerConfig(vmem_budget=2 * 2**20, overlap=False))
     big = plan_gemm(g, PlannerConfig(vmem_budget=64 * 2**20, overlap=False))
     assert big.traffic <= small.traffic
+
+
+def test_planner_invariants_deterministic():
+    for i, g in enumerate(_sample_gemms()):
+        _check_plan_fits_budget(g, [4, 16, 64][i % 3] * 2**20, bool(i % 2))
+        _check_traffic_at_least_resident_optimum(g)
+        _check_bigger_budget_never_more_traffic(g)
+
+
+if HAVE_HYPOTHESIS:
+    gemm_st = st.builds(
+        Gemm,
+        name=st.just("g"),
+        m=st.integers(1, 8192),
+        k=st.integers(1, 8192),
+        n=st.integers(1, 8192),
+    )
+
+    @given(gemm_st, st.sampled_from([4 * 2**20, 16 * 2**20, 64 * 2**20]),
+           st.booleans())
+    def test_plan_fits_budget(g, budget, overlap):
+        _check_plan_fits_budget(g, budget, overlap)
+
+    @given(gemm_st)
+    def test_traffic_at_least_resident_optimum(g):
+        _check_traffic_at_least_resident_optimum(g)
+
+    @given(gemm_st)
+    def test_bigger_budget_never_more_traffic(g):
+        _check_bigger_budget_never_more_traffic(g)
 
 
 def test_resident_plan_when_fits():
@@ -76,9 +108,20 @@ def test_overlap_halves_usable_tiles():
     assert yes.tiling.bm * yes.tiling.bk <= no.tiling.bm * no.tiling.bk * 2
 
 
-@given(st.integers(1, 4096), st.integers(1, 4096), st.integers(1, 4096))
-def test_mxu_alignment(m, k, n):
+def _check_mxu_alignment(m, k, n):
     plan = plan_gemm(Gemm("g", m, k, n),
                      PlannerConfig(vmem_budget=64 * 2**20, overlap=True))
     t = plan.tiling
     assert t.bm % MXU_DIM == 0 and t.bk % MXU_DIM == 0 and t.bn % MXU_DIM == 0
+
+
+def test_mxu_alignment_deterministic():
+    rng = np.random.default_rng(1)
+    for m, k, n in rng.integers(1, 4096, (10, 3)):
+        _check_mxu_alignment(int(m), int(k), int(n))
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(1, 4096), st.integers(1, 4096), st.integers(1, 4096))
+    def test_mxu_alignment(m, k, n):
+        _check_mxu_alignment(m, k, n)

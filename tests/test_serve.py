@@ -1,0 +1,266 @@
+"""Serving engine: prefill isolation (the seed's cross-slot corruption bug),
+continuous batching, greedy determinism vs a straight-line prefill+decode
+loop, scheduler/metrics units.
+
+The isolation tests exploit a property established for the engine design:
+batched decode is row-independent at a FIXED batch shape, so a slot's token
+stream must be bit-identical no matter what other slots contain. The legacy
+token-by-token prefill violates this by stepping the whole batch once per
+prompt token; the engine's batch-axis cache splice does not.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.launch import steps as steps_mod
+from repro.launch.serve import LegacyServer, ServeConfig, Server
+from repro.models.registry import (extract_cache_slot, get_model,
+                                   insert_cache_slot, reduced_config,
+                                   vectorize_cache_pos)
+from repro.serve.engine import ServeEngine
+from repro.serve.metrics import MetricsRecorder
+from repro.serve.scheduler import Request, Scheduler
+
+ARCH = "hymba-1.5b"
+S_MAX = 48
+
+
+@pytest.fixture(scope="module")
+def mp():
+    cfg = reduced_config(configs.get_config(ARCH))
+    model = get_model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def make_engine(model, params, **kw):
+    kw.setdefault("batch_slots", 2)
+    kw.setdefault("s_max", S_MAX)
+    return ServeEngine(model, params, **kw)
+
+
+def promptA():
+    return np.arange(1, 9, dtype=np.int32)          # len 8
+
+
+def promptB():
+    return np.arange(40, 52, dtype=np.int32)        # len 12
+
+
+# ------------------------------------------------------------ (a) isolation
+def test_prefill_isolation(mp):
+    """Slot A's tokens are identical whether or not slot B is prefilled
+    mid-generation (bit-exact, same batch shape both runs)."""
+    model, params = mp
+    gen = 10
+
+    e1 = make_engine(model, params)
+    r_alone = e1.submit(promptA(), gen)
+    while not r_alone.done:
+        e1.step()
+
+    e2 = make_engine(model, params)
+    r_conc = e2.submit(promptA(), gen)
+    e2.step()
+    e2.step()
+    e2.submit(promptB(), 4)       # admitted + prefilled while A is decoding
+    while not r_conc.done:
+        e2.step()
+
+    assert r_alone.tokens == r_conc.tokens
+    assert len(r_conc.tokens) == gen
+    # stronger than token equality: slot A's cache entries themselves are
+    # bit-identical — B's prefill/decodes never touched them
+    c1 = extract_cache_slot(e1.cache, 0)
+    c2 = extract_cache_slot(e2.cache, 0)
+    for key in c1:
+        np.testing.assert_array_equal(np.asarray(c1[key]),
+                                      np.asarray(c2[key]), err_msg=key)
+
+
+def test_legacy_prefill_corrupts_other_slots(mp):
+    """The seed bug, demonstrated: LegacyServer's token-by-token prefill of B
+    advances slot A's cache, changing A's tokens. This is exactly the
+    scenario test_prefill_isolation proves clean for the engine — run
+    against the old path, isolation FAILS."""
+    del mp
+    sc = ServeConfig(arch=ARCH, reduced=True, batch_slots=2, s_max=S_MAX,
+                     prompt_len=8, gen_len=10)
+
+    l1 = LegacyServer(sc)
+    slot = l1.add_request(promptA(), sc.gen_len)
+    for _ in range(sc.gen_len):
+        l1.step_all()
+    alone = list(l1.outputs[slot])
+
+    l2 = LegacyServer(sc)
+    slot = l2.add_request(promptA(), sc.gen_len)
+    l2.step_all()
+    l2.step_all()
+    l2.add_request(promptB(), 4)          # corrupts slot A's cache
+    for _ in range(sc.gen_len):
+        l2.step_all()
+    concurrent = list(l2.outputs[slot])[: sc.gen_len]
+
+    assert alone[:2] == concurrent[:2]    # identical until B arrives
+    assert alone != concurrent            # ...then A's stream is corrupted
+
+
+def test_server_shim_fixed_regression(mp):
+    """Satellite fix: Server.add_request (now engine-backed) must not advance
+    other active slots' caches — same scenario as above, now clean."""
+    del mp
+    sc = ServeConfig(arch=ARCH, reduced=True, batch_slots=2, s_max=S_MAX,
+                     prompt_len=8, gen_len=10)
+
+    s1 = Server(sc)
+    slot = s1.add_request(promptA(), sc.gen_len)
+    for _ in range(sc.gen_len):
+        s1.step_all()
+    alone = list(s1.outputs[slot])
+
+    s2 = Server(sc)
+    slot = s2.add_request(promptA(), sc.gen_len)
+    s2.step_all()
+    s2.step_all()
+    s2.add_request(promptB(), 4)
+    for _ in range(sc.gen_len):
+        s2.step_all()
+    concurrent = list(s2.outputs[slot])[: sc.gen_len]
+
+    assert alone == concurrent
+    assert len(alone) == sc.gen_len
+
+
+# ------------------------------------------------------ (b) continuous batch
+def test_continuous_batching_completes_all(mp):
+    """requests > batch_slots all complete with exactly gen_len tokens."""
+    model, params = mp
+    engine = make_engine(model, params, batch_slots=2)
+    rng = np.random.default_rng(7)
+    gens = [6, 3, 9, 5, 4]
+    reqs = [engine.submit(rng.integers(0, model.cfg.vocab_size, 8), g)
+            for g in gens]
+    summary = engine.run()
+    for req, g in zip(reqs, gens):
+        assert req.done and len(req.tokens) == g
+        assert all(0 <= t < model.cfg.vocab_size for t in req.tokens)
+    assert summary["completed"] == len(gens)
+    assert summary["prefills"] == len(gens)
+    # continuous batching refills freed slots: fewer ticks than serial decode
+    assert summary["decode_steps"] < sum(gens)
+
+
+def test_priority_admission_order(mp):
+    """With one slot, a priority-0 request admitted after a priority-1 one
+    still starts first once submitted before admission."""
+    model, params = mp
+    engine = make_engine(model, params, batch_slots=1)
+    lo = engine.submit(promptA(), 4, priority=1)
+    hi = engine.submit(promptB(), 4, priority=0)
+    engine.step()                  # admits exactly one request: the hi-prio
+    assert hi.slot == 0 and len(hi.tokens) >= 1
+    assert lo.slot is None and not lo.tokens     # still queued behind hi
+    engine.run()
+    assert hi.done and lo.done
+
+
+# ------------------------------------------------------- (c) determinism
+def test_greedy_matches_straightline_prefill_decode(mp):
+    """Engine greedy output == straight-line make_prefill + decode loop (no
+    scheduler, no metrics), bit-for-bit."""
+    model, params = mp
+    gen = 8
+    engine = make_engine(model, params, batch_slots=2)
+    req = engine.submit(promptA(), gen)
+    engine.run()
+
+    prefill = jax.jit(steps_mod.make_prefill(
+        model, compute_dtype=jnp.float32, return_cache=True, s_max=S_MAX))
+    decode = jax.jit(steps_mod.make_decode_step(model, compute_dtype=jnp.float32))
+    logits, rcache = prefill(params, {"tokens": jnp.asarray(promptA()[None])})
+    cache = vectorize_cache_pos(model.init_cache(2, S_MAX, jnp.float32), 2)
+    cache = insert_cache_slot(cache, rcache, 0)
+    toks = [int(jnp.argmax(logits[0, 0, : model.cfg.vocab_size]))]
+    cur = np.zeros((2, 1), np.int32)
+    for _ in range(gen - 1):
+        cur[0, 0] = toks[-1]
+        logits, cache = decode(params, cache, {"token": jnp.asarray(cur)})
+        toks.append(int(jnp.argmax(logits[0, 0, : model.cfg.vocab_size])))
+
+    assert req.tokens == toks
+
+
+def test_temperature_sampling_reproducible(mp):
+    """temperature > 0 samples in-vocab tokens, reproducibly per seed."""
+    model, params = mp
+    outs = []
+    for _ in range(2):
+        engine = make_engine(model, params, temperature=0.8, seed=3)
+        req = engine.submit(promptA(), 6)
+        engine.run()
+        assert all(0 <= t < model.cfg.vocab_size for t in req.tokens)
+        outs.append(req.tokens)
+    assert outs[0] == outs[1]
+
+
+# ------------------------------------------------------------ units
+def test_scheduler_priority_then_fifo():
+    s = Scheduler()
+    r1 = Request(rid=1, prompt=np.zeros(2, np.int32), gen_len=1, priority=1)
+    r2 = Request(rid=2, prompt=np.zeros(2, np.int32), gen_len=1, priority=0)
+    r3 = Request(rid=3, prompt=np.zeros(2, np.int32), gen_len=1, priority=0)
+    for r in (r1, r2, r3):
+        s.submit(r)
+    assert [s.next_request().rid for _ in range(3)] == [2, 3, 1]
+    assert s.next_request() is None
+
+
+def test_metrics_summary_math():
+    t = {"now": 0.0}
+    m = MetricsRecorder(clock=lambda: t["now"])
+    m.on_start()
+    m.on_submit(0, prompt_len=4)
+    t["now"] = 0.5
+    m.on_prefill(0, 4)
+    m.on_first_token(0)
+    for dt in (1.0, 1.5, 2.0):
+        t["now"] = dt
+        m.on_token(0)
+        m.on_decode_step()
+    m.on_done(0)
+    m.on_stop()
+    s = m.summary()
+    assert s["completed"] == 1 and s["total_tokens"] == 4
+    assert s["ttft_s"]["p50"] == pytest.approx(0.5)
+    assert s["latency_s"]["p95"] == pytest.approx(2.0)
+    assert s["throughput_tokens_per_s"] == pytest.approx(4 / 2.0)
+    assert s["request_tokens_per_s"]["p50"] == pytest.approx(4 / 2.0)
+
+
+def test_submit_rejects_requests_that_cannot_fit(mp):
+    """Validation happens at submit, not admission: a bad request raises
+    immediately and can never strand other queued requests."""
+    model, params = mp
+    engine = make_engine(model, params)
+    ok = engine.submit(promptA(), 4)
+    # exact bound: last cache write is at prompt_len+gen_len-2, so
+    # prompt_len == s_max with gen_len 1 still fits...
+    fits = engine.submit(np.zeros(S_MAX, np.int32), 1)
+    # ...but one more generated token would write past the cache end
+    with pytest.raises(ValueError, match="s_max"):
+        engine.submit(np.zeros(S_MAX, np.int32), 2)
+    engine.run()
+    assert ok.done and len(ok.tokens) == 4            # queue undamaged
+    assert fits.done and len(fits.tokens) == 1
+
+
+def test_int8_ptq_path_through_engine():
+    """The PTQ path is wired through the engine unchanged."""
+    engine = ServeEngine.build(ARCH, reduced=True, batch_slots=2, s_max=32,
+                               quantize_int8=True)
+    req = engine.submit(np.array([1, 2, 3], np.int32), 4)
+    engine.run()
+    assert req.done and len(req.tokens) == 4
+    assert all(0 <= t < engine.cfg.vocab_size for t in req.tokens)
