@@ -48,13 +48,16 @@ class ServeConfig:
     seed: int = 0
     quantize_int8: bool = False
     temperature: float = 0.0
+    page_size: int = 0        # 0 = dense cache; >0 enables paged KV
+    num_pages: int = 0        # 0 = dense-equivalent pool (slots x s_max/ps)
 
 
 def build_engine(sc: ServeConfig) -> ServeEngine:
     return ServeEngine.build(
         sc.arch, reduced=sc.reduced, batch_slots=sc.batch_slots,
         s_max=sc.s_max, seed=sc.seed, quantize_int8=sc.quantize_int8,
-        temperature=sc.temperature)
+        temperature=sc.temperature,
+        page_size=sc.page_size or None, num_pages=sc.num_pages or None)
 
 
 class Server:

@@ -214,9 +214,14 @@ def make_prefill(model: Model, *, compute_dtype=jnp.bfloat16,
     inside ONE jitted call — one dispatch per request instead of one per
     prompt token, and crucially at the REQUEST's batch size (1 in the engine)
     so it never touches other slots' cache entries. ``s_max`` sizes the
-    returned cache's sequence capacity (must match the serving cache);
-    for encoder-decoder models the cross-attention K/V are precomputed from
-    the encoder pass first, exactly once."""
+    returned cache's sequence capacity: for a dense serving cache it must
+    match the resident cache; for a PAGED one it is the per-slot LOGICAL
+    capacity (the block-table span) — the returned cache is always the dense
+    per-request layout, a transient at the group's batch size that
+    ``registry.insert_cache_rows_paged`` then scatters into exactly the pages
+    the admitted slots reserved. For encoder-decoder models the
+    cross-attention K/V are precomputed from the encoder pass first, exactly
+    once."""
     if return_cache:
         if s_max <= 0:
             raise ValueError("return_cache=True requires s_max > 0")

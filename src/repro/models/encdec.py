@@ -207,12 +207,21 @@ def precompute_cross_kv(params, cfg: ArchConfig, enc_out):
     return jax.lax.map(per_layer, params["dec_layers"])
 
 
-def _decode_layer(cfg, lp, x, ck, cv, xk, xv, pos, positions, enc_pos):
+def _decode_layer(cfg, lp, x, ck, cv, xk, xv, pos, positions, enc_pos,
+                  block_tables=None):
     """One decoder decode layer (self-attn against cache + cross-attn).
-    Exposed for roofline probes."""
+    Exposed for roofline probes. With ``block_tables``, ck/cv are one layer's
+    (P, ps, KV, hd) page-pool slices (paged self-attn KV; the cross-attn
+    xk/xv stay dense per slot — they are written once at prefill and fixed
+    at ENC_LEN, so paging buys nothing)."""
     h = L.apply_norm(x, lp["ln1"], "layernorm")
-    out, ck, cv = L.attention_decode(lp["attn"], h, _self_dims(cfg, True),
-                                     ck, cv, pos, positions)
+    if block_tables is not None:
+        out, ck, cv = L.attention_decode_paged(
+            lp["attn"], h, _self_dims(cfg, True), ck, cv, block_tables, pos,
+            positions)
+    else:
+        out, ck, cv = L.attention_decode(lp["attn"], h, _self_dims(cfg, True),
+                                         ck, cv, pos, positions)
     x = x + out
     h = L.apply_norm(x, lp["ln_x"], "layernorm")
     x = x + L.attention(lp["xattn"], h, _self_dims(cfg, False), positions,
@@ -227,6 +236,7 @@ def decode_step(params, cfg: ArchConfig, token, cache, *, compute_dtype=jnp.bflo
                 **_):
     B = token.shape[0]
     pos = cache["pos"]
+    bt = cache.get("block_tables")
     positions = L.decode_positions(pos, B)
     # learned decoder position embedding, per-row: (B,1) -> (B,1,D)
     x_pos = params["pos_dec"][jnp.minimum(positions, 8191)].astype(compute_dtype)
@@ -245,7 +255,7 @@ def decode_step(params, cfg: ArchConfig, token, cache, *, compute_dtype=jnp.bflo
         xk = jax.lax.dynamic_index_in_dim(cache["xk"], i, 0, keepdims=False)
         xv = jax.lax.dynamic_index_in_dim(cache["xv"], i, 0, keepdims=False)
         x, ck, cv = _decode_layer(cfg, lp, x, ck, cv, xk, xv, pos, positions,
-                                  enc_pos)
+                                  enc_pos, bt)
         ck_all = jax.lax.dynamic_update_index_in_dim(ck_all, ck, i, 0)
         cv_all = jax.lax.dynamic_update_index_in_dim(cv_all, cv, i, 0)
         return x, ck_all, cv_all

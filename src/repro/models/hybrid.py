@@ -191,20 +191,39 @@ def cache_logical(cfg: ArchConfig):
             "pos": ()}
 
 
+def _ring_sdpa(lp, h, q, ck, cv, valid, dims):
+    """Masked decode attention over a ring view. q: (B,1,H*hd) pre-reshape;
+    ck/cv: (B,W,KV,hd); valid: (B,W) bool. Shared by the dense ring path and
+    the paged path so the two produce bit-identical outputs for equal views."""
+    B = q.shape[0]
+    H, KV, hd = dims.num_heads, dims.num_kv_heads, dims.head_dim
+    G = H // KV
+    qg = q.reshape(B, 1, KV, G, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, ck.astype(q.dtype)) / math.sqrt(hd)
+    scores = jnp.where(valid[:, None, None, None, :], scores.astype(jnp.float32), -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, cv.astype(q.dtype)).reshape(B, 1, H * hd)
+    return out @ lp["attn"]["wo"].astype(h.dtype)
+
+
 def _window_attn_decode(lp, h, cfg, ck, cv, slot_pos, pos, positions):
     """Decode attention over a ring-buffer window cache. ``pos`` is a scalar
-    (lockstep batch) or a (B,) per-slot position vector (serving engine)."""
+    (lockstep batch) or a (B,) per-slot position vector (serving engine).
+    Vector-pos writes from INACTIVE slots (pos >= layers.INACTIVE_POS — freed
+    serving slots) are dropped, so a finished request's ring rows stay
+    bit-stable while other slots keep decoding."""
     dims = _attn_dims(cfg)
     q, k, v = L._qkv(lp["attn"], h, dims, positions)
     W = ck.shape[1]
     B = q.shape[0]
     if jnp.ndim(pos) == 1:
-        # per-slot ring-buffer writes: row b lands in ring slot pos[b] % W
-        slot = pos % W
+        # per-slot ring-buffer writes: row b lands in ring slot pos[b] % W;
+        # inactive rows are steered to index W and dropped by the scatter
+        slot = jnp.where(pos < L.INACTIVE_POS, pos % W, W)
         b_idx = jnp.arange(B)
-        ck = ck.at[b_idx, slot].set(k[:, 0].astype(ck.dtype))
-        cv = cv.at[b_idx, slot].set(v[:, 0].astype(cv.dtype))
-        slot_pos = slot_pos.at[b_idx, slot].set(pos)
+        ck = ck.at[b_idx, slot].set(k[:, 0].astype(ck.dtype), mode="drop")
+        cv = cv.at[b_idx, slot].set(v[:, 0].astype(cv.dtype), mode="drop")
+        slot_pos = slot_pos.at[b_idx, slot].set(pos, mode="drop")
         mask_pos = pos[:, None]                              # (B,1) -> (B,W)
     else:
         slot = pos % W
@@ -213,24 +232,62 @@ def _window_attn_decode(lp, h, cfg, ck, cv, slot_pos, pos, positions):
         slot_pos = jax.lax.dynamic_update_slice_in_dim(
             slot_pos, jnp.broadcast_to(pos, slot_pos[:, :1].shape), slot, axis=1)
         mask_pos = pos
-    H, KV, hd = dims.num_heads, dims.num_kv_heads, dims.head_dim
-    G = H // KV
-    qg = q.reshape(B, 1, KV, G, hd)
-    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, ck.astype(q.dtype)) / math.sqrt(hd)
     valid = (slot_pos >= 0) & (slot_pos <= mask_pos) & \
         (slot_pos > mask_pos - cfg.window)
-    scores = jnp.where(valid[:, None, None, None, :], scores.astype(jnp.float32), -1e30)
-    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
-    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, cv.astype(q.dtype)).reshape(B, 1, H * hd)
-    return out @ lp["attn"]["wo"].astype(h.dtype), ck, cv, slot_pos
+    out = _ring_sdpa(lp, h, q, ck, cv, valid, dims)
+    return out, ck, cv, slot_pos
 
 
-def _decode_layer(cfg, lp, x, ck, cv, sp, hst, conv, pos, positions):
+def _window_attn_decode_paged(lp, h, cfg, pool_k, pool_v, pool_spos,
+                              block_tables, ring_w: int, pos, positions):
+    """Paged ring-buffer decode attention: the ring's W rows live in shared
+    pages reached through per-slot block tables (models/layers.py paged
+    helpers). pool_k/v: (P, ps, KV, hd); pool_spos: (P, ps) absolute position
+    per pool row (-1 = never written); pos: (B,) per-slot positions.
+
+    The gathered view is exactly ``ring_w`` rows in ring order, so for equal
+    page contents this is bit-identical to the dense ring path (_ring_sdpa is
+    shared); rows of unallocated pages are masked out, matching the dense
+    ring's never-written slot_pos == -1 rows."""
+    dims = _attn_dims(cfg)
+    q, k, v = L._qkv(lp["attn"], h, dims, positions)
+    ps = pool_k.shape[1]
+
+    # write: ring index pos % W -> page block_tables[b, idx // ps]
+    ridx = jnp.where(pos < L.INACTIVE_POS, pos % ring_w, 0)
+    w_row, page_ok = L.paged_write_target(block_tables, ridx, ps)
+    w_ok = (pos < L.INACTIVE_POS) & page_ok
+    pool_k = L.paged_write_rows(pool_k, k[:, 0], w_row, w_ok)
+    pool_v = L.paged_write_rows(pool_v, v[:, 0], w_row, w_ok)
+    pool_spos = L.paged_write_rows(pool_spos, pos, w_row, w_ok)
+
+    # read: gather the W-row ring view through the block table
+    phys, ok = L.paged_row_indices(block_tables, ps, ring_w)
+    KV, hd = dims.num_kv_heads, dims.head_dim
+    view_k = pool_k.reshape(-1, KV, hd)[phys]        # (B, W, KV, hd)
+    view_v = pool_v.reshape(-1, KV, hd)[phys]
+    spos = jnp.where(ok, pool_spos.reshape(-1)[phys], -1)
+    mask_pos = pos[:, None]
+    valid = (spos >= 0) & (spos <= mask_pos) & (spos > mask_pos - cfg.window)
+    out = _ring_sdpa(lp, h, q, view_k, view_v, valid, dims)
+    return out, pool_k, pool_v, pool_spos
+
+
+def _decode_layer(cfg, lp, x, ck, cv, sp, hst, conv, pos, positions,
+                  block_tables=None, ring_w: int = 0):
     """One hybrid decode layer (windowed ring-buffer attention + SSM state).
-    Exposed for roofline probes."""
+    Exposed for roofline probes. With ``block_tables``, ck/cv/sp are one
+    layer's page-pool slices and attention uses the paged ring path."""
     h = L.apply_norm(x, lp["ln1"], cfg.norm)
-    a, ck, cv, sp = _window_attn_decode(lp, h, cfg, ck, cv, sp, pos, positions)
+    if block_tables is not None:
+        a, ck, cv, sp = _window_attn_decode_paged(
+            lp, h, cfg, ck, cv, sp, block_tables, ring_w, pos, positions)
+    else:
+        a, ck, cv, sp = _window_attn_decode(lp, h, cfg, ck, cv, sp, pos,
+                                            positions)
+    # freed serving slots keep their recurrent h/conv bit-for-bit
     s, st = _mamba_branch(lp, h, cfg, {"h": hst, "conv": conv})
+    st = L.freeze_inactive_rows(pos, st, {"h": hst, "conv": conv})
     a = L.rmsnorm(a, lp["attn_norm"]["scale"])
     s = L.rmsnorm(s, lp["ssm_norm"]["scale"])
     x = x + 0.5 * (a + s)
@@ -243,13 +300,17 @@ def decode_step(params, cfg: ArchConfig, token, cache, *, compute_dtype=jnp.bflo
                 **_):
     B = token.shape[0]
     pos = cache["pos"]
+    bt = cache.get("block_tables")
+    # paged caches carry a (W,) iota leaf whose SHAPE is the ring width — the
+    # one static the paged ring path needs that pool shapes cannot express
+    ring_w = cache["ring_iota"].shape[0] if bt is not None else 0
     positions = L.decode_positions(pos, B)
     x = L.embed_lookup(params["embed"], token, compute_dtype)
 
     def body(x, xs):
         lp, ck, cv, sp, hst, conv = xs
         x, ck, cv, sp, hh, cc = _decode_layer(cfg, lp, x, ck, cv, sp, hst, conv,
-                                              pos, positions)
+                                              pos, positions, bt, ring_w)
         return x, (ck, cv, sp, hh, cc)
 
     x, (ck, cv, sp, hst, conv) = jax.lax.scan(
@@ -257,6 +318,6 @@ def decode_step(params, cfg: ArchConfig, token, cache, *, compute_dtype=jnp.bflo
                   cache["h"], cache["conv"]))
     x = L.apply_norm(x, params["final_norm"], cfg.norm)
     logits = L.lm_logits(params["embed"], x, params["unembed"]["w"], vocab=cfg.vocab_size)
-    new_cache = {"k": ck, "v": cv, "slot_pos": sp, "h": hst, "conv": conv,
-                 "pos": pos + 1}
+    new_cache = dict(cache, k=ck, v=cv, slot_pos=sp, h=hst, conv=conv,
+                     pos=pos + 1)
     return logits.astype(jnp.float32), new_cache

@@ -359,6 +359,30 @@ def attention(params, x, dims: AttnDims, positions, impl: str = "einsum",
     return out
 
 
+# Sentinel cache position for an INACTIVE (freed / never-admitted) serving
+# slot. It is >= any reachable sequence position, so the dense decode scatter
+# drops the slot's K/V write (index out of range, mode="drop") and the paged /
+# ring-buffer paths gate on ``pos < INACTIVE_POS`` explicitly. The engine sets
+# a slot's pos to this on _finish; pos keeps advancing by +1 per tick but
+# stays >= INACTIVE_POS, so freed rows are bit-stable indefinitely.
+INACTIVE_POS = 1 << 30
+
+
+def freeze_inactive_rows(pos, new, old):
+    """Per-slot recurrent-state update gate for serving decode: rows of
+    INACTIVE slots (vector ``pos`` at the sentinel) keep their ``old`` value
+    bit-for-bit; scalar (lockstep) pos is a no-op. ``new``/``old`` are
+    matching pytrees whose leaves lead with the batch axis. The single
+    implementation of the sentinel convention for recurrent families
+    (hybrid SSM branch, rwkv state) — keep them from diverging."""
+    if jnp.ndim(pos) != 1:
+        return new
+    act = pos < INACTIVE_POS
+    return jax.tree.map(
+        lambda n, o: jnp.where(act.reshape((-1,) + (1,) * (n.ndim - 1)), n, o),
+        new, old)
+
+
 def decode_positions(pos, batch: int):
     """(B,1) query positions from a cache ``pos`` that is either a scalar
     (lockstep batch) or a (B,) per-slot vector — THE cross-family convention
@@ -371,14 +395,16 @@ def decode_positions(pos, batch: int):
 
 def _decode_sdpa_local(q, ck, cv, cache_pos, k_positions, window, hd):
     """Partial-softmax decode attention over a LOCAL cache slice.
-    q: (B,1,KV,G,hd); ck/cv: (B,S_loc,KV,hd); k_positions: (S_loc,) global;
+    q: (B,1,KV,G,hd); ck/cv: (B,S_loc,KV,hd); k_positions: (S_loc,) global or
+    (B,S_loc) per-row (the paged path, where each slot views its own pages);
     cache_pos: scalar (lockstep) or (B,1) per-slot positions.
     Returns (m (B,KV,G,1), l, acc (B,KV,G,1,hd)) for cross-shard combining."""
     scores = jnp.einsum("bqkgh,bskh->bkgqs", q, ck.astype(q.dtype)
                         ).astype(jnp.float32) / math.sqrt(hd)
-    valid = k_positions[None, :] <= cache_pos
+    kp = k_positions if jnp.ndim(k_positions) == 2 else k_positions[None, :]
+    valid = kp <= cache_pos
     if window > 0:
-        valid &= k_positions[None, :] > cache_pos - window
+        valid &= kp > cache_pos - window
     scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
     m = scores.max(axis=-1)                                   # (B,KV,G,1)
     p = jnp.exp(scores - m[..., None])
@@ -488,6 +514,101 @@ def attention_decode(params, x, dims: AttnDims, cache_k, cache_v, cache_pos,
 
     out = out.reshape(B, 1, H * hd)
     return out @ params["wo"].astype(x.dtype), cache_k, cache_v
+
+
+# ------------------------------------------------------- paged KV decode
+def paged_row_indices(block_tables, page_size: int, n_rows: int):
+    """Flattened pool-row index of each LOGICAL row of every slot.
+
+    block_tables: (B, mps) int32 page ids, -1 = unallocated. Returns
+    ((B, n_rows) int32 physical rows into a (P*page_size, ...) flattened pool,
+    (B, n_rows) bool page-allocated mask). Rows of unallocated pages map to 0
+    (callers must mask with the bool) — keeps the gather in-bounds."""
+    j = jnp.arange(n_rows)
+    page = jnp.take_along_axis(
+        block_tables, jnp.broadcast_to(j // page_size,
+                                       (block_tables.shape[0], n_rows)), axis=1)
+    ok = page >= 0
+    phys = jnp.where(ok, page * page_size + j[None, :] % page_size, 0)
+    return phys, ok
+
+
+def paged_write_target(block_tables, idx, page_size: int):
+    """Write-side block-table lookup shared by every paged decode path.
+    idx: (B,) logical row per slot (sequence position, or ring index for the
+    hybrid ring). Returns ((B,) flattened pool row, (B,) bool valid — false
+    where the page is unallocated). Callers add their own in-range gate on
+    idx before passing it (it must be >= 0 here)."""
+    mps = block_tables.shape[1]
+    page = jnp.take_along_axis(
+        block_tables, jnp.clip(idx // page_size, 0, mps - 1)[:, None],
+        axis=1)[:, 0]
+    return page * page_size + idx % page_size, page >= 0
+
+
+def paged_write_rows(pool, rows, row_idx, valid):
+    """Scatter one new row per slot into a flattened page pool.
+    pool: (P, ps, ...) -> returns same shape; rows: (B, ...) new values;
+    row_idx: (B,) flattened pool row per slot; valid: (B,) bool (invalid
+    writes are dropped — freed slots, unallocated pages)."""
+    P, ps = pool.shape[:2]
+    flat = pool.reshape((P * ps,) + pool.shape[2:])
+    idx = jnp.where(valid, row_idx, P * ps)          # OOB -> dropped
+    flat = flat.at[idx].set(rows.astype(flat.dtype), mode="drop")
+    return flat.reshape(pool.shape)
+
+
+def attention_decode_paged(params, x, dims: AttnDims, pool_k, pool_v,
+                           block_tables, cache_pos, positions):
+    """Single-token decode against a PAGED KV cache (vLLM-style block tables).
+
+    x: (B,1,D); pool_k/pool_v: (P, page_size, KV, hd) — ONE layer's slice of
+    the shared page pool (no batch axis: memory scales with allocated pages,
+    not slots x s_max); block_tables: (B, mps) int32, -1 = unallocated;
+    cache_pos: (B,) per-slot positions (the paged path is serving-only, so
+    positions are always a vector). Returns (out, new_pool_k, new_pool_v).
+
+    Writes go through block-table indirection: slot b's new K/V row lands in
+    page block_tables[b, pos//ps] at offset pos % ps; writes from slots whose
+    position is out of range (>= mps*ps — freed slots at INACTIVE_POS) or
+    whose page is unallocated are DROPPED. Reads gather the slot's logical
+    view (B, mps*ps, KV, hd) from its own pages and mask to
+    allocated-page AND position <= pos (AND the sliding window) — rows of
+    never-allocated trailing pages carry an INACTIVE_POS key position, so
+    they can never win the causal mask for a live slot.
+
+    With page_size == s_max (one page per slot) this reproduces the dense
+    ``attention_decode`` vector path bit-for-bit: the gathered view IS the
+    slot's dense cache row and the masks coincide."""
+    q, k, v = _qkv(params, x, dims, positions)
+    P, ps, KV, hd = pool_k.shape
+    B = q.shape[0]
+    mps = block_tables.shape[1]
+    n_rows = mps * ps
+    H = dims.num_heads
+    G = H // KV
+    qg = q.reshape(B, 1, KV, G, hd)
+    b_idx = jnp.arange(B)
+
+    # ---- write the new K/V row via the block table
+    safe_pos = jnp.clip(cache_pos, 0, n_rows - 1)
+    w_row, page_ok = paged_write_target(block_tables, safe_pos, ps)
+    w_ok = (cache_pos >= 0) & (cache_pos < n_rows) & page_ok
+    pool_k = paged_write_rows(pool_k, k[:, 0], w_row, w_ok)
+    pool_v = paged_write_rows(pool_v, v[:, 0], w_row, w_ok)
+
+    # ---- gather each slot's logical view and attend
+    phys, ok = paged_row_indices(block_tables, ps, n_rows)
+    flat_k = pool_k.reshape(P * ps, KV, hd)
+    flat_v = pool_v.reshape(P * ps, KV, hd)
+    view_k = flat_k[phys]                            # (B, n_rows, KV, hd)
+    view_v = flat_v[phys]
+    k_positions = jnp.where(ok, jnp.arange(n_rows)[None, :], INACTIVE_POS)
+    m, l, acc = _decode_sdpa_local(qg, view_k, view_v, cache_pos[:, None],
+                                   k_positions, dims.window, hd)
+    out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, 1, H * hd)
+    return out @ params["wo"].astype(x.dtype), pool_k, pool_v
 
 
 # ---------------------------------------------------------------- MLP

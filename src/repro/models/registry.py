@@ -13,6 +13,7 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig, Family, ShapeConfig
 from repro.models import encdec, hybrid, ssm, transformer
 from repro.models.encdec import ENC_LEN
+from repro.models.layers import INACTIVE_POS
 
 _FAMILY_MODULES = {
     Family.DENSE: transformer,
@@ -79,18 +80,34 @@ def get_model(cfg: ArchConfig) -> Model:
 
 
 # ------------------------------------------------------------------ serving
-# Every family's cache obeys one layout convention: leaves are (L, B, ...)
-# with the slot/batch axis at position 1, plus a "pos" leaf that is a scalar
-# (lockstep batch) or a (B,) per-slot position vector. The serving engine
-# relies on that convention to splice per-request prefill caches into the
-# resident batched cache without touching other slots.
+# Cache conventions. DENSE: every family's cache leaves are (L, B, ...) with
+# the slot/batch axis at position 1, plus a "pos" leaf that is a scalar
+# (lockstep batch) or a (B,) per-slot position vector. PAGED
+# (init_paged_cache): the attention K/V leaves (and the hybrid ring's
+# "slot_pos") are replaced by SHARED page pools (L, num_pages, page_size, ...)
+# with NO batch axis, plus a "block_tables" leaf (B, max_pages_per_slot)
+# int32 mapping each slot's logical blocks to pool pages (-1 = unallocated) —
+# memory scales with allocated pages, not slots x s_max. Per-slot leaves
+# without a sequence axis (SSM state, encdec cross K/V, "pos") keep the dense
+# layout. A slot whose pos is >= layers.INACTIVE_POS is free: its writes are
+# dropped by every decode path, so freed rows are bit-stable. The serving
+# engine relies on these conventions to splice per-request prefill caches
+# into the resident cache without touching other slots.
 
-def vectorize_cache_pos(cache, batch: int):
+# pool leaves of a paged cache (when "block_tables" is present); everything
+# else keeps the dense (L, B, ...) per-slot layout
+PAGED_POOL_LEAVES = ("k", "v", "slot_pos")
+
+
+def vectorize_cache_pos(cache, batch: int, inactive: bool = False):
     """Scalar-pos cache (init_cache output) -> per-slot (B,) position cache
-    for the continuous-batching decode path."""
+    for the continuous-batching decode path. ``inactive=True`` starts every
+    slot at the INACTIVE_POS sentinel (no slot admitted yet), so empty slots
+    never scatter stale K/V rows while idle."""
     pos = cache["pos"]
     if jnp.ndim(pos) == 0:
-        cache = dict(cache, pos=jnp.full((batch,), pos, jnp.int32))
+        fill = INACTIVE_POS if inactive else pos
+        cache = dict(cache, pos=jnp.full((batch,), fill, jnp.int32))
     return cache
 
 
@@ -121,12 +138,119 @@ def insert_cache_rows(cache, request_cache, slots):
     return out
 
 
-def extract_cache_slot(cache, slot: int):
-    """Batch-1 view of one slot's cache entries (testing/debug helper)."""
+# ------------------------------------------------------------------ paged
+def cache_capacity(cfg: ArchConfig, s_max: int) -> int:
+    """Per-slot sequence capacity of the attention cache: the hybrid family
+    keeps a ring buffer of width min(window, s_max); everything else stores
+    the full s_max rows. This is the row count the page allocator must be
+    able to cover for one slot."""
+    if cfg.family == Family.HYBRID:
+        return min(cfg.window, s_max)
+    return s_max
+
+
+def init_paged_cache(model: Model, batch: int, s_max: int, *, page_size: int,
+                     num_pages: int, dtype=jnp.bfloat16):
+    """Paged serving cache: the dense per-slot K/V (and hybrid ring
+    ``slot_pos``) leaves become shared page pools (L, num_pages, page_size,
+    ...) addressed through per-slot ``block_tables`` (B, max_pages_per_slot).
+    All other leaves (SSM state, encdec cross K/V, conv carries) keep the
+    dense per-slot layout — they are O(1) in sequence length. ``pos`` starts
+    at the INACTIVE_POS sentinel for every slot (nothing admitted).
+
+    s_max must be a page_size multiple so the paged logical view is exactly
+    s_max rows (the bit-exactness anchor vs the dense path). Hybrid caches
+    additionally carry a ``ring_iota`` (W,) leaf whose shape tells the decode
+    path the ring width. The SSM family has no K/V to page — callers should
+    keep it dense."""
+    cfg = model.cfg
+    if cfg.family == Family.SSM:
+        raise ValueError("rwkv/ssm caches are O(1) in s_max; use init_cache")
+    if s_max % page_size:
+        raise ValueError(f"s_max {s_max} must be a multiple of page_size "
+                         f"{page_size} (paged view == dense view)")
+    dense = model.init_cache(batch, s_max, dtype)
+    mps = s_max // page_size
+    out = {}
+    for key, leaf in dense.items():
+        if key in ("k", "v"):               # (L, B, C, KV, hd) -> pool
+            Lr, _, _, KV, hd = leaf.shape
+            out[key] = jnp.zeros((Lr, num_pages, page_size, KV, hd),
+                                 leaf.dtype)
+        elif key == "slot_pos":             # hybrid ring positions -> pool
+            out[key] = jnp.full((leaf.shape[0], num_pages, page_size), -1,
+                                jnp.int32)
+        elif key == "pos":
+            out[key] = jnp.full((batch,), INACTIVE_POS, jnp.int32)
+        else:
+            out[key] = leaf
+    out["block_tables"] = jnp.full((batch, mps), -1, jnp.int32)
+    if cfg.family == Family.HYBRID:
+        out["ring_iota"] = jnp.arange(cache_capacity(cfg, s_max),
+                                      dtype=jnp.int32)
+    return out
+
+
+def insert_cache_rows_paged(cache, request_cache, slots, phys_rows):
+    """Paged variant of insert_cache_rows: splice a batch-K DENSE prefill
+    cache into the page pools of a paged serving cache.
+
+    ``phys_rows`` is a (K, C) int32 map from each request's logical cache row
+    (C = the family's per-slot capacity, s_max or the ring width) to a
+    flattened pool row (page * page_size + offset); entries >= num_pages *
+    page_size (unallocated logical blocks beyond the request's reservation)
+    are DROPPED by the scatter, so a short request can never write into pages
+    it does not own. Per-slot leaves and "pos" splice exactly like the dense
+    path; "block_tables" is host-managed by the engine and passes through."""
+    slots = jnp.asarray(slots, jnp.int32)
+    phys_rows = jnp.asarray(phys_rows, jnp.int32)
     out = {}
     for key, leaf in cache.items():
+        if key in ("block_tables", "ring_iota"):
+            out[key] = leaf
+            continue
+        req = request_cache[key]
+        if key in PAGED_POOL_LEAVES:
+            Lr, P, ps = leaf.shape[:3]
+            flat = leaf.reshape((Lr, P * ps) + leaf.shape[3:])
+            C = phys_rows.shape[1]
+            flat = flat.at[:, phys_rows].set(
+                req[:, :, :C].astype(leaf.dtype), mode="drop")
+            out[key] = flat.reshape(leaf.shape)
+        elif key == "pos":
+            out[key] = leaf.at[slots].set(jnp.asarray(req, leaf.dtype))
+        else:
+            out[key] = leaf.at[:, slots].set(req.astype(leaf.dtype))
+    return out
+
+
+def extract_cache_slot(cache, slot: int):
+    """Batch-1 view of one slot's cache entries (testing/debug helper). For a
+    paged cache, pool leaves are gathered through the slot's block table into
+    the dense per-slot layout (rows of unallocated pages read as zeros / -1,
+    matching a never-written dense cache)."""
+    bt = cache.get("block_tables")
+    out = {}
+    for key, leaf in cache.items():
+        if key in ("block_tables", "ring_iota"):
+            continue
         if key == "pos":
             out[key] = leaf if jnp.ndim(leaf) == 0 else leaf[slot]
+        elif bt is not None and key in PAGED_POOL_LEAVES:
+            from repro.models.layers import paged_row_indices
+            Lr, P, ps = leaf.shape[:3]
+            n_rows = bt.shape[1] * ps
+            if key == "slot_pos":
+                n_rows = cache["ring_iota"].shape[0]
+            phys, ok = paged_row_indices(bt[slot:slot + 1], ps, n_rows)
+            flat = leaf.reshape((Lr, P * ps) + leaf.shape[3:])
+            view = flat[:, phys[0]]
+            fill = -1 if key == "slot_pos" else 0
+            mask = ok[0].reshape((1, -1) + (1,) * (view.ndim - 2))
+            view = jnp.where(mask, view, fill)
+            if key in ("k", "v") and "ring_iota" in cache:
+                view = view[:, : cache["ring_iota"].shape[0]]
+            out[key] = view[:, None]        # (L, 1, C, ...)
         else:
             out[key] = leaf[:, slot:slot + 1]
     return out

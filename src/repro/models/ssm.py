@@ -224,11 +224,15 @@ def cache_logical(cfg: ArchConfig):
 def decode_step(params, cfg: ArchConfig, token, cache, *, compute_dtype=jnp.bfloat16,
                 **_):
     x = L.embed_lookup(params["embed"], token, compute_dtype)  # (B,1,D)
+    pos = cache["pos"]
 
     def body(x, xs):
         lp, S, x_tm, x_cm = xs
         st = {"S": S, "x_tm": x_tm, "x_cm": x_cm}
         x, new_st = _layer_apply(cfg, lp, x, st, "scan")
+        # freed serving slots keep their recurrent state bit-for-bit; rwkv
+        # has no KV cache to page, so this is the whole freed-slot story
+        new_st = L.freeze_inactive_rows(pos, new_st, st)
         return x, (new_st["S"], new_st["x_tm"], new_st["x_cm"])
 
     x, (S, x_tm, x_cm) = jax.lax.scan(

@@ -151,11 +151,13 @@ def _super_apply_unrolled(cfg: ArchConfig, sp, x, positions, img, attn_impl):
     return _cross_apply(cfg, sp["cross"], x, img, attn_impl)
 
 
-def _super_decode_unrolled(cfg: ArchConfig, sp, x, ck, cv, img, pos, positions):
+def _super_decode_unrolled(cfg: ArchConfig, sp, x, ck, cv, img, pos, positions,
+                           block_tables=None):
     cks, cvs = [], []
     for i in range(cfg.cross_attn_every):
         lp = jax.tree.map(lambda t: t[i], sp["blocks"])
-        x, c1, c2 = _decode_layer(cfg, lp, x, ck[i], cv[i], pos, positions)
+        x, c1, c2 = _decode_layer(cfg, lp, x, ck[i], cv[i], pos, positions,
+                                  block_tables)
         cks.append(c1)
         cvs.append(c2)
     x = _cross_apply(cfg, sp["cross"], x, img, "einsum")
@@ -255,12 +257,20 @@ def cache_logical(cfg: ArchConfig):
     return {"k": kv, "v": kv, "pos": ()}
 
 
-def _decode_layer(cfg: ArchConfig, lp, x, ck, cv, pos, positions):
+def _decode_layer(cfg: ArchConfig, lp, x, ck, cv, pos, positions,
+                  block_tables=None):
     """One decode layer: returns (x, new_ck, new_cv). Exposed for roofline
-    probes (launch/probes.py) as well as the decode scan body."""
+    probes (launch/probes.py) as well as the decode scan body. When
+    ``block_tables`` is given, ck/cv are one layer's (P, ps, KV, hd) page-pool
+    slice and attention goes through the paged path (models/layers.py)."""
     h = L.apply_norm(x, lp["ln1"], cfg.norm)
-    out, ck, cv = L.attention_decode(lp["attn"], h, _attn_dims(cfg), ck, cv,
-                                     pos, positions)
+    if block_tables is not None:
+        out, ck, cv = L.attention_decode_paged(lp["attn"], h, _attn_dims(cfg),
+                                               ck, cv, block_tables, pos,
+                                               positions)
+    else:
+        out, ck, cv = L.attention_decode(lp["attn"], h, _attn_dims(cfg), ck,
+                                         cv, pos, positions)
     x = x + out
     h = L.apply_norm(x, lp["ln2"], cfg.norm)
     if cfg.moe:
@@ -285,9 +295,13 @@ def decode_step(params, cfg: ArchConfig, token, cache, *, image_embeds=None,
     alias scan ys to donated inputs.
 
     cache["pos"] may be a scalar (lockstep batch) or a (B,) per-slot vector
-    (serving engine with continuous batching)."""
+    (serving engine with continuous batching). A cache carrying a
+    "block_tables" leaf is PAGED (models/registry.py::init_paged_cache):
+    "k"/"v" are (L, P, page_size, KV, hd) page pools and decode routes
+    through the block-table-indirect attention path."""
     B = token.shape[0]
     pos = cache["pos"]
+    bt = cache.get("block_tables")
     positions = L.decode_positions(pos, B)
     x = L.embed_lookup(params["embed"], token, compute_dtype)
 
@@ -305,7 +319,7 @@ def decode_step(params, cfg: ArchConfig, token, cache, *, image_embeds=None,
             ck = jax.lax.dynamic_index_in_dim(ck_all, i, 0, keepdims=False)
             cv = jax.lax.dynamic_index_in_dim(cv_all, i, 0, keepdims=False)
             x, ck, cv = _super_decode_unrolled(cfg, sp, x, ck, cv, img, pos,
-                                               positions)
+                                               positions, bt)
             ck_all = jax.lax.dynamic_update_index_in_dim(ck_all, ck, i, 0)
             cv_all = jax.lax.dynamic_update_index_in_dim(cv_all, cv, i, 0)
             return x, ck_all, cv_all
@@ -319,7 +333,7 @@ def decode_step(params, cfg: ArchConfig, token, cache, *, image_embeds=None,
             lp = _index_tree(params["layers"], i)
             ck = jax.lax.dynamic_index_in_dim(ck_all, i, 0, keepdims=False)
             cv = jax.lax.dynamic_index_in_dim(cv_all, i, 0, keepdims=False)
-            x, ck, cv = _decode_layer(cfg, lp, x, ck, cv, pos, positions)
+            x, ck, cv = _decode_layer(cfg, lp, x, ck, cv, pos, positions, bt)
             ck_all = jax.lax.dynamic_update_index_in_dim(ck_all, ck, i, 0)
             cv_all = jax.lax.dynamic_update_index_in_dim(cv_all, cv, i, 0)
             return x, ck_all, cv_all
@@ -330,5 +344,5 @@ def decode_step(params, cfg: ArchConfig, token, cache, *, image_embeds=None,
     x = L.apply_norm(x, params["final_norm"], cfg.norm)
     w_un = params["unembed"]["w"] if not cfg.tie_embeddings else None
     logits = L.lm_logits(params["embed"], x, w_un, vocab=cfg.vocab_size)
-    new_cache = {"k": new_k, "v": new_v, "pos": pos + 1}
+    new_cache = dict(cache, k=new_k, v=new_v, pos=pos + 1)
     return logits.astype(jnp.float32), new_cache

@@ -1,43 +1,65 @@
-"""Serving subsystem: batched-prefill engine, request scheduler, metrics.
+"""Serving subsystem: batched-prefill engine, paged KV cache, scheduler,
+metrics.
 
 The paper's headline FPS ladder comes from restructuring how work is fed to
 the accelerator — overlapping movement with compute and keeping state
-resident — without changing the math. This package reproduces that lesson at
-the request level: prefill work is fused into one dispatch, decode state
-stays resident in per-slot caches, and the scheduler keeps every slot busy.
+resident within a hard on-chip budget — without changing the math. This
+package reproduces that lesson at the request level twice over: prefill work
+is fused into one dispatch, decode state stays resident in per-slot caches,
+and (since PR 2) the KV cache is PAGED so resident memory tracks live
+tokens, not the slots x s_max worst case — the serving analogue of the
+paper's Ultra-RAM layout making memory the first-class design constraint.
 
 Request lifecycle
 -----------------
 
-1. **submit** — ``ServeEngine.submit(prompt, gen_len, priority)`` wraps the
-   prompt in a :class:`~repro.serve.scheduler.Request` and enqueues it on the
+1. **submit** — ``ServeEngine.submit(prompt, gen_len, priority)`` validates
+   the request (non-empty prompt, gen_len >= 0, rows it will write fit the
+   per-slot bound and — paged — the total pool), wraps it in a
+   :class:`~repro.serve.scheduler.Request` and enqueues it on the
    :class:`~repro.serve.scheduler.Scheduler` (priority heap, FIFO within a
-   priority level). Metrics record the arrival time.
-2. **admit / prefill** — the moment batch slots are free, the engine pops
-   waiting requests and prefills them with ONE jitted call
-   (``steps.make_prefill(return_cache=True)``): prompts are teacher-forced
-   through ``decode_step`` under a single ``lax.scan`` at the admitted
-   group's batch size (same-length requests batch together; never the full
-   slot width), producing each request's full cache state plus next-token
-   logits. The group's cache rows are spliced into exactly the admitted
-   slots of the resident batched cache (a batch-axis scatter) — other slots'
-   entries are untouched bit-for-bit (the prefill-isolation guarantee). The
-   first generated token is sampled from the prefill logits; its timestamp
-   is the request's time-to-first-token.
-3. **decode** — ``step()`` runs one batched decode tick for all slots against
-   the per-slot-position cache (``cache["pos"]`` is a (B,) vector, so slots
-   at different sequence depths coexist), samples one token per active slot
-   (greedy or temperature), and retires requests that reach ``gen_len``.
-4. **complete** — a finished request frees its slot; the scheduler admits the
-   next waiting request on the same tick (continuous batching). Metrics
-   record completion and compute per-request TTFT / tokens-per-second and
-   engine-level p50/p95 latency and throughput.
+   priority level). Metrics record the arrival time. Validation here keeps
+   admission infallible: a bad request can never strand popped good ones.
+2. **admit / prefill** — the moment batch slots are free, the engine PEEKS
+   at the queue head; with a paged cache it first reserves the request's
+   worst-case page count from the host-side free list
+   (:class:`~repro.serve.engine.PageAllocator`) and DEFERS — strict
+   priority/FIFO, no skip-ahead — when pages are short. Admitted requests
+   are prefilled with ONE jitted call (``steps.make_prefill(
+   return_cache=True)``): prompts are teacher-forced through ``decode_step``
+   under a single ``lax.scan`` at the admitted group's batch size
+   (same-length requests batch together; never the full slot width),
+   producing each request's full cache state plus next-token logits. The
+   group's rows are spliced into exactly the admitted slots — a batch-axis
+   scatter for the dense cache (``registry.insert_cache_rows``), a scatter
+   into exactly the slots' OWN pages for the paged one
+   (``registry.insert_cache_rows_paged``) — other slots' entries are
+   untouched bit-for-bit (the prefill-isolation guarantee). The first
+   generated token is sampled from the prefill logits; its timestamp is the
+   request's time-to-first-token.
+3. **decode** — ``step()`` runs one batched decode tick for all slots
+   against the per-slot-position cache (``cache["pos"]`` is a (B,) vector,
+   so slots at different sequence depths coexist). Paged caches route
+   attention through block-table indirection
+   (``layers.attention_decode_paged``; the hybrid ring pages too, and the
+   SSM state stays dense — it is O(1) in sequence length). One token per
+   active slot is sampled (greedy or temperature); requests that reach
+   ``gen_len`` retire.
+4. **complete** — ``_finish`` parks the slot's cache position at the
+   ``layers.INACTIVE_POS`` sentinel (all decode paths DROP writes from such
+   slots and freeze their recurrent state, so freed rows are bit-stable),
+   zeroes the feedback token, and returns the slot's pages to the free
+   list; the scheduler admits the next waiting request on the same tick
+   (continuous batching). Metrics record completion and compute per-request
+   TTFT / tokens-per-second and engine-level p50/p95 latency and throughput
+   (idempotent ``on_done``; wall clamped so injectable test clocks cannot
+   report absurd rates).
 
 ``launch/serve.py`` remains a thin CLI shim over this package.
 """
-from repro.serve.engine import ServeEngine
+from repro.serve.engine import PageAllocator, ServeEngine
 from repro.serve.metrics import MetricsRecorder
 from repro.serve.scheduler import Request, RequestState, Scheduler
 
-__all__ = ["ServeEngine", "MetricsRecorder", "Request", "RequestState",
-           "Scheduler"]
+__all__ = ["ServeEngine", "PageAllocator", "MetricsRecorder", "Request",
+           "RequestState", "Scheduler"]

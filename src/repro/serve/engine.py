@@ -1,4 +1,4 @@
-"""Batched-prefill continuous-batching serve engine.
+"""Batched-prefill continuous-batching serve engine with a paged KV cache.
 
 Core invariants (see the package docstring for the request lifecycle):
 
@@ -10,17 +10,32 @@ Core invariants (see the package docstring for the request lifecycle):
   prefilled jointly at batch K (the batched-prefill fan-in); a lone request
   runs at batch 1.
 * **Slot isolation.** The batch-K prefill cache is spliced into the resident
-  batched cache with ``registry.insert_cache_rows`` — a scatter on the batch
-  axis covering exactly the admitted slots — so concurrent prefills cannot
-  perturb other slots' cache entries or positions.
-* **Per-slot positions.** The batched cache's ``pos`` is a (B,) vector, so
-  slots at different sequence depths decode together in one tick.
-* **Continuous batching.** The scheduler admits waiting requests the moment a
-  slot frees, on the same tick.
+  cache with ``registry.insert_cache_rows`` (dense) or
+  ``registry.insert_cache_rows_paged`` (paged: a scatter into exactly the
+  pages the admitted slots own) — other slots' cache entries and positions
+  are untouched bit-for-bit.
+* **Per-slot positions, inactive sentinel.** The resident cache's ``pos`` is
+  a (B,) vector, so slots at different sequence depths decode together in
+  one tick. A freed (or never-admitted) slot's pos is parked at
+  ``layers.INACTIVE_POS``: every decode path drops its cache writes and
+  freezes its recurrent state, so inactive rows are bit-stable — they cannot
+  scatter stale K/V into recycled pages.
+* **Paged KV (vLLM-style block tables).** With ``page_size`` set, K/V live
+  in a shared page pool ``(L, num_pages, page_size, KV, hd)`` addressed
+  through per-slot block tables; a host-side free-list ``PageAllocator``
+  hands pages out at admission and reclaims them on completion. Memory
+  scales with allocated pages — s_max bounds a single request's length (the
+  block-table width), not the pool's footprint, so a long request no longer
+  dictates every slot's memory. ``page_size == s_max`` is the degenerate
+  one-page-per-slot config and reproduces the dense path bit-for-bit.
+* **Continuous batching with page-aware admission.** The scheduler admits
+  waiting requests the moment a slot frees, on the same tick; paged
+  admission PEEKS first and defers (in strict priority/FIFO order) when the
+  free list cannot cover the request's worst-case page count.
 
 Prefill compiles once per distinct prompt length (cached); pad or bucket
-prompts client-side to bound compilation count. Chunked prefill and paged KV
-are ROADMAP follow-ons.
+prompts client-side to bound compilation count. Chunked prefill, multi-host
+serving, and prompt-length bucketing are ROADMAP follow-ons.
 """
 from __future__ import annotations
 
@@ -33,9 +48,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
+from repro.configs.base import Family
 from repro.launch import steps as steps_mod
-from repro.models.registry import (Model, get_model, insert_cache_rows,
-                                   reduced_config, vectorize_cache_pos)
+from repro.models.layers import INACTIVE_POS
+from repro.models.registry import (Model, cache_capacity, get_model,
+                                   init_paged_cache, insert_cache_rows,
+                                   insert_cache_rows_paged, reduced_config,
+                                   vectorize_cache_pos)
 from repro.serve.metrics import MetricsRecorder
 from repro.serve.scheduler import Request, RequestState, Scheduler
 
@@ -64,8 +83,48 @@ def _jitted_insert_rows():
     return jax.jit(insert_cache_rows, donate_argnums=(0,))
 
 
+@functools.lru_cache(maxsize=1)
+def _jitted_insert_rows_paged():
+    return jax.jit(insert_cache_rows_paged, donate_argnums=(0,))
+
+
+class PageAllocator:
+    """Host-side free-list allocator over a fixed pool of KV-cache pages.
+
+    Pure bookkeeping: page ids index the device pool's page axis; nothing
+    here touches device memory. ``alloc`` is all-or-nothing (a request's
+    worst case is reserved up front, so admission can never strand a
+    half-allocated request) and ``release`` rejects double-frees."""
+
+    def __init__(self, num_pages: int):
+        self.num_pages = num_pages
+        self._free: List[int] = list(range(num_pages - 1, -1, -1))
+        self._held: set = set()
+
+    @property
+    def free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Reserve n pages; returns their ids or None if the free list is
+        short (caller defers admission — nothing is partially allocated)."""
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._held.update(pages)
+        return pages
+
+    def release(self, pages: List[int]):
+        for p in pages:
+            if p not in self._held:
+                raise ValueError(f"double free of page {p}")
+            self._held.discard(p)
+            self._free.append(p)
+
+
 class ServeEngine:
-    """Slot-based continuous-batching engine over a per-slot-position cache.
+    """Slot-based continuous-batching engine over a per-slot-position cache,
+    dense or paged (``page_size``/``num_pages``).
 
     sampling: ``temperature == 0`` is greedy argmax; ``temperature > 0``
     samples from softmax(logits / temperature) with a per-event PRNG fold so
@@ -75,6 +134,8 @@ class ServeEngine:
     def __init__(self, model: Model, params, *, batch_slots: int, s_max: int,
                  compute_dtype=jnp.float32, cache_dtype=None,
                  temperature: float = 0.0, seed: int = 0,
+                 page_size: Optional[int] = None,
+                 num_pages: Optional[int] = None,
                  scheduler: Optional[Scheduler] = None,
                  metrics: Optional[MetricsRecorder] = None):
         self.model = model
@@ -88,14 +149,39 @@ class ServeEngine:
         self.scheduler = scheduler or Scheduler()
         self.metrics = metrics or MetricsRecorder()
 
-        self.cache = vectorize_cache_pos(
-            model.init_cache(batch_slots, s_max, self.cache_dtype), batch_slots)
+        if page_size is not None and model.cfg.family == Family.SSM:
+            log.warning("ssm/rwkv state is O(1) in s_max — ignoring paging")
+            page_size = None
+        self.page_size = page_size
+        self.paged = page_size is not None
+        if self.paged:
+            if s_max % page_size:
+                raise ValueError(f"s_max {s_max} must be a multiple of "
+                                 f"page_size {page_size}")
+            # rows one slot's attention cache can hold (ring width for hybrid)
+            self.capacity = cache_capacity(self.cfg, s_max)
+            self.max_pages_per_slot = s_max // page_size
+            self.num_pages = (num_pages if num_pages is not None
+                              else batch_slots * self.max_pages_per_slot)
+            self.allocator = PageAllocator(self.num_pages)
+            self.slot_pages: List[List[int]] = [[] for _ in range(batch_slots)]
+            self._bt_host = np.full((batch_slots, self.max_pages_per_slot),
+                                    -1, np.int32)
+            self.cache = init_paged_cache(
+                model, batch_slots, s_max, page_size=page_size,
+                num_pages=self.num_pages, dtype=self.cache_dtype)
+            self._insert_rows_paged = _jitted_insert_rows_paged()
+        else:
+            self.cache = vectorize_cache_pos(
+                model.init_cache(batch_slots, s_max, self.cache_dtype),
+                batch_slots, inactive=True)
         self._decode = _jitted_decode(model, compute_dtype)
         self._insert_rows = _jitted_insert_rows()
 
         self.slot_req: List[Optional[Request]] = [None] * batch_slots
         self.cur_token = np.zeros((batch_slots, 1), np.int32)
         self.requests: Dict[int, Request] = {}
+        self.deferrals = 0    # admissions postponed for lack of free pages
         self._next_rid = 0
         self._key = jax.random.PRNGKey(seed)
         self._events = 0      # PRNG fold counter (one per sampling event)
@@ -105,6 +191,7 @@ class ServeEngine:
     def build(cls, arch: str = "hymba-1.5b", *, reduced: bool = True,
               batch_slots: int = 4, s_max: int = 64, seed: int = 0,
               quantize_int8: bool = False, temperature: float = 0.0,
+              page_size: Optional[int] = None, num_pages: Optional[int] = None,
               compute_dtype=jnp.float32) -> "ServeEngine":
         """Construct model + params from an arch id; the int8 PTQ path is the
         same structural quantize->dequant-on-load as the paper's C5 (the
@@ -119,7 +206,7 @@ class ServeEngine:
             params = dequantize_params(quantize_params(params), compute_dtype)
         return cls(model, params, batch_slots=batch_slots, s_max=s_max,
                    compute_dtype=compute_dtype, temperature=temperature,
-                   seed=seed)
+                   page_size=page_size, num_pages=num_pages, seed=seed)
 
     # ------------------------------------------------------------ extras
     def _decode_extras(self) -> dict:
@@ -147,25 +234,82 @@ class ServeEngine:
         toks = jax.random.categorical(key, row / self.temperature, axis=-1)
         return np.asarray(toks, np.int32)
 
+    # ------------------------------------------------------------ paging
+    @staticmethod
+    def _rows_needed(prompt_len: int, gen_len: int) -> int:
+        """Cache rows a request writes: prefill writes positions
+        0..prompt_len-1; the gen_len-1 fed-back decode tokens write at
+        prompt_len..prompt_len+gen_len-2 (the final sampled token is never
+        written)."""
+        return prompt_len + max(int(gen_len) - 1, 0)
+
+    def _pages_for_rows(self, rows: int) -> int:
+        """THE page-accounting rule — submit() validation and admit()
+        reservation must agree on it or admission stops being infallible."""
+        return -(-min(rows, self.capacity) // self.page_size)
+
+    def _pages_needed(self, req: Request) -> int:
+        return self._pages_for_rows(
+            self._rows_needed(len(req.prompt), req.gen_len))
+
+    def _phys_rows(self, slots: List[int]) -> np.ndarray:
+        """(K, capacity) flattened pool-row index per logical cache row for a
+        prefill group; rows beyond a slot's reservation map out of bounds and
+        are dropped by the paged splice."""
+        ps = self.page_size
+        C = self.capacity
+        oob = self.num_pages * ps
+        phys = np.full((len(slots), C), oob, np.int32)
+        j = np.arange(C)
+        for i, slot in enumerate(slots):
+            pages = np.asarray(self.slot_pages[slot], np.int64)
+            cov = min(C, len(pages) * ps)
+            phys[i, :cov] = pages[j[:cov] // ps] * ps + j[:cov] % ps
+        return phys
+
+    def resident_cache_bytes(self) -> int:
+        """Device bytes held by the resident serving cache (the paged pool
+        plus per-slot leaves; for dense, the full slots x s_max block)."""
+        return int(sum(l.size * l.dtype.itemsize
+                       for l in jax.tree.leaves(self.cache)))
+
+    @property
+    def free_pages(self) -> int:
+        return self.allocator.free if self.paged else 0
+
     # ------------------------------------------------------------ lifecycle
     def submit(self, prompt, gen_len: int, priority: int = 0) -> Request:
         """Enqueue a request; admission happens on the next step()/run().
 
-        Rejects up front anything that cannot fit the slot cache: prefill
-        writes K/V at positions 0 .. prompt_len-1 and the gen_len-1 fed-back
-        decode tokens write at prompt_len .. prompt_len+gen_len-2 (the final
-        sampled token is never written), so the last write lands at index
-        prompt_len+gen_len-2 and must stay < s_max. A write past s_max would
-        be silently DROPPED by the scatter (attention then reads
-        never-written zero rows — wrong tokens, no error). Validating here
-        also keeps admission infallible, so a bad request can never strand
-        already-popped good ones."""
+        Rejects up front anything that can never be served, so admission is
+        infallible and a bad request cannot strand already-popped good ones:
+        empty prompts (a zero-length prefill scan has undefined logits),
+        negative gen_len, and requests whose written rows
+        (prompt_len + gen_len - 1, see _rows_needed) exceed the per-slot
+        bound — s_max for the dense cache (a write past s_max would be
+        silently DROPPED by the scatter and attention would read
+        never-written rows), the block-table span AND total pool capacity
+        for the paged cache. Transient page shortage is NOT rejected here:
+        admit() defers until enough pages free up."""
         prompt = np.asarray(prompt, np.int32)
-        if len(prompt) > self.s_max or \
-                len(prompt) + int(gen_len) - 1 > self.s_max:
+        if prompt.ndim != 1:
+            raise ValueError(f"prompt must be a 1-D token vector, got shape "
+                             f"{prompt.shape}")
+        if prompt.size == 0:
+            raise ValueError("empty prompt: prefill needs at least one token")
+        if int(gen_len) < 0:
+            raise ValueError(f"gen_len must be >= 0, got {gen_len}")
+        rows = self._rows_needed(len(prompt), gen_len)
+        if len(prompt) > self.s_max or rows > self.s_max:
             raise ValueError(
                 f"prompt_len {len(prompt)} + gen_len {gen_len} does not fit "
                 f"s_max {self.s_max}; raise s_max or shorten the request")
+        if self.paged:
+            need = self._pages_for_rows(rows)
+            if need > self.num_pages:
+                raise ValueError(
+                    f"request needs {need} pages but the pool only has "
+                    f"{self.num_pages}; grow num_pages")
         rid = self._next_rid
         self._next_rid += 1
         req = Request(rid=rid, prompt=prompt,
@@ -190,13 +334,29 @@ class ServeEngine:
         prefilled JOINTLY — one dispatch fills K slots (the batched-prefill
         part of the engine; mixed lengths fall back to one group each).
         Isolation holds either way: the group's batch-K cache rows scatter
-        into exactly the group's slots."""
+        into exactly the group's slots (dense) or pages (paged).
+
+        Paged admission PEEKS before popping: when the free-page list cannot
+        cover the head request's worst case, admission stops — the request
+        stays queued at the head (strict priority/FIFO, no skip-ahead that
+        could starve long requests) until completions release pages."""
         pairs = []
         for slot in self.free_slots:
-            req = self.scheduler.next_request()
+            req = self.scheduler.peek()
             if req is None:
                 break
+            if self.paged:
+                pages = self.allocator.alloc(self._pages_needed(req))
+                if pages is None:
+                    self.deferrals += 1
+                    break
+                self.slot_pages[slot] = pages
+                self._bt_host[slot, :] = -1
+                self._bt_host[slot, :len(pages)] = pages
+            self.scheduler.next_request()       # pop the peeked head
             pairs.append((slot, req))
+        if self.paged and pairs:
+            self.cache["block_tables"] = jnp.asarray(self._bt_host)
         groups: Dict[int, list] = {}
         for slot, req in pairs:
             groups.setdefault(len(req.prompt), []).append((slot, req))
@@ -206,8 +366,9 @@ class ServeEngine:
 
     def _prefill_group(self, group):
         """Jointly prefill K same-length requests into their slots. Cannot
-        fail on request contents: submit() already validated capacity, so
-        popped requests are never stranded mid-admission."""
+        fail on request contents: submit() already validated capacity and
+        admit() already reserved pages, so popped requests are never
+        stranded mid-admission."""
         plen = len(group[0][1].prompt)
         prompts = jnp.asarray(np.stack([r.prompt for _, r in group]))  # (K,P)
         for _, req in group:
@@ -215,8 +376,14 @@ class ServeEngine:
         logits, rcache = self._prefill_fn()(
             self.params,
             {"tokens": prompts, **self._prefill_extras(len(group))})
-        slots = jnp.asarray(np.array([s for s, _ in group], np.int32))
-        self.cache = self._insert_rows(self.cache, rcache, slots)
+        slot_ids = [s for s, _ in group]
+        slots = jnp.asarray(np.array(slot_ids, np.int32))
+        if self.paged:
+            self.cache = self._insert_rows_paged(
+                self.cache, rcache, slots,
+                jnp.asarray(self._phys_rows(slot_ids)))
+        else:
+            self.cache = self._insert_rows(self.cache, rcache, slots)
         toks = self._sample_rows(logits)
         for i, (slot, req) in enumerate(group):
             req.state = RequestState.RUNNING
@@ -232,10 +399,23 @@ class ServeEngine:
                 self._finish(slot)
 
     def _finish(self, slot: int):
+        """Retire a slot: park its cache position at the INACTIVE_POS
+        sentinel (decode drops its writes from now on — freed rows stay
+        bit-stable), zero its feedback token, and return its pages to the
+        free list. Idempotent: a second call is a no-op."""
         req = self.slot_req[slot]
+        if req is None:
+            return
         req.state = RequestState.DONE
         self.metrics.on_done(req.rid)
         self.slot_req[slot] = None
+        self.cur_token[slot, 0] = 0
+        self.cache["pos"] = self.cache["pos"].at[slot].set(INACTIVE_POS)
+        if self.paged:
+            self.allocator.release(self.slot_pages[slot])
+            self.slot_pages[slot] = []
+            self._bt_host[slot, :] = -1
+            self.cache["block_tables"] = jnp.asarray(self._bt_host)
 
     def step(self) -> int:
         """Admit waiting requests, then one decode tick for every active
@@ -255,7 +435,7 @@ class ServeEngine:
             self.metrics.on_token(req.rid)
             if req.done:
                 self._finish(slot)
-        self.admit()        # refill freed slots on the SAME tick
+        self.admit()        # refill freed slots/pages on the SAME tick
         return self.active
 
     def drain_completed(self) -> List[Request]:

@@ -48,6 +48,12 @@ def percentile(xs: List[float], q: float) -> float:
     return float(np.percentile(np.asarray(xs, np.float64), q))
 
 
+# Shortest wall interval credited with throughput. Walls below this are clock
+# granularity noise (or an injected test clock that never advanced): dividing
+# by them reports absurd token rates, so summary() clamps the denominator.
+MIN_WALL_S = 1e-6
+
+
 class MetricsRecorder:
     """Collects request lifecycle timestamps and engine counters."""
 
@@ -86,7 +92,11 @@ class MetricsRecorder:
         self.requests[rid].n_tokens += 1
 
     def on_done(self, rid: int):
-        self.requests[rid].t_done = self._clock()
+        # idempotent: a duplicate _finish must not move t_done forward and
+        # skew the latency percentiles
+        rec = self.requests[rid]
+        if rec.t_done is None:
+            rec.t_done = self._clock()
 
     def on_decode_step(self):
         self.decode_steps += 1
@@ -102,7 +112,9 @@ class MetricsRecorder:
         t_end = self._t_stop if self._t_stop is not None else self._clock()
         # without on_start() (engine driven via step(), not run()) there is
         # no wall clock — report NaN like the other missing-data fields, not
-        # a 1e9x-inflated throughput over a zero denominator
+        # a 1e9x-inflated throughput over a zero denominator; positive but
+        # sub-MIN_WALL_S walls clamp to MIN_WALL_S instead of silently
+        # reporting a near-infinite rate
         wall = (t_end - self._t_start) if self._t_start is not None else \
             float("nan")
         return {
@@ -110,8 +122,8 @@ class MetricsRecorder:
             "completed": len(done),
             "wall_s": wall,
             "total_tokens": total_tokens,
-            "throughput_tokens_per_s": (total_tokens / wall if wall > 0
-                                        else float("nan")),
+            "throughput_tokens_per_s": (total_tokens / max(wall, MIN_WALL_S)
+                                        if wall > 0 else float("nan")),
             "decode_steps": self.decode_steps,
             "prefills": self.prefills,
             "prefill_tokens": self.prefill_tokens,

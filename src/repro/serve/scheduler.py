@@ -65,6 +65,15 @@ class Scheduler:
         _, _, req = heapq.heappop(self._heap)
         return req
 
+    def peek(self) -> Optional[Request]:
+        """Head of the queue WITHOUT popping — the engine's paged admission
+        peeks first so a request that cannot be covered by the free-page list
+        defers in place (strict priority/FIFO order, no skip-ahead) instead of
+        being popped and stranded."""
+        if not self._heap:
+            return None
+        return self._heap[0][2]
+
     @property
     def waiting(self) -> int:
         return len(self._heap)

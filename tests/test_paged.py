@@ -1,0 +1,232 @@
+"""Paged KV cache: paged-vs-dense equivalence (the degenerate
+page_size == s_max config must be bit-exact; smaller pages must produce
+identical greedy tokens), page allocator exhaustion/recycling, admission
+deferral when the free list is short, and admission of requests longer than
+an equivalent dense engine's s_max would allow.
+
+Equivalence leans on the design anchor stated in
+``models/layers.py::attention_decode_paged``: the gathered block-table view
+of a slot's pages holds exactly the rows the dense cache would, in the same
+logical order, and masked rows contribute exactly 0 — so greedy argmax
+streams must match token-for-token at ANY page size, and bit-for-bit at the
+degenerate one.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models.registry import (cache_capacity, extract_cache_slot,
+                                   get_model, reduced_config)
+from repro.serve.engine import PageAllocator, ServeEngine
+
+S_MAX = 32
+
+
+@pytest.fixture(scope="module")
+def hymba():
+    cfg = reduced_config(configs.get_config("hymba-1.5b"))
+    model = get_model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = reduced_config(configs.get_config("qwen2.5-32b"))
+    model = get_model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _workload(engine, vocab):
+    """requests > batch_slots so slots recycle mid-run (continuous batching
+    over page alloc/free, not just a single prefill+decode)."""
+    rng = np.random.default_rng(11)
+    gens = [6, 4, 8, 5]
+    return [engine.submit(rng.integers(0, vocab, 8), g) for g in gens]
+
+
+def _run_pair(model, params, page_size, **paged_kw):
+    dense = ServeEngine(model, params, batch_slots=2, s_max=S_MAX)
+    d_reqs = _workload(dense, model.cfg.vocab_size)
+    dense.run()
+    paged = ServeEngine(model, params, batch_slots=2, s_max=S_MAX,
+                        page_size=page_size, **paged_kw)
+    p_reqs = _workload(paged, model.cfg.vocab_size)
+    paged.run()
+    return dense, d_reqs, paged, p_reqs
+
+
+# ------------------------------------------------------------ equivalence
+@pytest.mark.parametrize("arch_fixture", ["qwen", "hymba"])
+def test_degenerate_page_equals_dense_bit_exact(arch_fixture, request):
+    """page_size == s_max (one page per slot): greedy tokens match the dense
+    engine for a slot-recycling workload, and a mid-flight slot's cache —
+    gathered through its block table — is bit-identical to the dense slot
+    (K/V rows, ring positions, recurrent state, pos)."""
+    model, params = request.getfixturevalue(arch_fixture)
+    dense, d_reqs, paged, p_reqs = _run_pair(model, params, S_MAX)
+    for d, p in zip(d_reqs, p_reqs):
+        assert d.tokens == p.tokens
+    # bit-exactness of live cache state: step both engines mid-request
+    de = ServeEngine(model, params, batch_slots=2, s_max=S_MAX)
+    pe = ServeEngine(model, params, batch_slots=2, s_max=S_MAX,
+                     page_size=S_MAX)
+    dr = de.submit(np.arange(1, 9, dtype=np.int32), 10)
+    pr = pe.submit(np.arange(1, 9, dtype=np.int32), 10)
+    for _ in range(4):
+        de.step()
+        pe.step()
+    dc = extract_cache_slot(de.cache, dr.slot)
+    pc = extract_cache_slot(pe.cache, pr.slot)
+    assert set(dc) == set(pc)
+    cap = cache_capacity(model.cfg, S_MAX)
+    for key in dc:
+        d_leaf = np.asarray(dc[key])
+        if key in ("k", "v"):
+            d_leaf = d_leaf[:, :, :cap]
+        np.testing.assert_array_equal(d_leaf, np.asarray(pc[key]),
+                                      err_msg=key)
+
+
+@pytest.mark.parametrize("page_size", [4, 16])
+def test_small_pages_identical_greedy_tokens(qwen, page_size):
+    """page_size < s_max: same greedy streams; the pool is smaller than the
+    dense slots x s_max block for page_size 4 with a workload-sized pool."""
+    model, params = qwen
+    need_pages = -(-(8 + 8 - 1) // page_size)           # worst request
+    dense, d_reqs, paged, p_reqs = _run_pair(
+        model, params, page_size, num_pages=2 * need_pages)
+    for d, p in zip(d_reqs, p_reqs):
+        assert d.tokens == p.tokens
+    assert paged.resident_cache_bytes() < dense.resident_cache_bytes()
+
+
+def test_small_pages_hybrid_ring(hymba):
+    """The hybrid ring (width = window) pages too: ring writes/reads go
+    through the block table and still match the dense ring exactly."""
+    model, params = hymba
+    ps = cache_capacity(model.cfg, S_MAX) // 2          # 2 pages per ring
+    dense, d_reqs, paged, p_reqs = _run_pair(model, params, ps)
+    for d, p in zip(d_reqs, p_reqs):
+        assert d.tokens == p.tokens
+
+
+def test_paged_encdec_equivalence():
+    """Whisper decode: paged self-attn KV + dense cross K/V."""
+    engine_kw = dict(batch_slots=2, s_max=S_MAX)
+    cfg = reduced_config(configs.get_config("whisper-large-v3"))
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    dense = ServeEngine(model, params, **engine_kw)
+    d = dense.submit(np.arange(1, 7, dtype=np.int32), 5)
+    dense.run()
+    paged = ServeEngine(model, params, page_size=8, **engine_kw)
+    p = paged.submit(np.arange(1, 7, dtype=np.int32), 5)
+    paged.run()
+    assert d.tokens == p.tokens and len(p.tokens) == 5
+
+
+def test_paged_vlm_super_layer_equivalence():
+    """VLM decode threads block tables through the super-layer unroll
+    (self-attn paged, gated image cross-attn untouched)."""
+    cfg = reduced_config(configs.get_config("llama-3.2-vision-11b"))
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    dense = ServeEngine(model, params, batch_slots=2, s_max=S_MAX)
+    d = dense.submit(np.arange(1, 9, dtype=np.int32), 5)
+    dense.run()
+    paged = ServeEngine(model, params, batch_slots=2, s_max=S_MAX,
+                        page_size=8)
+    p = paged.submit(np.arange(1, 9, dtype=np.int32), 5)
+    paged.run()
+    assert d.tokens == p.tokens and len(p.tokens) == 5
+
+
+def test_ssm_family_falls_back_to_dense():
+    """rwkv state is O(1) in s_max: paging is a no-op, not an error."""
+    engine = ServeEngine.build("rwkv6-7b", reduced=True, batch_slots=2,
+                               s_max=16, page_size=8)
+    assert not engine.paged
+    req = engine.submit(np.array([1, 2, 3], np.int32), 4)
+    engine.run()
+    assert req.done and len(req.tokens) == 4
+
+
+# ------------------------------------------------------------ allocator
+def test_page_allocator_exhaustion_and_recycling():
+    a = PageAllocator(4)
+    p1 = a.alloc(3)
+    assert sorted(p1) == [0, 1, 2] and a.free == 1
+    assert a.alloc(2) is None and a.free == 1    # all-or-nothing
+    p2 = a.alloc(1)
+    assert a.free == 0
+    a.release(p1)
+    assert a.free == 3
+    assert sorted(a.alloc(3) + p2) == [0, 1, 2, 3]
+    with pytest.raises(ValueError, match="double free"):
+        a.release(p2 + p2)
+
+
+def test_admission_defers_until_pages_free(qwen):
+    """Pool covers ONE request's worst case: the second waits (deferral
+    counter ticks) and is admitted only after the first's pages release —
+    and both still complete with full token counts."""
+    model, params = qwen
+    engine = ServeEngine(model, params, batch_slots=2, s_max=S_MAX,
+                         page_size=8, num_pages=3)      # need 2 pages/request
+    a = engine.submit(np.arange(1, 9, dtype=np.int32), 5)
+    b = engine.submit(np.arange(9, 17, dtype=np.int32), 5)
+    engine.step()
+    assert a.slot is not None and b.slot is None
+    assert engine.deferrals >= 1
+    engine.run()
+    assert a.done and b.done
+    assert len(a.tokens) == 5 and len(b.tokens) == 5
+    assert engine.free_pages == engine.num_pages         # fully recycled
+
+
+def test_pool_exhaustion_recycles_across_many_requests(qwen):
+    """8 requests through a pool that can hold ~2 concurrently: slots defer,
+    pages recycle, everything completes (the continuous-batching loop cannot
+    deadlock on page pressure)."""
+    model, params = qwen
+    engine = ServeEngine(model, params, batch_slots=4, s_max=S_MAX,
+                         page_size=8, num_pages=4)
+    rng = np.random.default_rng(3)
+    reqs = [engine.submit(rng.integers(0, model.cfg.vocab_size, 8), 4)
+            for _ in range(8)]
+    engine.run()
+    assert all(r.done and len(r.tokens) == 4 for r in reqs)
+    assert engine.deferrals > 0
+    assert engine.free_pages == engine.num_pages
+
+
+def test_long_request_admittable_when_pool_allows(qwen):
+    """The acceptance case: rows = prompt+gen-1 = 56 exceeds a dense
+    engine's s_max=32 equivalent, but the paged engine admits it because
+    admission is bounded by pool capacity (and the block-table span), not a
+    per-slot dense preallocation."""
+    model, params = qwen
+    dense = ServeEngine(model, params, batch_slots=2, s_max=S_MAX)
+    with pytest.raises(ValueError, match="s_max"):
+        dense.submit(np.arange(0, 40, dtype=np.int32), 17)
+    paged = ServeEngine(model, params, batch_slots=2, s_max=2 * S_MAX,
+                        page_size=8, num_pages=8)
+    req = paged.submit(np.arange(0, 40, dtype=np.int32), 17)
+    paged.run()
+    assert req.done and len(req.tokens) == 17
+    # and the pool is SMALLER than the dense engine's k/v even at 2x s_max:
+    # 8 pages x 8 rows = 64 resident rows vs dense 2 slots x 64 rows
+    assert paged.resident_cache_bytes() < \
+        ServeEngine(model, params, batch_slots=2,
+                    s_max=2 * S_MAX).resident_cache_bytes()
+
+
+def test_submit_rejects_pool_impossible_request(qwen):
+    """A request no amount of recycling can serve fails at submit, keeping
+    admission infallible."""
+    model, params = qwen
+    engine = ServeEngine(model, params, batch_slots=1, s_max=S_MAX,
+                         page_size=8, num_pages=2)
+    with pytest.raises(ValueError, match="pages"):
+        engine.submit(np.arange(0, 20, dtype=np.int32), 10)  # 29 rows > 16

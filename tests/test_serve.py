@@ -256,6 +256,89 @@ def test_submit_rejects_requests_that_cannot_fit(mp):
     assert fits.done and len(fits.tokens) == 1
 
 
+def test_freed_slot_cache_rows_bit_stable(mp):
+    """The stale freed-slot bugfix: after _finish parks a slot's pos at the
+    INACTIVE_POS sentinel, the slot's cache rows (ring K/V, slot_pos, AND the
+    hybrid SSM h/conv state) are bit-identical N ticks later while another
+    slot keeps decoding — freed slots no longer advance positions or scatter
+    stale K/V (the corruption was previously masked only by the re-admission
+    overwrite)."""
+    model, params = mp
+    engine = make_engine(model, params)
+    short = engine.submit(promptA(), 3)
+    long = engine.submit(promptB(), 24)
+    while not short.done:
+        engine.step()
+    freed = short.slot
+    assert engine.slot_req[freed] is None and not long.done
+    snap = {k: np.asarray(v)
+            for k, v in extract_cache_slot(engine.cache, freed).items()
+            if k != "pos"}
+    for _ in range(8):                       # long keeps decoding
+        engine.step()
+    after = extract_cache_slot(engine.cache, freed)
+    for key, before in snap.items():
+        np.testing.assert_array_equal(before, np.asarray(after[key]),
+                                      err_msg=key)
+    # the freed slot's feedback token was zeroed (no stale token re-fed)
+    assert engine.cur_token[freed, 0] == 0
+
+
+def test_submit_rejects_empty_prompt_and_negative_gen(mp):
+    """Admission edge cases: a zero-length prompt would reach a zero-length
+    prefill scan (undefined logits) and a negative gen_len would underflow
+    the remaining-token accounting — both fail loudly at submit."""
+    model, params = mp
+    engine = make_engine(model, params)
+    with pytest.raises(ValueError, match="empty prompt"):
+        engine.submit(np.array([], np.int32), 4)
+    with pytest.raises(ValueError, match="gen_len"):
+        engine.submit(promptA(), -1)
+    with pytest.raises(ValueError, match="1-D"):
+        engine.submit(promptA()[None], 4)     # accidentally batched prompt
+    zero = engine.submit(promptB(), 0)        # gen_len 0 IS valid: prefill
+    ok = engine.submit(promptA(), 2)          # only, zero tokens returned
+    engine.run()
+    assert ok.done and len(ok.tokens) == 2
+    assert zero.done and zero.tokens == []
+
+
+def test_metrics_wall_clamp_and_idempotent_on_done():
+    """summary() must not report a near-infinite rate for a positive but
+    sub-microsecond wall (injectable test clocks), must stay NaN for a zero
+    wall, and a duplicate on_done must not move t_done."""
+    t = {"now": 0.0}
+    m = MetricsRecorder(clock=lambda: t["now"])
+    m.on_start()
+    m.on_submit(0, prompt_len=2)
+    m.on_first_token(0)
+    t["now"] = 1.0
+    m.on_done(0)
+    t["now"] = 5.0
+    m.on_done(0)                              # double _finish: no-op
+    m.on_stop()
+    s = m.summary()
+    assert s["latency_s"]["p50"] == pytest.approx(1.0)   # not 5.0
+    # zero wall: NaN, not inf and not a huge number
+    m2 = MetricsRecorder(clock=lambda: 0.0)
+    m2.on_start()
+    m2.on_submit(0, prompt_len=2)
+    m2.on_first_token(0)
+    m2.on_stop()
+    assert np.isnan(m2.summary()["throughput_tokens_per_s"])
+    # sub-microsecond wall: clamped to MIN_WALL_S, not 1e9x-inflated
+    t3 = {"now": 0.0}
+    m3 = MetricsRecorder(clock=lambda: t3["now"])
+    m3.on_start()
+    m3.on_submit(0, prompt_len=2)
+    m3.on_first_token(0)
+    t3["now"] = 1e-9
+    m3.on_stop()
+    from repro.serve.metrics import MIN_WALL_S
+    assert m3.summary()["throughput_tokens_per_s"] == pytest.approx(
+        1 / MIN_WALL_S)
+
+
 def test_int8_ptq_path_through_engine():
     """The PTQ path is wired through the engine unchanged."""
     engine = ServeEngine.build(ARCH, reduced=True, batch_slots=2, s_max=32,
