@@ -1,17 +1,20 @@
 """Serving benchmark: batched-prefill engine vs the seed's token-by-token
-legacy path (hymba, as in PR 1), plus a PAGED-vs-DENSE KV cache column
-(tokens/s and resident cache bytes) on a full-attention arch, swept over
-batch_slots x prompt_len. Writes ``BENCH_serve.json`` next to the repo root.
+legacy path (hymba, as in PR 1), a PAGED-vs-DENSE KV cache column (tokens/s
+and resident cache bytes) on a full-attention arch, and a PREFILL column
+(parallel chunked vs teacher-forced scan prefill tokens/s on the
+qwen2.5-32b reduced cell). Writes ``BENCH_serve.json`` next to the repo root.
 
 The engine's win has two mechanical sources, mirroring the paper's ladder:
 fewer dispatches (one jitted scan per prefill instead of one dispatch per
 prompt token — the paper's instruction/DRAM block overhead) and less compute
 (batch-1 prefill instead of stepping the full batch width per prompt token —
 the paper's "don't move/compute what you don't need"). The paged column is
-the paper's memory-as-first-class-constraint lesson applied to serving: the
-dense cache preallocates slots x s_max rows whatever the live token count,
-while the page pool is sized to the workload — resident KV bytes drop at
-equal tokens/s for the same traffic.
+the paper's memory-as-first-class-constraint lesson applied to serving. The
+prefill column is the paper's loop-width/tiling lever: the scan anchor
+teacher-forces decode_step — ONE token of matmul width per sequential step —
+while the parallel path computes a whole bucketed chunk per pass at full
+matmul width; the acceptance bar is >= 2x prefill tokens/s at
+prompt_len >= 128.
 
 Run: PYTHONPATH=src python -m benchmarks.serve_bench [--quick]
 """
@@ -118,6 +121,44 @@ def bench_paged_cell(batch_slots: int, prompt_len: int, *, requests: int,
     return cell
 
 
+def _prefill_rate(sc: ServeConfig) -> float:
+    """Prefill tokens/s over the wall spent INSIDE prefill dispatches (the
+    engine metric) — isolates the forward's arithmetic intensity from
+    queueing and decode."""
+    from repro.launch.serve import build_engine, make_prompts
+    engine = build_engine(sc)
+    for prompt in make_prompts(sc, engine.cfg.vocab_size):
+        engine.submit(prompt, sc.gen_len)
+    summary = engine.run()
+    return summary["prefill_tokens_per_s"]
+
+
+def bench_prefill_cell(prompt_len: int, *, requests: int, gen_len: int,
+                       chunk: int = 64) -> dict:
+    """Parallel chunked vs scan prefill at equal workload on the qwen cell."""
+    base = dict(arch=PAGED_ARCH, reduced=True, batch_slots=4,
+                s_max=max(64, prompt_len + gen_len + 1), requests=requests,
+                prompt_len=prompt_len, gen_len=gen_len)
+    scan_sc = ServeConfig(**base, prefill_mode="scan")
+    par_sc = ServeConfig(**base, prefill_mode="parallel", prefill_chunk=chunk)
+    _prefill_rate(scan_sc)                   # warm (compile)
+    scan = _prefill_rate(scan_sc)
+    _prefill_rate(par_sc)
+    par = _prefill_rate(par_sc)
+    cell = {
+        "prompt_len": prompt_len,
+        "requests": requests,
+        "gen_len": gen_len,
+        "prefill_chunk": chunk,
+        "scan_prefill_tokens_per_s": scan,
+        "parallel_prefill_tokens_per_s": par,
+        "speedup": par / max(scan, 1e-9),
+    }
+    print(f"prompt={prompt_len:3d} [prefill]: scan {scan:9.1f} tok/s | "
+          f"parallel {par:9.1f} tok/s | {cell['speedup']:.2f}x")
+    return cell
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -141,6 +182,13 @@ def main():
     paged_accept = next(r for r in paged_results
                         if r["batch_slots"] == 4 and r["prompt_len"] == 32)
 
+    prefill_cells = [128] if args.quick else [32, 128, 256]
+    prefill_results = [bench_prefill_cell(pl, requests=args.requests,
+                                          gen_len=4)
+                       for pl in prefill_cells]
+    prefill_accept = next(r for r in prefill_results
+                          if r["prompt_len"] == 128)
+
     out = {
         "arch": "hymba-1.5b (reduced)",
         "device": "cpu",
@@ -162,12 +210,23 @@ def main():
                     paged_accept["resident_bytes_ratio"] < 1.0,
             },
         },
+        "prefill": {
+            "arch": f"{PAGED_ARCH} (reduced)",
+            "cells": prefill_results,
+            "acceptance": {
+                "cell": "prompt_len=128",
+                "speedup": prefill_accept["speedup"],
+                "passes_2x": prefill_accept["speedup"] >= 2.0,
+            },
+        },
     }
     OUT.write_text(json.dumps(out, indent=2))
     print(f"wrote {OUT} (acceptance speedup {accept['speedup']:.2f}x, "
           f">=2x: {out['acceptance']['passes_2x']}; paged resident bytes "
           f"{paged_accept['resident_bytes_ratio']:.2f}x of dense, drop: "
-          f"{out['paged']['acceptance']['passes_memory_drop']})")
+          f"{out['paged']['acceptance']['passes_memory_drop']}; parallel "
+          f"prefill {prefill_accept['speedup']:.2f}x scan at prompt 128, "
+          f">=2x: {out['prefill']['acceptance']['passes_2x']})")
 
 
 if __name__ == "__main__":

@@ -24,10 +24,21 @@ NEG_INF = -1e30
 
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
-            scale: float, causal: bool, window: int, block_q: int, block_k: int):
+            scale: float, causal: bool, window: int, block_q: int, block_k: int,
+            k_out_ref=None, v_out_ref=None):
     qi = pl.program_id(2)
     ki = pl.program_id(3)
     nk = pl.num_programs(3)
+
+    if k_out_ref is not None:
+        # K/V-exporting prefill variant: the K/V block is already resident in
+        # VMEM for the attention pass, so emitting it to the export outputs
+        # costs no extra HBM read — the fused path a serving prefill uses to
+        # land post-RoPE K/V tiles ready for the cache (block-table) scatter.
+        # Every (h, qi) grid step that maps to this kv block writes the same
+        # bytes, so output-block revisiting is well-defined.
+        k_out_ref[...] = k_ref[...]
+        v_out_ref[...] = v_ref[...]
 
     @pl.when(ki == 0)
     def _():
@@ -108,3 +119,63 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                         pltpu.VMEM((block_q, hd), jnp.float32)],
         interpret=interpret,
     )(q, k, v)
+
+
+def flash_attention_kv(q, k, v, *, causal: bool = True, window: int = 0,
+                       block_q: int = 128, block_k: int = 128,
+                       interpret: bool = False):
+    """Causal prefill variant that returns ``(O, K, V)``.
+
+    Same grid/accumulator structure as :func:`flash_attention`, but the
+    kernel additionally EXPORTS the K/V tiles it streams through VMEM as two
+    extra outputs shaped ``(B, Sk, KV, hd)`` — the per-layer cache rows a
+    serving prefill scatters into its (paged) KV cache. Today the projection
+    and RoPE happen outside the kernel (layers._qkv), so the export is a
+    passthrough of the inputs: what this variant establishes is the
+    (O, K, V) OUTPUT CONTRACT the serving path consumes, so a future kernel
+    that fuses qkv projection + RoPE in-kernel (where K/V first materialize
+    in VMEM and an HBM round-trip really is saved) can drop in without
+    touching any caller. Under ``interpret`` (CPU CI) the same body runs as
+    traced JAX ops.
+
+    q: (B,Sq,H,hd); k,v: (B,Sk,KV,hd) -> (O (B,Sq,H,hd), K, V (B,Sk,KV,hd)).
+    """
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    assert H % KV == 0
+    G = H // KV
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0
+    grid = (B, H, Sq // block_q, Sk // block_k)
+    scale = 1.0 / math.sqrt(hd)
+
+    def kernel(q_ref, k_ref, v_ref, o_ref, k_out_ref, v_out_ref,
+               m_ref, l_ref, acc_ref):
+        _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                scale=scale, causal=causal, window=window, block_q=block_q,
+                block_k=block_k, k_out_ref=k_out_ref, v_out_ref=v_out_ref)
+
+    kv_spec = pl.BlockSpec((1, block_k, 1, hd), lambda b, h, qi, ki: (b, ki, h // G, 0))
+    o, k_out, v_out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, hd), lambda b, h, qi, ki: (b, qi, h, 0)),
+            kv_spec,
+            kv_spec,
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, 1, hd), lambda b, h, qi, ki: (b, qi, h, 0)),
+            kv_spec,
+            kv_spec,
+        ],
+        out_shape=[jax.ShapeDtypeStruct((B, Sq, H, hd), q.dtype),
+                   jax.ShapeDtypeStruct((B, Sk, KV, hd), k.dtype),
+                   jax.ShapeDtypeStruct((B, Sk, KV, hd), v.dtype)],
+        scratch_shapes=[pltpu.VMEM((block_q,), jnp.float32),
+                        pltpu.VMEM((block_q,), jnp.float32),
+                        pltpu.VMEM((block_q, hd), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v)
+    return o, k_out, v_out

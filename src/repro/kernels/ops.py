@@ -105,6 +105,25 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                                block_q=bq, block_k=bk, interpret=_interpret())
 
 
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k"))
+def flash_prefill(q, k, v, *, causal: bool = True, window: int = 0,
+                  block_q: int = 128, block_k: int = 128):
+    """K/V-exporting prefill attention: returns ``(O, K, V)`` where K/V are
+    the post-RoPE tiles ready for the serving cache scatter (paged block
+    tables or dense rows). On TPU the export rides the kernel's existing
+    VMEM residency (one fused HBM pass); non-block-multiple shapes fall back
+    to the jnp oracle so CPU CI always runs."""
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    bq, bk = min(block_q, Sq), min(block_k, Sk)
+    if Sq % bq or Sk % bk:
+        return _ref.flash_attention_kv(q, k, v, causal=causal, window=window)
+    return _fa.flash_attention_kv(q, k, v, causal=causal, window=window,
+                                  block_q=bq, block_k=bk,
+                                  interpret=_interpret())
+
+
 @functools.partial(jax.jit, static_argnames=("chunk",))
 def wkv6(r, k, v, w, u, s0, *, chunk: int = 32):
     T = r.shape[1]

@@ -43,6 +43,12 @@ def flash_attention(q, k, v, *, causal=True, window=0, q_positions=None,
     return jnp.einsum("bkgqs,bskh->bqkgh", p, v).reshape(B, Sq, H, hd)
 
 
+def flash_attention_kv(q, k, v, *, causal=True, window=0):
+    """Oracle for the K/V-exporting prefill kernel: attention output plus the
+    (unchanged) K/V tiles, matching flash_attention_kv's (O, K, V) contract."""
+    return flash_attention(q, k, v, causal=causal, window=window), k, v
+
+
 def wkv6(r, k, v, w, u, s0):
     """RWKV6 recurrence oracle.
     r,k,v,w: (B,T,H,N); u: (H,N); s0: (B,H,N,N) -> y (B,T,H,N), sT."""

@@ -48,16 +48,22 @@ class ServeConfig:
     seed: int = 0
     quantize_int8: bool = False
     temperature: float = 0.0
+    top_k: int = 0            # 0 = off; >0 restricts sampling to k best
+    top_p: float = 1.0        # 1.0 = off; <1 nucleus sampling
     page_size: int = 0        # 0 = dense cache; >0 enables paged KV
     num_pages: int = 0        # 0 = dense-equivalent pool (slots x s_max/ps)
+    prefill_mode: str = "parallel"   # 'parallel' (chunked) | 'scan' (anchor)
+    prefill_chunk: int = 64   # max prompt tokens ingested between decode ticks
 
 
 def build_engine(sc: ServeConfig) -> ServeEngine:
     return ServeEngine.build(
         sc.arch, reduced=sc.reduced, batch_slots=sc.batch_slots,
         s_max=sc.s_max, seed=sc.seed, quantize_int8=sc.quantize_int8,
-        temperature=sc.temperature,
-        page_size=sc.page_size or None, num_pages=sc.num_pages or None)
+        temperature=sc.temperature, top_k=sc.top_k, top_p=sc.top_p,
+        page_size=sc.page_size or None, num_pages=sc.num_pages or None,
+        prefill_mode=sc.prefill_mode,
+        prefill_chunk_tokens=sc.prefill_chunk)
 
 
 class Server:

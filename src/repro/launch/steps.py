@@ -285,6 +285,64 @@ def make_prefill(model: Model, *, compute_dtype=jnp.bfloat16,
     return prefill
 
 
+def make_prefill_chunk(model: Model, *, compute_dtype=jnp.bfloat16,
+                       s_max: int = 0, cache_dtype=jnp.float32,
+                       first: bool = False, attn_impl: str = "einsum"):
+    """Parallel (matmul-wide) chunked prefill step builder — the serving
+    engine's fast path; the scan prefill (``make_prefill(return_cache=True)``)
+    stays the bit-exactness anchor.
+
+    Each call computes ALL of a chunk's prompt positions in one full-width
+    pass per layer and exports the per-layer K/V (ring + recurrent carry for
+    hybrid, O(1) state for ssm/rwkv) directly into the request's dense
+    transient cache, which the engine then splices into the resident cache
+    (``insert_cache_rows`` / ``insert_cache_rows_paged``) when the prompt
+    completes.
+
+    ``first=True``: returns ``first_chunk(params, batch) -> (logits, cache)``
+    — creates the transient cache inside the jit, runs the encoder +
+    cross-KV precompute exactly once for encoder-decoder models, and
+    processes the chunk at STATIC position 0 (which is what lets
+    ``attn_impl='pallas'`` route chunk-local causal attention through the
+    K/V-exporting flash kernel). ``first=False``: returns
+    ``chunk(params, cache, batch) -> (logits, cache)`` — a continuation at
+    the traced ``cache['pos']``; callers should donate the cache."""
+    if s_max <= 0 and first:
+        raise ValueError("first=True requires s_max > 0")
+    from repro.configs.base import Family
+
+    def run_chunk(params, cache, batch):
+        return model.prefill_chunk(params, batch["tokens"], cache,
+                                   compute_dtype=compute_dtype,
+                                   attn_impl=attn_impl, first=first,
+                                   **_batch_extras(model, batch))
+
+    if not first:
+        return run_chunk
+
+    def first_chunk(params, batch):
+        tokens = batch["tokens"]
+        B = tokens.shape[0]
+        cache = model.init_cache(B, s_max, cache_dtype)
+        if model.cfg.family == Family.ENCDEC:
+            from repro.models import encdec
+            frames = batch.get("frames")
+            if frames is None:
+                frames = jnp.zeros((B, encdec.ENC_LEN, model.cfg.d_model),
+                                   compute_dtype)
+            enc_out = encdec.encode(params, model.cfg,
+                                    frames.astype(compute_dtype),
+                                    compute_dtype=compute_dtype,
+                                    attn_impl="einsum", remat=False)
+            xk, xv = encdec.precompute_cross_kv(params, model.cfg, enc_out)
+            cache = dict(cache, xk=xk.astype(cache["xk"].dtype),
+                         xv=xv.astype(cache["xv"].dtype))
+            batch = {k: v for k, v in batch.items() if k != "frames"}
+        return run_chunk(params, cache, batch)
+
+    return first_chunk
+
+
 def make_decode_step(model: Model, *, compute_dtype=jnp.bfloat16):
     """One-token decode against a KV/state cache; cache buffers are donated."""
     def decode(params, cache, batch):

@@ -232,6 +232,67 @@ def _decode_layer(cfg, lp, x, ck, cv, xk, xv, pos, positions, enc_pos,
     return x, ck, cv
 
 
+# ------------------------------------------------------- parallel prefill
+def _prefill_chunk_dec_layer(cfg, lp, x, ck, cv, xk, xv, start, positions,
+                             enc_pos, use_kernel):
+    """One decoder layer over a whole prompt chunk: chunk-wide causal
+    self-attention against the request cache plus full-width cross-attention
+    to the precomputed encoder K/V. Mirrors ``_decode_layer``'s math."""
+    h = L.apply_norm(x, lp["ln1"], "layernorm")
+    out, ck, cv = L.attention_prefill_chunk(lp["attn"], h,
+                                            _self_dims(cfg, True), ck, cv,
+                                            start, positions,
+                                            use_kernel=use_kernel)
+    x = x + out
+    h = L.apply_norm(x, lp["ln_x"], "layernorm")
+    x = x + L.attention(lp["xattn"], h, _self_dims(cfg, False), positions,
+                        impl="einsum", kv_override=(xk.astype(h.dtype),
+                                                    xv.astype(h.dtype),
+                                                    enc_pos))
+    h = L.apply_norm(x, lp["ln2"], "layernorm")
+    x = x + L.mlp(lp["mlp"], h, act="gelu")
+    return x, ck, cv
+
+
+def prefill_chunk(params, cfg: ArchConfig, tokens, cache, *,
+                  compute_dtype=jnp.bfloat16, attn_impl: str = "einsum",
+                  first: bool = False, **_):
+    """Matmul-wide parallel prefill over one decoder prompt chunk. The cache
+    must already carry the encoder cross K/V (``xk``/``xv`` — precomputed
+    exactly once by the first-chunk builder in launch/steps.py, same as the
+    scan prefill). Returns (last logits (B,1,Vp), cache with pos += C)."""
+    B, C = tokens.shape
+    start = jnp.zeros((), jnp.int32) if first else cache["pos"]
+    positions = start + jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32), (B, C))
+    use_kernel = first and attn_impl == "pallas"
+    x_pos = params["pos_dec"][jnp.minimum(positions, 8191)].astype(compute_dtype)
+    x = L.embed_lookup(params["embed"], tokens, compute_dtype) + x_pos
+    Se = cache["xk"].shape[2]
+    enc_pos = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32), (B, Se))
+
+    def body(i, carry):
+        x, ck_all, cv_all = carry
+        lp = jax.tree.map(
+            lambda t: jax.lax.dynamic_index_in_dim(t, i, 0, keepdims=False),
+            params["dec_layers"])
+        ck = jax.lax.dynamic_index_in_dim(ck_all, i, 0, keepdims=False)
+        cv = jax.lax.dynamic_index_in_dim(cv_all, i, 0, keepdims=False)
+        xk = jax.lax.dynamic_index_in_dim(cache["xk"], i, 0, keepdims=False)
+        xv = jax.lax.dynamic_index_in_dim(cache["xv"], i, 0, keepdims=False)
+        x, ck, cv = _prefill_chunk_dec_layer(cfg, lp, x, ck, cv, xk, xv,
+                                             start, positions, enc_pos,
+                                             use_kernel)
+        ck_all = jax.lax.dynamic_update_index_in_dim(ck_all, ck, i, 0)
+        cv_all = jax.lax.dynamic_update_index_in_dim(cv_all, cv, i, 0)
+        return x, ck_all, cv_all
+
+    x, ck, cv = jax.lax.fori_loop(0, cfg.num_layers, body,
+                                  (x, cache["k"], cache["v"]))
+    x = L.apply_norm(x[:, -1:], params["final_norm"], "layernorm")
+    logits = L.lm_logits(params["embed"], x, None, vocab=cfg.vocab_size)
+    return logits.astype(jnp.float32), dict(cache, k=ck, v=cv, pos=start + C)
+
+
 def decode_step(params, cfg: ArchConfig, token, cache, *, compute_dtype=jnp.bfloat16,
                 **_):
     B = token.shape[0]

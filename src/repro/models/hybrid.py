@@ -103,6 +103,28 @@ def _ssm_scan(xin, dt, B_t, C_t, A, h0):
     return jnp.moveaxis(ys, 0, 1), h
 
 
+def _ssm_scan_assoc(xin, dt, B_t, C_t, A, h0):
+    """Parallel (associative-scan) selective scan: the recurrence
+    ``h_t = a_t * h_{t-1} + b_t`` is associative under
+    ``(a1,b1) ∘ (a2,b2) = (a1*a2, a2*b1 + b2)``, so all T states come out of
+    a log-depth ``lax.associative_scan`` instead of a length-T sequential
+    scan — the recurrent carry stops being the prefill's critical path
+    (same loop-width lever as the attention chunk). Same signature/returns
+    as ``_ssm_scan``; h0 folds into step 0's additive term."""
+    a = jnp.exp(A[None, None] * dt[..., None])               # (B,T,D,N)
+    b = (dt * xin)[..., None] * B_t[:, :, None, :]           # (B,T,D,N)
+    b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, hs = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = jnp.einsum("btdn,btn->btd", hs, C_t)
+    return y, hs[:, -1]
+
+
 def _mamba_branch(lp, x, cfg: ArchConfig, state, impl: str = "scan"):
     Bsz, T, D = x.shape
     xin = x @ lp["w_in"].astype(x.dtype)
@@ -126,6 +148,8 @@ def _mamba_branch(lp, x, cfg: ArchConfig, state, impl: str = "scan"):
     if impl == "pallas":
         from repro.kernels import ops as kops
         y, h = kops.selective_scan(xc.astype(f32), dt, B_t, C_t, A, h0)
+    elif impl == "assoc":
+        y, h = _ssm_scan_assoc(xc.astype(f32), dt, B_t, C_t, A, h0)
     else:
         y, h = _ssm_scan(xc.astype(f32), dt, B_t, C_t, A, h0)
     y = y + lp["d_skip"].astype(f32) * xc.astype(f32)
@@ -192,17 +216,25 @@ def cache_logical(cfg: ArchConfig):
 
 
 def _ring_sdpa(lp, h, q, ck, cv, valid, dims):
-    """Masked decode attention over a ring view. q: (B,1,H*hd) pre-reshape;
-    ck/cv: (B,W,KV,hd); valid: (B,W) bool. Shared by the dense ring path and
-    the paged path so the two produce bit-identical outputs for equal views."""
-    B = q.shape[0]
+    """Masked attention over a ring/key view. q: (B,Sq,H,hd) as produced by
+    ``L._qkv`` (an equivalent flat (B,Sq,H*hd) also works — (H, hd) and
+    (KV, G, hd) are the same contiguous layout); ck/cv: (B,S,KV,hd);
+    valid: (B,S) bool (decode: one query, mask shared) or (B,Sq,S)
+    (prefill chunk: per-query mask). Shared by the dense ring path, the
+    paged path, and the parallel prefill chunk so all three produce
+    bit-identical outputs for equal views."""
+    B, Sq = q.shape[0], q.shape[1]
     H, KV, hd = dims.num_heads, dims.num_kv_heads, dims.head_dim
     G = H // KV
-    qg = q.reshape(B, 1, KV, G, hd)
+    qg = q.reshape(B, Sq, KV, G, hd)
     scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, ck.astype(q.dtype)) / math.sqrt(hd)
-    scores = jnp.where(valid[:, None, None, None, :], scores.astype(jnp.float32), -1e30)
+    if valid.ndim == 2:
+        valid = valid[:, None, :]                        # (B,1,S): all queries
+    scores = jnp.where(valid[:, None, None, :, :], scores.astype(jnp.float32),
+                       -1e30)
     probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
-    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, cv.astype(q.dtype)).reshape(B, 1, H * hd)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, cv.astype(q.dtype)
+                     ).reshape(B, Sq, H * hd)
     return out @ lp["attn"]["wo"].astype(h.dtype)
 
 
@@ -271,6 +303,92 @@ def _window_attn_decode_paged(lp, h, cfg, pool_k, pool_v, pool_spos,
     valid = (spos >= 0) & (spos <= mask_pos) & (spos > mask_pos - cfg.window)
     out = _ring_sdpa(lp, h, q, view_k, view_v, valid, dims)
     return out, pool_k, pool_v, pool_spos
+
+
+# ------------------------------------------------------- parallel prefill
+def _window_attn_prefill_chunk(lp, h, cfg, ck, cv, slot_pos, positions,
+                               use_kernel: bool):
+    """Chunk-wide windowed attention against the ring cache: all C queries
+    attend jointly over [pre-chunk ring rows (validity from slot_pos), the
+    chunk's own K/V (causal + window)], then the chunk's LAST min(C, W)
+    positions — exactly the rows a sequential ring write would leave behind
+    — are scattered into the ring. ``use_kernel`` (first chunk only: the
+    pre-ring is empty, so chunk-local causal+window IS the full mask) routes
+    through the K/V-exporting flash kernel."""
+    dims = _attn_dims(cfg)
+    q, k, v = L._qkv(lp["attn"], h, dims, positions)         # (B,C,·)
+    B, C = q.shape[:2]
+    W = ck.shape[1]
+    if use_kernel:
+        from repro.kernels import ops as kops
+        out, k, v = kops.flash_prefill(q, k, v, causal=True,
+                                       window=cfg.window)
+        out = out.reshape(B, C, -1) @ lp["attn"]["wo"].astype(h.dtype)
+    else:
+        keys = jnp.concatenate([ck.astype(q.dtype), k], axis=1)   # (B,W+C,·)
+        vals = jnp.concatenate([cv.astype(q.dtype), v], axis=1)
+        kp = jnp.concatenate([slot_pos, positions], axis=1)       # (B,W+C)
+        qp = positions[:, :, None]
+        valid = (kp[:, None, :] >= 0) & (kp[:, None, :] <= qp) & \
+            (kp[:, None, :] > qp - cfg.window)                    # (B,C,W+C)
+        out = _ring_sdpa(lp, h, q, keys, vals, valid, dims)
+    # ring write: the last min(C, W) chunk positions have distinct ring
+    # slots and are exactly the survivors of C sequential modular writes
+    nw = min(C, W)
+    tail_pos = positions[:, C - nw:]                              # (B,nw)
+    ridx = tail_pos % W
+    b_idx = jnp.arange(B)[:, None]
+    ck = ck.at[b_idx, ridx].set(k[:, C - nw:].astype(ck.dtype))
+    cv = cv.at[b_idx, ridx].set(v[:, C - nw:].astype(cv.dtype))
+    slot_pos = slot_pos.at[b_idx, ridx].set(tail_pos)
+    return out, ck, cv, slot_pos
+
+
+def _prefill_chunk_layer(cfg, lp, x, ck, cv, sp, hst, conv, positions,
+                         use_kernel):
+    """One hybrid layer over a whole prompt chunk: windowed ring attention at
+    chunk width + the mamba branch with its recurrent carry computed by the
+    parallel associative scan. Mirrors ``_decode_layer``'s residual math."""
+    h = L.apply_norm(x, lp["ln1"], cfg.norm)
+    a, ck, cv, sp = _window_attn_prefill_chunk(lp, h, cfg, ck, cv, sp,
+                                               positions, use_kernel)
+    s, st = _mamba_branch(lp, h, cfg, {"h": hst, "conv": conv}, "assoc")
+    a = L.rmsnorm(a, lp["attn_norm"]["scale"])
+    s = L.rmsnorm(s, lp["ssm_norm"]["scale"])
+    x = x + 0.5 * (a + s)
+    h = L.apply_norm(x, lp["ln2"], cfg.norm)
+    x = x + L.mlp(lp["mlp"], h)
+    return x, ck, cv, sp, st["h"], st["conv"]
+
+
+def prefill_chunk(params, cfg: ArchConfig, tokens, cache, *,
+                  compute_dtype=jnp.bfloat16, attn_impl: str = "einsum",
+                  first: bool = False, **_):
+    """Matmul-wide parallel prefill over one prompt chunk (hybrid family):
+    the attention branch runs chunk-wide against the ring, the selective-SSM
+    carry comes out of a log-depth associative scan, and the ring + recurrent
+    state land in the request cache exactly as C sequential ``decode_step``
+    calls would have left them. Returns (last logits (B,1,Vp), cache)."""
+    B, C = tokens.shape
+    start = jnp.zeros((), jnp.int32) if first else cache["pos"]
+    positions = start + jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32), (B, C))
+    use_kernel = first and attn_impl == "pallas"
+    x = L.embed_lookup(params["embed"], tokens, compute_dtype)
+
+    def body(x, xs):
+        lp, ck, cv, sp, hst, conv = xs
+        x, ck, cv, sp, hh, cc = _prefill_chunk_layer(
+            cfg, lp, x, ck, cv, sp, hst, conv, positions, use_kernel)
+        return x, (ck, cv, sp, hh, cc)
+
+    x, (ck, cv, sp, hst, conv) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"], cache["slot_pos"],
+                  cache["h"], cache["conv"]))
+    x = L.apply_norm(x[:, -1:], params["final_norm"], cfg.norm)
+    logits = L.lm_logits(params["embed"], x, params["unembed"]["w"],
+                         vocab=cfg.vocab_size)
+    return logits.astype(jnp.float32), dict(cache, k=ck, v=cv, slot_pos=sp,
+                                            h=hst, conv=conv, pos=start + C)
 
 
 def _decode_layer(cfg, lp, x, ck, cv, sp, hst, conv, pos, positions,

@@ -516,6 +516,64 @@ def attention_decode(params, x, dims: AttnDims, cache_k, cache_v, cache_pos,
     return out @ params["wo"].astype(x.dtype), cache_k, cache_v
 
 
+# ------------------------------------------------------- parallel prefill
+def attention_prefill_chunk(params, x, dims: AttnDims, cache_k, cache_v,
+                            start, positions, use_kernel: bool = False):
+    """Multi-token prefill-chunk attention against a dense per-request cache.
+
+    The matmul-wide counterpart of ``attention_decode``: instead of one query
+    row per dispatch, a whole CHUNK of prompt positions is projected, its
+    post-RoPE K/V written into cache rows ``[start, start + C)`` in one
+    dynamic-update, and all C queries attend jointly — full matmul width on
+    the q axis, which is the loop-width/tiling lever the paper pulls for
+    throughput (and the reason parallel prefill beats teacher-forcing
+    ``decode_step`` under a scan).
+
+    x: (B, C, D); cache_k/v: (B, S_max, KV, hd); ``start`` is the chunk's
+    first absolute position (a traced scalar for continuation chunks, the
+    literal 0 for a first chunk); positions: (B, C) absolute query positions.
+    Validity is ``k_pos <= q_pos`` (and the sliding window) over ALL cache
+    rows, so a continuation chunk sees every previously-written row and
+    never a future/unwritten one (unwritten rows have k_pos > q_pos).
+
+    ``use_kernel`` routes the chunk-local causal attention through the
+    K/V-exporting flash kernel (``kernels.ops.flash_prefill``) — only valid
+    when the cache holds NO prior rows (a first chunk at start == 0), where
+    chunk-local causal+window attention IS the full mask. Returns
+    (out (B, C, H*hd) @ wo, new_ck, new_cv)."""
+    q, k, v = _qkv(params, x, dims, positions)
+    B, C, KV, hd = k.shape
+    H = dims.num_heads
+    if use_kernel:
+        from repro.kernels import ops as kops
+        out, k_tiles, v_tiles = kops.flash_prefill(
+            q, k, v, causal=dims.causal, window=dims.window)
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache_k, k_tiles.astype(cache_k.dtype), start, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache_v, v_tiles.astype(cache_v.dtype), start, axis=1)
+        out = out.reshape(B, C, H * hd)
+    else:
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache_k, k.astype(cache_k.dtype), start, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache_v, v.astype(cache_v.dtype), start, axis=1)
+        S_max = ck.shape[1]
+        G = H // KV
+        qg = q.reshape(B, C, KV, G, hd)
+        scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, ck.astype(q.dtype)
+                            ).astype(jnp.float32) / math.sqrt(hd)
+        k_pos = jnp.arange(S_max)
+        valid = k_pos[None, None, :] <= positions[:, :, None]      # (B,C,S)
+        if dims.window > 0:
+            valid &= k_pos[None, None, :] > positions[:, :, None] - dims.window
+        scores = jnp.where(valid[:, None, None, :, :], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bkgqs,bskh->bqkgh", probs, cv.astype(q.dtype)
+                         ).reshape(B, C, H * hd)
+    return out @ params["wo"].astype(x.dtype), ck, cv
+
+
 # ------------------------------------------------------- paged KV decode
 def paged_row_indices(block_tables, page_size: int, n_rows: int):
     """Flattened pool-row index of each LOGICAL row of every slot.

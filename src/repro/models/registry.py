@@ -48,6 +48,12 @@ class Model:
     def decode_step(self, params, token, cache, **kw):
         return self.mod.decode_step(params, self.cfg, token, cache, **kw)
 
+    def prefill_chunk(self, params, tokens, cache, **kw):
+        """Full-width parallel prefill over one prompt chunk (all families):
+        (last logits (B,1,Vp), cache with pos advanced by the chunk length).
+        See launch/steps.py::make_prefill_chunk for the serving contract."""
+        return self.mod.prefill_chunk(params, self.cfg, tokens, cache, **kw)
+
     # -------------------------------------------------- input specs
     def extra_inputs(self, batch: int, seq: int, dtype=jnp.bfloat16) -> dict:
         """Modality-frontend STUB inputs (precomputed embeddings), per assignment."""

@@ -221,6 +221,35 @@ def cache_logical(cfg: ArchConfig):
             "pos": ()}
 
 
+# ------------------------------------------------------- parallel prefill
+def prefill_chunk(params, cfg: ArchConfig, tokens, cache, *,
+                  compute_dtype=jnp.bfloat16, attn_impl: str = "einsum",
+                  first: bool = False, **_):
+    """Matmul-wide parallel prefill over one prompt chunk. rwkv has no KV
+    cache to export — the whole story is the O(1) carry (wkv state +
+    token-shift rows), which ``_layer_apply`` already threads through a
+    full-width chunk: every projection runs at chunk width, only the
+    per-channel wkv recurrence is sequential. Returns
+    (last logits (B,1,Vp), cache with pos += C)."""
+    del attn_impl, first
+    C = tokens.shape[1]
+    x = L.embed_lookup(params["embed"], tokens, compute_dtype)   # (B,C,D)
+
+    def body(x, xs):
+        lp, S, x_tm, x_cm = xs
+        st = {"S": S, "x_tm": x_tm, "x_cm": x_cm}
+        x, new_st = _layer_apply(cfg, lp, x, st, "scan")
+        return x, (new_st["S"], new_st["x_tm"], new_st["x_cm"])
+
+    x, (S, x_tm, x_cm) = jax.lax.scan(
+        body, x, (params["layers"], cache["S"], cache["x_tm"], cache["x_cm"]))
+    x = L.apply_norm(x[:, -1:], params["final_norm"], "layernorm")
+    logits = L.lm_logits(params["embed"], x, params["unembed"]["w"],
+                         vocab=cfg.vocab_size)
+    return logits.astype(jnp.float32), dict(cache, S=S, x_tm=x_tm, x_cm=x_cm,
+                                            pos=cache["pos"] + C)
+
+
 def decode_step(params, cfg: ArchConfig, token, cache, *, compute_dtype=jnp.bfloat16,
                 **_):
     x = L.embed_lookup(params["embed"], token, compute_dtype)  # (B,1,D)

@@ -285,6 +285,105 @@ def _index_tree(tree, i):
         lambda t: jax.lax.dynamic_index_in_dim(t, i, 0, keepdims=False), tree)
 
 
+# ------------------------------------------------------- parallel prefill
+def _prefill_chunk_layer(cfg: ArchConfig, lp, x, ck, cv, start, positions,
+                         use_kernel: bool):
+    """One layer over a whole prompt chunk (matmul-wide ``_decode_layer``):
+    writes the chunk's K/V rows into the per-request cache and attends all
+    chunk positions jointly. Mirrors ``_decode_layer``'s math exactly (same
+    residual structure, same masked-softmax validity) so the parallel
+    prefill reproduces the scan-prefill anchor's greedy tokens."""
+    h = L.apply_norm(x, lp["ln1"], cfg.norm)
+    out, ck, cv = L.attention_prefill_chunk(lp["attn"], h, _attn_dims(cfg),
+                                            ck, cv, start, positions,
+                                            use_kernel=use_kernel)
+    x = x + out
+    h = L.apply_norm(x, lp["ln2"], cfg.norm)
+    if cfg.moe:
+        y, _ = L.moe(lp["moe"], h, _moe_dims(cfg))
+    else:
+        y = L.mlp(lp["mlp"], h)
+    return x + y, ck, cv
+
+
+def _super_prefill_chunk_unrolled(cfg: ArchConfig, sp, x, ck, cv, img, start,
+                                  positions, use_kernel):
+    cks, cvs = [], []
+    for i in range(cfg.cross_attn_every):
+        lp = jax.tree.map(lambda t: t[i], sp["blocks"])
+        x, c1, c2 = _prefill_chunk_layer(cfg, lp, x, ck[i], cv[i], start,
+                                         positions, use_kernel)
+        cks.append(c1)
+        cvs.append(c2)
+    x = _cross_apply(cfg, sp["cross"], x, img, "einsum")
+    return x, jnp.stack(cks), jnp.stack(cvs)
+
+
+def prefill_chunk(params, cfg: ArchConfig, tokens, cache, *, image_embeds=None,
+                  compute_dtype=jnp.bfloat16, attn_impl: str = "einsum",
+                  first: bool = False, **_):
+    """Full-width parallel prefill over one prompt chunk.
+
+    tokens: (B, C) — C consecutive prompt positions starting at
+    ``cache["pos"]`` (0 for a first chunk, where the position is static so
+    the flash prefill kernel path applies). Every position is computed in
+    ONE matmul-wide pass per layer — prompt ingestion runs at prefill
+    arithmetic intensity instead of the decode_step-under-scan's one token
+    of matmul width per step — and the per-layer post-RoPE K/V land
+    directly in the request cache, ready for the engine's (paged) splice.
+    Returns (last-position logits (B, 1, Vp) float32, cache with pos += C);
+    the same output contract as the scan prefill, which stays the
+    bit-exactness anchor."""
+    B, C = tokens.shape
+    start = jnp.zeros((), jnp.int32) if first else cache["pos"]
+    positions = start + jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32), (B, C))
+    use_kernel = first and attn_impl == "pallas"
+    x = L.embed_lookup(params["embed"], tokens, compute_dtype)
+
+    if cfg.cross_attn_every:
+        assert image_embeds is not None, "VLM prefill needs image_embeds"
+        img = image_embeds.astype(compute_dtype)
+        per = cfg.cross_attn_every
+        n_super = cfg.num_layers // per
+        ck0 = cache["k"].reshape(n_super, per, *cache["k"].shape[1:])
+        cv0 = cache["v"].reshape(n_super, per, *cache["v"].shape[1:])
+
+        def body(i, carry):
+            x, ck_all, cv_all = carry
+            sp = _index_tree(params["super"], i)
+            ck = jax.lax.dynamic_index_in_dim(ck_all, i, 0, keepdims=False)
+            cv = jax.lax.dynamic_index_in_dim(cv_all, i, 0, keepdims=False)
+            x, ck, cv = _super_prefill_chunk_unrolled(
+                cfg, sp, x, ck, cv, img, start, positions, use_kernel)
+            ck_all = jax.lax.dynamic_update_index_in_dim(ck_all, ck, i, 0)
+            cv_all = jax.lax.dynamic_update_index_in_dim(cv_all, cv, i, 0)
+            return x, ck_all, cv_all
+
+        x, ck, cv = jax.lax.fori_loop(0, n_super, body, (x, ck0, cv0))
+        new_k = ck.reshape(cache["k"].shape)
+        new_v = cv.reshape(cache["v"].shape)
+    else:
+        def body(i, carry):
+            x, ck_all, cv_all = carry
+            lp = _index_tree(params["layers"], i)
+            ck = jax.lax.dynamic_index_in_dim(ck_all, i, 0, keepdims=False)
+            cv = jax.lax.dynamic_index_in_dim(cv_all, i, 0, keepdims=False)
+            x, ck, cv = _prefill_chunk_layer(cfg, lp, x, ck, cv, start,
+                                             positions, use_kernel)
+            ck_all = jax.lax.dynamic_update_index_in_dim(ck_all, ck, i, 0)
+            cv_all = jax.lax.dynamic_update_index_in_dim(cv_all, cv, i, 0)
+            return x, ck_all, cv_all
+
+        x, new_k, new_v = jax.lax.fori_loop(
+            0, cfg.num_layers, body, (x, cache["k"], cache["v"]))
+
+    x = L.apply_norm(x[:, -1:], params["final_norm"], cfg.norm)
+    w_un = params["unembed"]["w"] if not cfg.tie_embeddings else None
+    logits = L.lm_logits(params["embed"], x, w_un, vocab=cfg.vocab_size)
+    return logits.astype(jnp.float32), dict(cache, k=new_k, v=new_v,
+                                            pos=start + C)
+
+
 def decode_step(params, cfg: ArchConfig, token, cache, *, image_embeds=None,
                 compute_dtype=jnp.bfloat16):
     """token: (B, 1) int32. Returns (logits (B,1,V), new cache).

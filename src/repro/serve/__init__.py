@@ -24,19 +24,27 @@ Request lifecycle
    at the queue head; with a paged cache it first reserves the request's
    worst-case page count from the host-side free list
    (:class:`~repro.serve.engine.PageAllocator`) and DEFERS — strict
-   priority/FIFO, no skip-ahead — when pages are short. Admitted requests
-   are prefilled with ONE jitted call (``steps.make_prefill(
-   return_cache=True)``): prompts are teacher-forced through ``decode_step``
-   under a single ``lax.scan`` at the admitted group's batch size
-   (same-length requests batch together; never the full slot width),
-   producing each request's full cache state plus next-token logits. The
-   group's rows are spliced into exactly the admitted slots — a batch-axis
-   scatter for the dense cache (``registry.insert_cache_rows``), a scatter
-   into exactly the slots' OWN pages for the paged one
-   (``registry.insert_cache_rows_paged``) — other slots' entries are
-   untouched bit-for-bit (the prefill-isolation guarantee). The first
-   generated token is sampled from the prefill logits; its timestamp is the
-   request's time-to-first-token.
+   priority/FIFO, no skip-ahead — when pages are short. Admission reserves
+   the slot and flips the request to PREFILLING; the prompt is then ingested
+   by the PARALLEL CHUNKED prefill (default, PR 3): chunk lengths BUCKETED
+   to a fixed ladder (compile count O(buckets), not O(distinct lengths)),
+   each chunk ONE matmul-wide pass per layer (``steps.make_prefill_chunk``)
+   that exports the per-layer K/V — ring + recurrent carry for hybrid via an
+   associative scan, O(1) state for ssm/rwkv — into a transient request
+   cache at the admitted group's batch size (same-length requests batch
+   together; never the full slot width). At most one chunk budget of prompt
+   positions runs between decode ticks, so a long prompt cannot stall
+   in-flight decodes (head-of-line bound). ``prefill_mode='scan'`` keeps the
+   teacher-forced single-``lax.scan`` prefill as the bit-exactness anchor.
+   On the last chunk the group's rows are spliced into exactly the admitted
+   slots — a batch-axis scatter for the dense cache
+   (``registry.insert_cache_rows``), a scatter into exactly the slots' OWN
+   pages for the paged one (``registry.insert_cache_rows_paged``) — other
+   slots' entries are untouched bit-for-bit (the prefill-isolation
+   guarantee). The first generated token is sampled from the last chunk's
+   logits; its timestamp is the request's time-to-first-token (queue wait,
+   submit -> admit, is metered separately). See README.md in this package
+   for the admit -> bucket -> chunk -> splice walk-through.
 3. **decode** — ``step()`` runs one batched decode tick for all slots
    against the per-slot-position cache (``cache["pos"]`` is a (B,) vector,
    so slots at different sequence depths coexist). Paged caches route

@@ -32,13 +32,25 @@ Core invariants (see the package docstring for the request lifecycle):
   waiting requests the moment a slot frees, on the same tick; paged
   admission PEEKS first and defers (in strict priority/FIFO order) when the
   free list cannot cover the request's worst-case page count.
+* **Parallel chunked prefill (default).** Prompts are ingested by the
+  matmul-wide ``make_prefill_chunk`` path: every chunk position is computed
+  in one full-width pass per layer and the per-layer K/V (ring + recurrent
+  carry for hybrid, O(1) state for ssm/rwkv) land in a transient request
+  cache that is spliced into the resident cache when the prompt completes.
+  Chunks are INTERLEAVED with decode ticks — at most one chunk of at most
+  ``prefill_chunk_tokens`` tokens runs between consecutive decode ticks, so
+  a max-length prompt cannot stall in-flight decodes (head-of-line bound).
+  Chunk lengths are BUCKETED to a fixed ladder (the chunk size plus the
+  powers of two below it), so prefill compiles O(ladder), not O(distinct
+  prompt lengths); the trace count is hard-capped (jit caches are cleared
+  past ``max_prefill_traces``). ``prefill_mode='scan'`` keeps the
+  teacher-forced scan prefill as the bit-exactness anchor.
 
-Prefill compiles once per distinct prompt length (cached); pad or bucket
-prompts client-side to bound compilation count. Chunked prefill, multi-host
-serving, and prompt-length bucketing are ROADMAP follow-ons.
+Multi-host serving is a ROADMAP follow-on.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import logging
 from typing import Callable, Dict, List, Optional
@@ -76,6 +88,63 @@ def _jitted_prefill(model: Model, compute_dtype, s_max: int, cache_dtype):
     return jax.jit(steps_mod.make_prefill(
         model, compute_dtype=compute_dtype, return_cache=True, s_max=s_max,
         cache_dtype=cache_dtype))
+
+
+@functools.lru_cache(maxsize=64)
+def _jitted_prefill_chunk(model: Model, compute_dtype, s_max: int,
+                          cache_dtype, first: bool, attn_impl: str):
+    """Parallel-prefill chunk executables. One jitted callable per
+    (model, first) pair; jax retraces it per (batch K, chunk C) SHAPE — the
+    engine's bucketed chunk ladder is what keeps that inner cache O(buckets)
+    rather than O(distinct prompt lengths), and ``_note_prefill_trace``
+    clears these caches if a caller defeats the bucketing."""
+    fn = steps_mod.make_prefill_chunk(
+        model, compute_dtype=compute_dtype, s_max=s_max,
+        cache_dtype=cache_dtype, first=first, attn_impl=attn_impl)
+    if first:
+        return jax.jit(fn)
+    return jax.jit(fn, donate_argnums=(1,))     # donate the transient cache
+
+
+def chunk_ladder(chunk_tokens: int) -> List[int]:
+    """The bucketed chunk-length ladder: the chunk size plus every power of
+    two below it, descending. Any prompt length decomposes greedily into
+    ladder chunks, so prefill compile count is O(len(ladder)) under mixed
+    traffic instead of O(distinct prompt lengths)."""
+    if chunk_tokens < 1:
+        raise ValueError(f"chunk_tokens must be >= 1, got {chunk_tokens}")
+    ladder = {chunk_tokens}
+    p = 1
+    while p < chunk_tokens:
+        ladder.add(p)
+        p <<= 1
+    return sorted(ladder, reverse=True)
+
+
+def chunk_plan(prompt_len: int, ladder: List[int]) -> List[int]:
+    """Greedy largest-first decomposition of a prompt into ladder chunks —
+    every token is real (no padding/masking), the last chunks just narrow."""
+    plan, rem = [], prompt_len
+    for c in ladder:
+        while rem >= c:
+            plan.append(c)
+            rem -= c
+    return plan
+
+
+@dataclasses.dataclass
+class _PrefillJob:
+    """One in-flight chunked prefill: K same-length requests being ingested
+    jointly. ``cache`` is the dense transient request cache at batch K
+    (created inside the first-chunk jit); slots/pages are already reserved,
+    so completion (the splice) cannot fail."""
+    slots: List[int]
+    reqs: List[Request]
+    prompts: np.ndarray            # (K, P)
+    plan: List[int]                # bucketed chunk lengths, sums to P
+    idx: int = 0                   # next chunk index
+    filled: int = 0                # prompt tokens already ingested
+    cache: Optional[dict] = None   # None until the first chunk runs
 
 
 @functools.lru_cache(maxsize=1)
@@ -127,15 +196,28 @@ class ServeEngine:
     dense or paged (``page_size``/``num_pages``).
 
     sampling: ``temperature == 0`` is greedy argmax; ``temperature > 0``
-    samples from softmax(logits / temperature) with a per-event PRNG fold so
-    runs are reproducible for a fixed seed.
+    samples from softmax(logits / temperature) — optionally restricted to the
+    ``top_k`` highest logits and/or the smallest ``top_p`` nucleus — with a
+    per-event PRNG fold so runs are reproducible for a fixed seed.
+
+    prefill: ``prefill_mode='parallel'`` (default) ingests prompts with the
+    matmul-wide chunked path, at most one chunk of ``prefill_chunk_tokens``
+    tokens between decode ticks; ``'scan'`` is the teacher-forced
+    one-dispatch scan prefill (the bit-exactness anchor).
+    ``prefill_attn_impl='auto'`` resolves to the K/V-exporting flash kernel
+    on TPU and the jnp reference elsewhere.
     """
 
     def __init__(self, model: Model, params, *, batch_slots: int, s_max: int,
                  compute_dtype=jnp.float32, cache_dtype=None,
                  temperature: float = 0.0, seed: int = 0,
+                 top_k: int = 0, top_p: float = 1.0,
                  page_size: Optional[int] = None,
                  num_pages: Optional[int] = None,
+                 prefill_mode: str = "parallel",
+                 prefill_chunk_tokens: int = 64,
+                 prefill_attn_impl: str = "auto",
+                 max_prefill_traces: Optional[int] = None,
                  scheduler: Optional[Scheduler] = None,
                  metrics: Optional[MetricsRecorder] = None):
         self.model = model
@@ -146,6 +228,33 @@ class ServeEngine:
         self.compute_dtype = compute_dtype
         self.cache_dtype = cache_dtype or compute_dtype
         self.temperature = float(temperature)
+        if int(top_k) < 0:
+            raise ValueError(f"top_k must be >= 0 (0 = off), got {top_k}")
+        if not 0.0 < float(top_p) <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {top_p}")
+        self.top_k = int(top_k)
+        self.top_p = float(top_p)
+        if prefill_mode not in ("parallel", "scan"):
+            raise ValueError(f"prefill_mode must be 'parallel' or 'scan', "
+                             f"got {prefill_mode!r}")
+        self.prefill_mode = prefill_mode
+        self.prefill_chunk_tokens = min(int(prefill_chunk_tokens), s_max)
+        self.prefill_ladder = chunk_ladder(self.prefill_chunk_tokens)
+        if prefill_attn_impl == "auto":
+            prefill_attn_impl = ("pallas" if jax.default_backend() == "tpu"
+                                 else "einsum")
+        self.prefill_attn_impl = prefill_attn_impl
+        # hard cap on distinct prefill trace shapes: first/cont x ladder x
+        # group widths; past it the chunk jit caches are cleared (and the
+        # overflow counted) so a bucketing-defeating caller cannot leak
+        # compiled executables without bound
+        self.max_prefill_traces = (max_prefill_traces if max_prefill_traces
+                                   is not None else
+                                   2 * len(self.prefill_ladder) * batch_slots)
+        self._trace_keys: set = set()
+        self.prefill_trace_evictions = 0
+        self._jobs: List[_PrefillJob] = []
+        self.max_prefill_tokens_per_tick = 0   # head-of-line bound witness
         self.scheduler = scheduler or Scheduler()
         self.metrics = metrics or MetricsRecorder()
 
@@ -191,7 +300,10 @@ class ServeEngine:
     def build(cls, arch: str = "hymba-1.5b", *, reduced: bool = True,
               batch_slots: int = 4, s_max: int = 64, seed: int = 0,
               quantize_int8: bool = False, temperature: float = 0.0,
+              top_k: int = 0, top_p: float = 1.0,
               page_size: Optional[int] = None, num_pages: Optional[int] = None,
+              prefill_mode: str = "parallel", prefill_chunk_tokens: int = 64,
+              prefill_attn_impl: str = "auto",
               compute_dtype=jnp.float32) -> "ServeEngine":
         """Construct model + params from an arch id; the int8 PTQ path is the
         same structural quantize->dequant-on-load as the paper's C5 (the
@@ -206,7 +318,10 @@ class ServeEngine:
             params = dequantize_params(quantize_params(params), compute_dtype)
         return cls(model, params, batch_slots=batch_slots, s_max=s_max,
                    compute_dtype=compute_dtype, temperature=temperature,
-                   page_size=page_size, num_pages=num_pages, seed=seed)
+                   top_k=top_k, top_p=top_p, page_size=page_size,
+                   num_pages=num_pages, prefill_mode=prefill_mode,
+                   prefill_chunk_tokens=prefill_chunk_tokens,
+                   prefill_attn_impl=prefill_attn_impl, seed=seed)
 
     # ------------------------------------------------------------ extras
     def _decode_extras(self) -> dict:
@@ -223,7 +338,62 @@ class ServeEngine:
         return _jitted_prefill(self.model, self.compute_dtype, self.s_max,
                                self.cache_dtype)
 
+    def _chunk_fn(self, first: bool) -> Callable:
+        return _jitted_prefill_chunk(self.model, self.compute_dtype,
+                                     self.s_max, self.cache_dtype, first,
+                                     self.prefill_attn_impl)
+
+    @property
+    def prefill_trace_count(self) -> int:
+        """Distinct (first, group K, chunk C) prefill shapes traced so far —
+        bucketing keeps this O(ladder x group widths) under mixed-length
+        traffic (the compile-count bound tests assert on it)."""
+        return len(self._trace_keys)
+
+    def _note_prefill_trace(self, first: bool, K: int, C: int):
+        key = (first, K, C)
+        if key in self._trace_keys:
+            return
+        self._trace_keys.add(key)
+        if len(self._trace_keys) > self.max_prefill_traces:
+            # bucketing was defeated (e.g. a pathological chunk ladder):
+            # drop the compiled executables instead of leaking them forever
+            log.warning("prefill trace count %d exceeded cap %d; clearing "
+                        "chunk jit caches", len(self._trace_keys),
+                        self.max_prefill_traces)
+            for f in (True, False):
+                self._chunk_fn(f).clear_cache()
+            self._trace_keys = {key}
+            self.prefill_trace_evictions += 1
+
     # ------------------------------------------------------------ sampling
+    def _filter_logits(self, scaled):
+        """Restrict temperature-scaled logits to the top-k highest and then
+        the nucleus (smallest prefix of the remaining sorted distribution
+        whose cumulative probability reaches top_p); masked entries go to
+        -inf so ``jax.random.categorical`` can never draw them. Hot-path
+        cost: top-k alone is one O(V) ``lax.top_k`` threshold; with top_p
+        one full sort is shared by both filters (the kept set is a prefix
+        of the sorted order, so a single scalar threshold per row masks the
+        unsorted logits)."""
+        V = scaled.shape[-1]
+        neg = jnp.asarray(-jnp.inf, scaled.dtype)
+        use_k = 0 < self.top_k < V
+        if self.top_p >= 1.0:
+            if not use_k:
+                return scaled
+            kth = jax.lax.top_k(scaled, self.top_k)[0][:, -1:]
+            return jnp.where(scaled < kth, neg, scaled)
+        srt = jnp.sort(scaled, axis=-1)[:, ::-1]
+        if use_k:
+            srt = jnp.where(jnp.arange(V) < self.top_k, srt, neg)
+        probs = jax.nn.softmax(srt, axis=-1)    # -inf rows carry zero mass
+        cum = jnp.cumsum(probs, axis=-1)
+        keep = cum - probs < self.top_p         # minimal prefix reaching p
+        thresh = jnp.min(jnp.where(keep, srt, jnp.inf), axis=-1,
+                         keepdims=True)
+        return jnp.where(scaled < thresh, neg, scaled)
+
     def _sample_rows(self, logits) -> np.ndarray:
         """logits: (B, 1, V_padded) -> (B,) sampled token per row."""
         row = logits[:, 0, : self.cfg.vocab_size]
@@ -231,7 +401,8 @@ class ServeEngine:
             return np.asarray(jnp.argmax(row, axis=-1), np.int32)
         key = jax.random.fold_in(self._key, self._events)
         self._events += 1
-        toks = jax.random.categorical(key, row / self.temperature, axis=-1)
+        toks = jax.random.categorical(
+            key, self._filter_logits(row / self.temperature), axis=-1)
         return np.asarray(toks, np.int32)
 
     # ------------------------------------------------------------ paging
@@ -328,13 +499,19 @@ class ServeEngine:
         return sum(1 for r in self.slot_req if r is not None)
 
     def admit(self) -> int:
-        """Prefill waiting requests into free slots; returns #admitted.
+        """Admit waiting requests into free slots; returns #admitted.
 
         Requests admitted on the same tick are grouped by prompt length and
-        prefilled JOINTLY — one dispatch fills K slots (the batched-prefill
-        part of the engine; mixed lengths fall back to one group each).
-        Isolation holds either way: the group's batch-K cache rows scatter
-        into exactly the group's slots (dense) or pages (paged).
+        prefilled JOINTLY — one dispatch (or one chunk stream) fills K slots
+        (the batched-prefill fan-in; mixed lengths fall back to one group
+        each). Isolation holds either way: the group's batch-K cache rows
+        scatter into exactly the group's slots (dense) or pages (paged).
+
+        In ``parallel`` mode admission only RESERVES (slot + pages) and
+        enqueues a chunked :class:`_PrefillJob`; the prompt is ingested one
+        bucketed chunk per tick by ``_prefill_tick`` so in-flight decodes
+        are never stalled behind a long prompt. In ``scan`` mode the whole
+        prompt is prefilled here in one teacher-forced scan dispatch.
 
         Paged admission PEEKS before popping: when the free-page list cannot
         cover the head request's worst case, admission stops — the request
@@ -354,6 +531,11 @@ class ServeEngine:
                 self._bt_host[slot, :] = -1
                 self._bt_host[slot, :len(pages)] = pages
             self.scheduler.next_request()       # pop the peeked head
+            req.state = RequestState.PREFILLING
+            req.slot = slot
+            self.slot_req[slot] = req
+            self.metrics.on_admit(req.rid)
+            self.metrics.on_prefill(req.rid, len(req.prompt))
             pairs.append((slot, req))
         if self.paged and pairs:
             self.cache["block_tables"] = jnp.asarray(self._bt_host)
@@ -361,22 +543,79 @@ class ServeEngine:
         for slot, req in pairs:
             groups.setdefault(len(req.prompt), []).append((slot, req))
         for group in groups.values():
-            self._prefill_group(group)
+            if self.prefill_mode == "scan":
+                self._prefill_group_scan(group)
+            else:
+                plen = len(group[0][1].prompt)
+                self._jobs.append(_PrefillJob(
+                    slots=[s for s, _ in group],
+                    reqs=[r for _, r in group],
+                    prompts=np.stack([r.prompt for _, r in group]),
+                    plan=chunk_plan(plen, self.prefill_ladder)))
         return len(pairs)
 
-    def _prefill_group(self, group):
-        """Jointly prefill K same-length requests into their slots. Cannot
-        fail on request contents: submit() already validated capacity and
-        admit() already reserved pages, so popped requests are never
-        stranded mid-admission."""
+    def _prefill_group_scan(self, group):
+        """Jointly prefill K same-length requests in ONE teacher-forced scan
+        dispatch (the bit-exactness anchor path). Cannot fail on request
+        contents: submit() already validated capacity and admit() already
+        reserved pages, so popped requests are never stranded."""
         plen = len(group[0][1].prompt)
         prompts = jnp.asarray(np.stack([r.prompt for _, r in group]))  # (K,P)
-        for _, req in group:
-            self.metrics.on_prefill(req.rid, plen)
+        t0 = self.metrics.now()
         logits, rcache = self._prefill_fn()(
             self.params,
             {"tokens": prompts, **self._prefill_extras(len(group))})
-        slot_ids = [s for s, _ in group]
+        jax.block_until_ready(logits)
+        self.metrics.on_prefill_chunk(len(group) * plen,
+                                      self.metrics.now() - t0)
+        self._splice_and_start([s for s, _ in group], [r for _, r in group],
+                               rcache, logits)
+
+    # ------------------------------------------------- chunked prefill
+    def _prefill_tick(self) -> int:
+        """Ingest at most ``prefill_chunk_tokens`` prompt positions of
+        queued prefill work — the engine's head-of-line bound: between any
+        two decode ticks the prefill interleave is capped by the chunk
+        budget, whatever the longest queued prompt is. Bucketed ladder
+        chunks that fit the remaining budget run back-to-back (a 12-token
+        prompt under a 64 budget still completes in one tick as 8 + 4), in
+        strict job-FIFO order. Returns prompt positions ingested."""
+        ingested = 0
+        budget = self.prefill_chunk_tokens
+        while self._jobs and budget > 0:
+            job = self._jobs[0]
+            C = job.plan[job.idx]
+            if C > budget:
+                break
+            first = job.idx == 0
+            K = len(job.slots)
+            self._note_prefill_trace(first, K, C)
+            toks = jnp.asarray(job.prompts[:, job.filled:job.filled + C])
+            batch = {"tokens": toks, **self._prefill_extras(K)}
+            t0 = self.metrics.now()
+            if first:
+                logits, job.cache = self._chunk_fn(True)(self.params, batch)
+            else:
+                logits, job.cache = self._chunk_fn(False)(
+                    self.params, job.cache, batch)
+            jax.block_until_ready(logits)
+            self.metrics.on_prefill_chunk(K * C, self.metrics.now() - t0)
+            job.idx += 1
+            job.filled += C
+            budget -= C
+            ingested += C
+            if job.idx == len(job.plan):
+                self._jobs.pop(0)
+                self._splice_and_start(job.slots, job.reqs, job.cache, logits)
+        self.max_prefill_tokens_per_tick = max(
+            self.max_prefill_tokens_per_tick, ingested)
+        return ingested
+
+    def _splice_and_start(self, slot_ids, reqs, rcache, logits):
+        """Splice a completed group prefill cache into the resident cache
+        (dense row scatter or paged page scatter — other slots untouched
+        bit-for-bit), sample each request's first token from the prefill
+        logits, and flip the group to RUNNING."""
         slots = jnp.asarray(np.array(slot_ids, np.int32))
         if self.paged:
             self.cache = self._insert_rows_paged(
@@ -385,10 +624,8 @@ class ServeEngine:
         else:
             self.cache = self._insert_rows(self.cache, rcache, slots)
         toks = self._sample_rows(logits)
-        for i, (slot, req) in enumerate(group):
+        for i, (slot, req) in enumerate(zip(slot_ids, reqs)):
             req.state = RequestState.RUNNING
-            req.slot = slot
-            self.slot_req[slot] = req
             if req.gen_len <= 0:                 # nothing to generate
                 self._finish(slot)
                 continue
@@ -417,24 +654,33 @@ class ServeEngine:
             self._bt_host[slot, :] = -1
             self.cache["block_tables"] = jnp.asarray(self._bt_host)
 
+    @property
+    def running(self) -> int:
+        """Slots actively decoding (excludes slots still being prefilled)."""
+        return sum(1 for r in self.slot_req
+                   if r is not None and r.state == RequestState.RUNNING)
+
     def step(self) -> int:
-        """Admit waiting requests, then one decode tick for every active
-        slot; returns #active after the tick."""
+        """One engine tick: admit waiting requests, ingest at most ONE
+        bucketed prefill chunk (the interleave that bounds decode
+        inter-token latency under long-prompt ingestion), then one decode
+        tick for every RUNNING slot; returns #active after the tick."""
         self.admit()
-        if self.active == 0:
-            return 0
-        batch = {"token": jnp.asarray(self.cur_token), **self._decode_extras()}
-        logits, self.cache = self._decode(self.params, self.cache, batch)
-        self.metrics.on_decode_step()
-        nxt = self._sample_rows(logits)
-        for slot, req in enumerate(self.slot_req):
-            if req is None:
-                continue
-            req.tokens.append(int(nxt[slot]))
-            self.cur_token[slot, 0] = int(nxt[slot])
-            self.metrics.on_token(req.rid)
-            if req.done:
-                self._finish(slot)
+        self._prefill_tick()
+        if self.running:
+            batch = {"token": jnp.asarray(self.cur_token),
+                     **self._decode_extras()}
+            logits, self.cache = self._decode(self.params, self.cache, batch)
+            self.metrics.on_decode_step()
+            nxt = self._sample_rows(logits)
+            for slot, req in enumerate(self.slot_req):
+                if req is None or req.state != RequestState.RUNNING:
+                    continue
+                req.tokens.append(int(nxt[slot]))
+                self.cur_token[slot, 0] = int(nxt[slot])
+                self.metrics.on_token(req.rid)
+                if req.done:
+                    self._finish(slot)
         self.admit()        # refill freed slots/pages on the SAME tick
         return self.active
 

@@ -18,6 +18,7 @@ class RequestRecord:
     rid: int
     prompt_len: int
     t_submit: float
+    t_admit: Optional[float] = None           # slot reserved, prefill begins
     t_first_token: Optional[float] = None     # prefill done, token 1 sampled
     t_done: Optional[float] = None
     n_tokens: int = 0
@@ -27,6 +28,16 @@ class RequestRecord:
         if self.t_first_token is None:
             return None
         return self.t_first_token - self.t_submit
+
+    @property
+    def queue_wait_s(self) -> Optional[float]:
+        """Time spent waiting for a slot/pages — the scheduling share of
+        TTFT, split out so chunked prefill's head-of-line win (shorter
+        waits behind long prompts) is visible separately from prefill
+        compute time."""
+        if self.t_admit is None:
+            return None
+        return self.t_admit - self.t_submit
 
     @property
     def latency_s(self) -> Optional[float]:
@@ -63,8 +74,17 @@ class MetricsRecorder:
         self.decode_steps = 0
         self.prefills = 0
         self.prefill_tokens = 0
+        self.prefill_chunks = 0
+        self.prefill_chunk_tokens = 0         # token·rows pushed through chunks
+        self.prefill_wall_s = 0.0             # wall spent inside chunk calls
+        self.prefill_chunk_max_tokens = 0     # largest single chunk dispatch
         self._t_start: Optional[float] = None
         self._t_stop: Optional[float] = None
+
+    def now(self) -> float:
+        """The recorder's clock — engines time prefill chunks with it so
+        injected test clocks drive deterministic rates."""
+        return self._clock()
 
     # ------------------------------------------------------------ hooks
     def on_start(self):
@@ -78,9 +98,27 @@ class MetricsRecorder:
         self.requests[rid] = RequestRecord(rid=rid, prompt_len=prompt_len,
                                            t_submit=self._clock())
 
+    def on_admit(self, rid: int):
+        rec = self.requests[rid]
+        if rec.t_admit is None:
+            rec.t_admit = self._clock()
+
     def on_prefill(self, rid: int, prompt_len: int):
         self.prefills += 1
         self.prefill_tokens += prompt_len
+
+    def on_prefill_chunk(self, n_tokens: int, wall_s: float):
+        """One prefill chunk dispatch: ``n_tokens`` = group batch x chunk
+        length (the rows of K/V it produced), ``wall_s`` its wall time.
+        ``prefill_chunk_tokens / prefill_wall_s`` is the prefill tokens/s the
+        bench reports; ``prefill_chunk_max_tokens`` bounds the work a single
+        tick can insert between two decode ticks (the head-of-line bound
+        chunked interleaving exists to enforce)."""
+        self.prefill_chunks += 1
+        self.prefill_chunk_tokens += n_tokens
+        self.prefill_wall_s += wall_s
+        self.prefill_chunk_max_tokens = max(self.prefill_chunk_max_tokens,
+                                            n_tokens)
 
     def on_first_token(self, rid: int):
         rec = self.requests[rid]
@@ -106,6 +144,7 @@ class MetricsRecorder:
         recs = list(self.requests.values())
         done = [r for r in recs if r.t_done is not None]
         ttfts = [r.ttft_s for r in done if r.ttft_s is not None]
+        waits = [r.queue_wait_s for r in done if r.queue_wait_s is not None]
         lats = [r.latency_s for r in done]
         tps = [r.tokens_per_s for r in done if r.tokens_per_s is not None]
         total_tokens = sum(r.n_tokens for r in recs)
@@ -127,6 +166,18 @@ class MetricsRecorder:
             "decode_steps": self.decode_steps,
             "prefills": self.prefills,
             "prefill_tokens": self.prefill_tokens,
+            "prefill_chunks": self.prefill_chunks,
+            "prefill_chunk_max_tokens": self.prefill_chunk_max_tokens,
+            # prefill throughput over the wall spent INSIDE chunk dispatches
+            # — measures the forward's arithmetic intensity, not queueing
+            "prefill_tokens_per_s": (
+                self.prefill_chunk_tokens / max(self.prefill_wall_s,
+                                                MIN_WALL_S)
+                if self.prefill_wall_s > 0 else float("nan")),
+            "queue_wait_s": {"mean": float(np.mean(waits)) if waits
+                             else float("nan"),
+                             "p50": percentile(waits, 50),
+                             "p95": percentile(waits, 95)},
             "ttft_s": {"mean": float(np.mean(ttfts)) if ttfts else float("nan"),
                        "p50": percentile(ttfts, 50),
                        "p95": percentile(ttfts, 95)},

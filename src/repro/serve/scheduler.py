@@ -15,6 +15,7 @@ import numpy as np
 
 class RequestState(enum.Enum):
     QUEUED = "queued"
+    PREFILLING = "prefilling"     # slot + pages reserved, prompt being chunked
     RUNNING = "running"
     DONE = "done"
 

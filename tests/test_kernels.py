@@ -71,6 +71,28 @@ def test_flash_attention(cfg):
                                rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.parametrize("cfg", [
+    dict(S=256, H=4, KV=2, window=0),
+    dict(S=256, H=8, KV=2, window=64),
+    dict(S=96, H=2, KV=1, window=0),      # non-block-multiple -> oracle path
+])
+def test_flash_prefill_exports_kv(cfg):
+    """The K/V-exporting prefill variant: O matches flash attention and the
+    exported K/V tiles are the inputs bit-for-bit (the cache rows a serving
+    prefill scatters through block tables)."""
+    ks = jax.random.split(KEY, 3)
+    q = _rand(ks[0], (2, cfg["S"], cfg["H"], 64))
+    k = _rand(ks[1], (2, cfg["S"], cfg["KV"], 64))
+    v = _rand(ks[2], (2, cfg["S"], cfg["KV"], 64))
+    o, ko, vo = ops.flash_prefill(q, k, v, causal=True, window=cfg["window"],
+                                  block_q=64, block_k=64)
+    want = ref.flash_attention(q, k, v, causal=True, window=cfg["window"])
+    np.testing.assert_allclose(np.asarray(o), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_array_equal(np.asarray(ko), np.asarray(k))
+    np.testing.assert_array_equal(np.asarray(vo), np.asarray(v))
+
+
 @pytest.mark.parametrize("T,chunk", [(64, 16), (64, 32), (128, 64), (33, 16)])
 def test_wkv6(T, chunk):
     B, H, N = 2, 3, 16

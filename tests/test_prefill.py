@@ -1,0 +1,365 @@
+"""Parallel chunked prefill: equivalence against the scan-prefill anchor
+(greedy tokens identical, cache rows allclose at dtype tolerance) across
+transformer / hybrid / encdec / VLM, chunk-size sweeps (chunk > prompt and
+chunk = 1 included), the paged splice, the bucketed-compile bound under
+mixed-length traffic, the head-of-line latency bound during long-prompt
+ingestion, and the top-k / top-p sampling satellite.
+
+The design anchor: ``prefill_chunk`` mirrors ``decode_step``'s math exactly
+(same residual structure, same masked-softmax validity over the same cache
+rows), differing only in reduction width — so greedy argmax streams must
+match token-for-token, and cache leaves to ~1e-5 in float32.
+"""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models.registry import (extract_cache_slot, get_model,
+                                   reduced_config)
+from repro.serve.engine import ServeEngine, chunk_ladder, chunk_plan
+from repro.serve.metrics import MetricsRecorder
+
+S_MAX = 32
+CACHE_TOL = 1e-5          # float32 serving cache
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = reduced_config(configs.get_config("qwen2.5-32b"))
+    model = get_model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def hymba():
+    cfg = reduced_config(configs.get_config("hymba-1.5b"))
+    model = get_model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _model(arch):
+    cfg = reduced_config(configs.get_config(arch))
+    model = get_model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _workload(engine, vocab, prompt_len=8):
+    """requests > batch_slots so slots recycle mid-run (prefill jobs overlap
+    live decodes, not just a single prefill+decode)."""
+    rng = np.random.default_rng(11)
+    gens = [6, 4, 8, 5]
+    return [engine.submit(rng.integers(0, vocab, prompt_len), g) for g in gens]
+
+
+def _run_modes(model, params, prompt_len=8, **parallel_kw):
+    scan = ServeEngine(model, params, batch_slots=2, s_max=S_MAX,
+                       prefill_mode="scan")
+    s_reqs = _workload(scan, model.cfg.vocab_size, prompt_len)
+    scan.run()
+    par = ServeEngine(model, params, batch_slots=2, s_max=S_MAX,
+                      prefill_mode="parallel", **parallel_kw)
+    p_reqs = _workload(par, model.cfg.vocab_size, prompt_len)
+    par.run()
+    return scan, s_reqs, par, p_reqs
+
+
+# ------------------------------------------------------------ equivalence
+@pytest.mark.parametrize("arch", ["qwen2.5-32b", "hymba-1.5b",
+                                  "whisper-large-v3", "llama-3.2-vision-11b"])
+def test_parallel_matches_scan_greedy(arch):
+    """Greedy token streams are identical between the parallel chunked
+    prefill and the teacher-forced scan anchor, for a slot-recycling
+    workload, on every attention-bearing family."""
+    model, params = _model(arch)
+    _, s_reqs, _, p_reqs = _run_modes(model, params)
+    for s, p in zip(s_reqs, p_reqs):
+        assert s.tokens == p.tokens and len(s.tokens) == s.gen_len
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-32b", "hymba-1.5b",
+                                  "whisper-large-v3", "llama-3.2-vision-11b"])
+def test_parallel_cache_rows_allclose(arch):
+    """Mid-flight, a slot prefilled by the parallel path holds the same
+    cache rows (K/V, ring positions, recurrent state, pos) as one prefilled
+    by the scan anchor — allclose at float32 tolerance, positions exact."""
+    model, params = _model(arch)
+    se = ServeEngine(model, params, batch_slots=2, s_max=S_MAX,
+                     prefill_mode="scan")
+    pe = ServeEngine(model, params, batch_slots=2, s_max=S_MAX,
+                     prefill_mode="parallel", prefill_chunk_tokens=4)
+    prompt = np.arange(1, 13, dtype=np.int32) % model.cfg.vocab_size
+    sr = se.submit(prompt, 6)
+    pr = pe.submit(prompt, 6)
+    for _ in range(3):
+        se.step()
+    while len(pr.tokens) < len(sr.tokens):      # chunked start is staggered
+        pe.step()
+    sc = extract_cache_slot(se.cache, sr.slot)
+    pc = extract_cache_slot(pe.cache, pr.slot)
+    assert set(sc) == set(pc)
+    for key in sc:
+        a, b = np.asarray(sc[key]), np.asarray(pc[key])
+        if a.dtype.kind in "iu":                # positions: exact
+            np.testing.assert_array_equal(a, b, err_msg=key)
+        else:
+            np.testing.assert_allclose(a, b, atol=CACHE_TOL, rtol=1e-4,
+                                       err_msg=key)
+    assert sr.tokens == pr.tokens
+
+
+@pytest.mark.parametrize("chunk", [1, 4, 8, 64])
+def test_chunk_size_sweep(qwen, chunk):
+    """Any chunk size — including chunk = 1 (pure narrow) and chunk >
+    prompt (single wide pass) — reproduces the scan stream."""
+    model, params = qwen
+    _, s_reqs, par, p_reqs = _run_modes(model, params, prompt_len=12,
+                                        prefill_chunk_tokens=chunk)
+    for s, p in zip(s_reqs, p_reqs):
+        assert s.tokens == p.tokens
+    assert par.max_prefill_tokens_per_tick <= chunk
+
+
+def test_chunked_prefill_paged_splice(qwen):
+    """Chunked parallel prefill splices into a PAGED cache (scatter into the
+    slots' own pages) with streams identical to the dense scan anchor."""
+    model, params = qwen
+    scan = ServeEngine(model, params, batch_slots=2, s_max=S_MAX,
+                       prefill_mode="scan")
+    s_reqs = _workload(scan, model.cfg.vocab_size)
+    scan.run()
+    paged = ServeEngine(model, params, batch_slots=2, s_max=S_MAX,
+                        page_size=8, prefill_mode="parallel",
+                        prefill_chunk_tokens=4)
+    p_reqs = _workload(paged, model.cfg.vocab_size)
+    paged.run()
+    for s, p in zip(s_reqs, p_reqs):
+        assert s.tokens == p.tokens
+
+
+def test_kernel_prefill_path_matches(qwen):
+    """prefill_attn_impl='pallas' (the K/V-exporting flash kernel, interpret
+    on CPU) produces the same greedy streams as the einsum reference."""
+    model, params = qwen
+    ein = ServeEngine(model, params, batch_slots=2, s_max=S_MAX,
+                      prefill_attn_impl="einsum")
+    e_reqs = _workload(ein, model.cfg.vocab_size)
+    ein.run()
+    ker = ServeEngine(model, params, batch_slots=2, s_max=S_MAX,
+                      prefill_attn_impl="pallas")
+    k_reqs = _workload(ker, model.cfg.vocab_size)
+    ker.run()
+    for e, k in zip(e_reqs, k_reqs):
+        assert e.tokens == k.tokens
+
+
+# ------------------------------------------------------------ bucketing
+def test_chunk_ladder_and_plan_units():
+    assert chunk_ladder(64) == [64, 32, 16, 8, 4, 2, 1]
+    assert chunk_ladder(1) == [1]
+    assert chunk_ladder(12) == [12, 8, 4, 2, 1]
+    assert chunk_plan(100, chunk_ladder(64)) == [64, 32, 4]
+    assert chunk_plan(12, chunk_ladder(64)) == [8, 4]
+    assert chunk_plan(5, chunk_ladder(1)) == [1] * 5
+    for n in range(1, 200):
+        assert sum(chunk_plan(n, chunk_ladder(64))) == n
+
+
+def test_mixed_length_traffic_bounded_compiles(qwen):
+    """Mixed-length traffic: compile (trace) count stays <= the bucket-ladder
+    bound, strictly below the number of distinct prompt lengths — the
+    O(buckets)-not-O(lengths) property bucketing exists for."""
+    model, params = qwen
+    engine = ServeEngine(model, params, batch_slots=1, s_max=S_MAX,
+                         prefill_chunk_tokens=16)
+    rng = np.random.default_rng(5)
+    lengths = list(range(3, 27, 2))             # 12 distinct prompt lengths
+    reqs = [engine.submit(rng.integers(0, model.cfg.vocab_size, n), 1)
+            for n in lengths]
+    engine.run()
+    assert all(r.done for r in reqs)
+    ladder_bound = 2 * len(engine.prefill_ladder) * engine.batch_slots
+    assert engine.prefill_trace_count <= ladder_bound
+    assert engine.prefill_trace_count < len(set(lengths))
+    assert engine.prefill_trace_evictions == 0
+    assert engine.max_prefill_traces == ladder_bound
+
+
+def test_trace_cap_clears_instead_of_leaking(qwen):
+    """Past the cap the engine clears the chunk jit caches (counted) rather
+    than leaking compiled executables without bound."""
+    model, params = qwen
+    engine = ServeEngine(model, params, batch_slots=1, s_max=S_MAX,
+                         prefill_chunk_tokens=16, max_prefill_traces=2)
+    rng = np.random.default_rng(5)
+    for n in (3, 7, 13):
+        engine.submit(rng.integers(0, model.cfg.vocab_size, n), 1)
+    engine.run()
+    assert engine.prefill_trace_evictions >= 1
+    assert engine.prefill_trace_count <= 2
+
+
+# ------------------------------------------------- head-of-line latency
+def test_decode_latency_bounded_during_ingest():
+    """The acceptance bound: while max-length prompts are being ingested,
+    p95 decode inter-token latency of busy slots stays < 2x the no-prefill
+    baseline (plus the hard structural bound: no tick ingests more than the
+    chunk budget).
+
+    Measurement design, for reliability on a noisy shared CPU: a cell big
+    enough that compute (not per-dispatch overhead) dominates the tick —
+    on the overhead-bound smoke cells every tick costs ~1 dispatch, so
+    interleaving trivially reads as ~2x regardless of chunk size — a chunk
+    budget below the busy decode width (the regime the bound targets), and
+    the baseline/ingest engines stepped ALTERNATELY so both windows face
+    the same machine-load profile (GC off inside the window)."""
+    import gc
+
+    cfg = reduced_config(configs.get_config("qwen2.5-32b"), d_model=256,
+                         d_ff=768, num_heads=8, num_kv_heads=4, head_dim=32,
+                         num_layers=4)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    chunk, s_max, long_len = 4, 256, 192
+
+    def make():
+        e = ServeEngine(model, params, batch_slots=4, s_max=s_max,
+                        prefill_chunk_tokens=chunk)
+        busy = [e.submit(np.arange(1, 9, dtype=np.int32) + i, 240)
+                for i in range(3)]
+        # warm every shape this test will hit (chunk ladder, decode, splice)
+        warm = e.submit(np.arange(1, long_len + 1, dtype=np.int32), 1)
+        while not warm.done:
+            e.step()
+        return e, busy
+
+    def measure():
+        base_e, base_busy = make()
+        ingest_e, ingest_busy = make()
+        for _ in range(3):   # continuous ingest pressure across the window
+            ingest_e.submit(np.arange(1, long_len + 1, dtype=np.int32), 1)
+        base, ticks = [], []
+        gc.collect()
+        gc.disable()
+        try:
+            for _ in range(48):
+                t0 = time.perf_counter()
+                base_e.step()
+                base.append(time.perf_counter() - t0)
+                t0 = time.perf_counter()
+                ingest_e.step()
+                ticks.append(time.perf_counter() - t0)
+        finally:
+            gc.enable()
+        # the long prompts really were mid-ingestion during the window, the
+        # busy decodes never finished, and no tick broke the chunk budget —
+        # these structural properties must hold on EVERY attempt
+        assert ingest_e.metrics.prefill_chunks > base_e.metrics.prefill_chunks
+        assert all(not b.done for b in base_busy + ingest_busy)
+        assert ingest_e.max_prefill_tokens_per_tick <= chunk
+        return (float(np.percentile(base, 95)),
+                float(np.percentile(ticks, 95)))
+
+    # wall-clock ratio: allow a couple of fresh windows — a shared-CI load
+    # burst landing inside one window is noise, a systematic >= 2x is not
+    ratios = []
+    for _ in range(3):
+        p95_base, p95_ingest = measure()
+        ratios.append(p95_ingest / p95_base)
+        if ratios[-1] < 2.0:
+            break
+    assert ratios[-1] < 2.0, ratios
+
+
+# ------------------------------------------------------------ sampling
+def test_top_k_one_is_greedy(hymba):
+    """top_k=1 at temperature > 0 collapses sampling to argmax — the stream
+    equals the greedy engine's token-for-token (seeded determinism of the
+    filtering path, independent of the PRNG draw)."""
+    model, params = hymba
+    greedy = ServeEngine(model, params, batch_slots=2, s_max=S_MAX)
+    g = greedy.submit(np.arange(1, 9, dtype=np.int32), 8)
+    greedy.run()
+    topk = ServeEngine(model, params, batch_slots=2, s_max=S_MAX,
+                       temperature=0.8, top_k=1, seed=3)
+    t = topk.submit(np.arange(1, 9, dtype=np.int32), 8)
+    topk.run()
+    assert g.tokens == t.tokens
+
+
+def test_top_p_tiny_is_greedy(hymba):
+    """A vanishing nucleus keeps exactly the top-1 token."""
+    model, params = hymba
+    greedy = ServeEngine(model, params, batch_slots=2, s_max=S_MAX)
+    g = greedy.submit(np.arange(1, 9, dtype=np.int32), 8)
+    greedy.run()
+    topp = ServeEngine(model, params, batch_slots=2, s_max=S_MAX,
+                       temperature=0.8, top_p=1e-9, seed=3)
+    t = topp.submit(np.arange(1, 9, dtype=np.int32), 8)
+    topp.run()
+    assert g.tokens == t.tokens
+
+
+def test_top_k_top_p_seeded_determinism(hymba):
+    """top-k + top-p sampling is reproducible per seed and stays in-vocab."""
+    model, params = hymba
+    outs = []
+    for _ in range(2):
+        engine = ServeEngine(model, params, batch_slots=2, s_max=S_MAX,
+                             temperature=0.9, top_k=5, top_p=0.8, seed=7)
+        req = engine.submit(np.arange(1, 9, dtype=np.int32), 10)
+        engine.run()
+        assert all(0 <= t < model.cfg.vocab_size for t in req.tokens)
+        outs.append(req.tokens)
+    assert outs[0] == outs[1]
+
+
+def test_sampling_param_validation(hymba):
+    model, params = hymba
+    with pytest.raises(ValueError, match="top_k"):
+        ServeEngine(model, params, batch_slots=1, s_max=S_MAX, top_k=-1)
+    with pytest.raises(ValueError, match="top_p"):
+        ServeEngine(model, params, batch_slots=1, s_max=S_MAX, top_p=0.0)
+    with pytest.raises(ValueError, match="prefill_mode"):
+        ServeEngine(model, params, batch_slots=1, s_max=S_MAX,
+                    prefill_mode="bogus")
+
+
+# ------------------------------------------------------------ metrics
+def test_queue_wait_and_prefill_rate_metrics():
+    """Unit math: queue wait (submit -> admit) is split out of TTFT, and
+    prefill tokens/s aggregates over the wall spent INSIDE chunk calls."""
+    t = {"now": 0.0}
+    m = MetricsRecorder(clock=lambda: t["now"])
+    m.on_start()
+    m.on_submit(0, prompt_len=8)
+    t["now"] = 2.0
+    m.on_admit(0)
+    m.on_prefill(0, 8)
+    m.on_prefill_chunk(8, 0.5)
+    t["now"] = 3.0
+    m.on_first_token(0)
+    m.on_done(0)
+    m.on_stop()
+    s = m.summary()
+    assert s["queue_wait_s"]["p50"] == pytest.approx(2.0)
+    assert s["ttft_s"]["p50"] == pytest.approx(3.0)
+    assert s["prefill_tokens_per_s"] == pytest.approx(8 / 0.5)
+    assert s["prefill_chunks"] == 1
+    assert s["prefill_chunk_max_tokens"] == 8
+
+
+def test_engine_reports_prefill_rate_and_queue_wait(qwen):
+    """End-to-end: the engine summary carries a finite prefill tokens/s and
+    queue-wait percentiles for a real run."""
+    model, params = qwen
+    engine = ServeEngine(model, params, batch_slots=2, s_max=S_MAX)
+    _workload(engine, model.cfg.vocab_size)
+    s = engine.run()
+    assert np.isfinite(s["prefill_tokens_per_s"])
+    assert s["prefill_tokens_per_s"] > 0
+    assert np.isfinite(s["queue_wait_s"]["p95"])
+    assert s["prefill_chunk_max_tokens"] <= \
+        engine.prefill_chunk_tokens * engine.batch_slots
