@@ -1,0 +1,169 @@
+"""CI bench-regression gate: compare a fresh ``BENCH_serve.json`` against the
+committed baseline and FAIL on a >threshold tokens/s regression in any
+acceptance cell (previously the bench was informational only — nothing
+consumed its trajectory).
+
+Two classes of checks:
+
+* **Relative metrics** (speedups, byte ratios) are machine-independent —
+  engine-vs-legacy, parallel-vs-scan, cached-vs-uncached prefix speedups and
+  the paged resident-bytes ratio must not regress by more than ``--threshold``
+  (default 20%). These are the load-bearing gate.
+* **Absolute tokens/s** in the acceptance cells are gated at the LOOSER
+  ``--abs-threshold`` (default 50%) and can be skipped entirely with
+  ``--relative-only``: the committed baseline comes from a developer
+  machine while CI runs on a shared runner of a different machine class —
+  same-machine reruns alone have been observed to swing these 25-40%, and
+  a cross-class gap stacks on top, so an absolute cross-machine gate would
+  train people to ignore a red job. CI therefore passes ``--relative-only``
+  (ratios are same-run, machine-independent, and ARE tokens/s comparisons
+  of the gated cells); the absolute rows are for same-machine use — a
+  developer re-running the bench locally against the committed baseline
+  gets the cliff check for free.
+
+``--require-acceptance`` additionally fails if any ``passes_*`` flag in the
+fresh result is false (the bench's own absolute bars: >=2x engine speedup,
+paged memory drop, >=2x parallel prefill, >=2x prefix-cached prefill).
+
+Run: python -m benchmarks.check_bench --baseline BENCH_baseline.json \
+         --fresh BENCH_serve.json [--threshold 0.2] [--require-acceptance]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+# (json path, higher_is_better, absolute_rate) — every acceptance-cell rate
+# the gate watches. absolute_rate=True rows are raw tokens/s (machine-class
+# sensitive, gated at --abs-threshold); False rows are same-run ratios
+# (machine-independent, gated at --threshold). Paths into the per-section
+# acceptance CELL dictionaries resolved below.
+GATED_METRICS = [
+    ("acceptance.speedup", True, False),
+    ("acceptance_cell.engine_tokens_per_s", True, True),
+    ("paged.acceptance.resident_bytes_ratio", False, False),
+    ("paged_cell.paged_tokens_per_s", True, True),
+    ("prefill.acceptance.speedup", True, False),
+    ("prefill_cell.parallel_prefill_tokens_per_s", True, True),
+    ("prefix.acceptance.speedup", True, False),
+    ("prefix_cell.cached_prefill_tokens_per_s", True, True),
+]
+
+
+def _acceptance_cells(bench: dict) -> dict:
+    """Flatten each section's acceptance CELL into addressable roots."""
+    out = dict(bench)
+    for cell in bench.get("cells", []):
+        if cell.get("batch_slots") == 4 and cell.get("prompt_len") == 32:
+            out["acceptance_cell"] = cell
+    for cell in bench.get("paged", {}).get("cells", []):
+        if cell.get("batch_slots") == 4 and cell.get("prompt_len") == 32:
+            out["paged_cell"] = cell
+    for cell in bench.get("prefill", {}).get("cells", []):
+        if cell.get("prompt_len") == 128:
+            out["prefill_cell"] = cell
+    for cell in bench.get("prefix", {}).get("cells", []):
+        # the acceptance overlap (75%) only: full runs also record 50%/87.5%
+        # cells and quick runs record just this one — pin the comparison so
+        # full-baseline vs quick-fresh gates the SAME workload
+        if cell.get("prompt_len") == 128 and cell.get("overlap_tokens") == 96:
+            out["prefix_cell"] = cell
+    return out
+
+
+def _resolve(tree: dict, path: str):
+    node = tree
+    for part in path.split("."):
+        if not isinstance(node, dict) or part not in node:
+            return None
+        node = node[part]
+    return node
+
+
+def _pass_flags(tree: dict, prefix: str = "") -> list:
+    flags = []
+    if isinstance(tree, dict):
+        for key, val in tree.items():
+            where = f"{prefix}.{key}" if prefix else key
+            if key.startswith("passes_"):
+                flags.append((where, bool(val)))
+            else:
+                flags.extend(_pass_flags(val, where))
+    elif isinstance(tree, list):
+        for i, val in enumerate(tree):
+            flags.extend(_pass_flags(val, f"{prefix}[{i}]"))
+    return flags
+
+
+def check(baseline: dict, fresh: dict, threshold: float,
+          require_acceptance: bool, abs_threshold: float = 0.5,
+          relative_only: bool = False) -> list:
+    """Returns a list of human-readable failure strings (empty = gate open)."""
+    base = _acceptance_cells(baseline)
+    new = _acceptance_cells(fresh)
+    failures = []
+    for path, higher, absolute in GATED_METRICS:
+        if absolute and relative_only:
+            continue
+        thr = max(threshold, abs_threshold) if absolute else threshold
+        b, f = _resolve(base, path), _resolve(new, path)
+        if f is None:
+            failures.append(f"{path}: missing from fresh bench")
+            continue
+        if b is None:
+            # baseline predates this section (first run after adding it):
+            # nothing to regress against — report, don't fail
+            print(f"  [new] {path}: {f:.3f} (no baseline)")
+            continue
+        ok = (f >= (1 - thr) * b) if higher else (f <= (1 + thr) * b)
+        arrow = ">=" if higher else "<="
+        status = "ok" if ok else "REGRESSION"
+        print(f"  [{status}] {path}: {f:.3f} vs baseline {b:.3f} "
+              f"(gate: {arrow} {1 - thr if higher else 1 + thr:.2f}x)")
+        if not ok:
+            failures.append(
+                f"{path}: {f:.3f} regressed beyond {thr:.0%} of "
+                f"baseline {b:.3f}")
+    if require_acceptance:
+        for where, val in _pass_flags(fresh):
+            if not val:
+                failures.append(f"acceptance flag {where} is false")
+    return failures
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", type=pathlib.Path, required=True,
+                    help="committed BENCH_serve.json (pre-bench copy)")
+    ap.add_argument("--fresh", type=pathlib.Path, required=True,
+                    help="BENCH_serve.json the bench just wrote")
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="max fractional regression per relative metric")
+    ap.add_argument("--abs-threshold", type=float, default=0.50,
+                    help="max fractional regression for absolute tokens/s "
+                         "rows (looser: machine-class + runner noise)")
+    ap.add_argument("--relative-only", action="store_true",
+                    help="gate only machine-independent ratio rows (what CI "
+                         "uses: its runner class differs from the committed "
+                         "baseline's machine)")
+    ap.add_argument("--require-acceptance", action="store_true",
+                    help="also fail on any false passes_* flag in fresh")
+    args = ap.parse_args()
+
+    baseline = json.loads(args.baseline.read_text())
+    fresh = json.loads(args.fresh.read_text())
+    failures = check(baseline, fresh, args.threshold,
+                     args.require_acceptance, args.abs_threshold,
+                     args.relative_only)
+    if failures:
+        print("\nBENCH GATE FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        sys.exit(1)
+    print("\nbench gate passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -54,6 +54,9 @@ class ServeConfig:
     num_pages: int = 0        # 0 = dense-equivalent pool (slots x s_max/ps)
     prefill_mode: str = "parallel"   # 'parallel' (chunked) | 'scan' (anchor)
     prefill_chunk: int = 64   # max prompt tokens ingested between decode ticks
+    # True = auto (page-level prefix caching whenever the config supports it:
+    # paged + parallel prefill + dense/MoE/VLM family); False = hard off
+    prefix_cache: bool = True
 
 
 def build_engine(sc: ServeConfig) -> ServeEngine:
@@ -62,6 +65,7 @@ def build_engine(sc: ServeConfig) -> ServeEngine:
         s_max=sc.s_max, seed=sc.seed, quantize_int8=sc.quantize_int8,
         temperature=sc.temperature, top_k=sc.top_k, top_p=sc.top_p,
         page_size=sc.page_size or None, num_pages=sc.num_pages or None,
+        prefix_cache=None if sc.prefix_cache else False,
         prefill_mode=sc.prefill_mode,
         prefill_chunk_tokens=sc.prefill_chunk)
 

@@ -230,6 +230,38 @@ def insert_cache_rows_paged(cache, request_cache, slots, phys_rows):
     return out
 
 
+def seed_prefix_cache(model: Model, cache, phys_rows, row_ok, pos,
+                      s_max: int, dtype=jnp.float32):
+    """Build a dense batch-K transient prefill cache whose leading rows are
+    GATHERED from a paged serving cache's page pools — the prefix-cache hit
+    path: instead of recomputing a shared prompt prefix, the engine seeds the
+    request's transient cache with the prefix K/V already resident in shared
+    pages and runs only the uncached tail through ``prefill_chunk``.
+
+    ``phys_rows`` is a (K, s_max) int32 map from each request's logical cache
+    row to a flattened pool row (page * page_size + offset) covering exactly
+    the cached prefix; ``row_ok`` masks rows beyond it (gathered as zeros —
+    identical to the never-written rows of a fresh transient cache, and
+    causally invisible: their k_pos exceeds every tail query position).
+    ``pos`` is the scalar position the tail continuation chunks start at.
+
+    Only valid for families whose transient prefill state is exactly
+    (k, v, pos) — dense / MoE / VLM transformers; the engine gates on this
+    (hybrid ring carry and SSM state are not reconstructible from pages)."""
+    K = phys_rows.shape[0]
+    out = model.init_cache(K, s_max, dtype)
+    idx = jnp.where(row_ok, phys_rows, 0)
+    for key in ("k", "v"):
+        pool = cache[key]                   # (L, P, ps, KV, hd)
+        Lr, P, ps = pool.shape[:3]
+        flat = pool.reshape((Lr, P * ps) + pool.shape[3:])
+        rows = flat[:, idx]                 # (L, K, s_max, KV, hd)
+        mask = row_ok.reshape((1,) + row_ok.shape + (1,) * (rows.ndim - 3))
+        out[key] = jnp.where(mask, rows, 0).astype(out[key].dtype)
+    out["pos"] = jnp.asarray(pos, jnp.int32)
+    return out
+
+
 def extract_cache_slot(cache, slot: int):
     """Batch-1 view of one slot's cache entries (testing/debug helper). For a
     paged cache, pool leaves are gathered through the slot's block table into

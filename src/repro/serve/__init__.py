@@ -24,8 +24,17 @@ Request lifecycle
    at the queue head; with a paged cache it first reserves the request's
    worst-case page count from the host-side free list
    (:class:`~repro.serve.engine.PageAllocator`) and DEFERS — strict
-   priority/FIFO, no skip-ahead — when pages are short. Admission reserves
-   the slot and flips the request to PREFILLING; the prompt is then ingested
+   priority/FIFO, no skip-ahead — when pages are short. With the PREFIX
+   CACHE enabled (PR 4; paged + parallel prefill + dense/MoE/VLM families),
+   admission first resolves the longest cached page-aligned prefix via the
+   chain-hash index (:class:`~repro.serve.prefix.PrefixIndex`): hit pages
+   alias straight into the request's block table (refcounted — immutable,
+   never written), a partial-page hit is re-materialised copy-on-write into
+   a fresh page by the completion splice, only the uncached TAIL runs
+   ``prefill_chunk`` (seeded from a gather of the shared rows), and LRU
+   index-only pages are evicted before admission ever defers. Admission
+   reserves the slot and flips the request to PREFILLING; the prompt is
+   then ingested
    by the PARALLEL CHUNKED prefill (default, PR 3): chunk lengths BUCKETED
    to a fixed ladder (compile count O(buckets), not O(distinct lengths)),
    each chunk ONE matmul-wide pass per layer (``steps.make_prefill_chunk``)
@@ -67,7 +76,8 @@ Request lifecycle
 """
 from repro.serve.engine import PageAllocator, ServeEngine
 from repro.serve.metrics import MetricsRecorder
+from repro.serve.prefix import PrefixIndex, PrefixPlan
 from repro.serve.scheduler import Request, RequestState, Scheduler
 
-__all__ = ["ServeEngine", "PageAllocator", "MetricsRecorder", "Request",
-           "RequestState", "Scheduler"]
+__all__ = ["ServeEngine", "PageAllocator", "MetricsRecorder", "PrefixIndex",
+           "PrefixPlan", "Request", "RequestState", "Scheduler"]

@@ -46,6 +46,16 @@ Core invariants (see the package docstring for the request lifecycle):
   past ``max_prefill_traces``). ``prefill_mode='scan'`` keeps the
   teacher-forced scan prefill as the bit-exactness anchor.
 
+* **Page-level prefix caching (paged dense/MoE/VLM, default on).** Completed
+  prompt pages are chain-hashed into a refcounted ``PrefixIndex``; admission
+  aliases the longest cached page-aligned prefix into the request's block
+  table, seeds the transient prefill cache by GATHERING the shared rows and
+  runs only the uncached tail. Shared pages are immutable: a write that
+  would land in one (partial-page tails, decode appending past the prefix)
+  instead targets a fresh page that the splice re-materialises —
+  copy-on-write with no extra device pass. Eviction is LRU over pages only
+  the index references, and runs before admission ever defers.
+
 Multi-host serving is a ROADMAP follow-on.
 """
 from __future__ import annotations
@@ -66,9 +76,16 @@ from repro.models.layers import INACTIVE_POS
 from repro.models.registry import (Model, cache_capacity, get_model,
                                    init_paged_cache, insert_cache_rows,
                                    insert_cache_rows_paged, reduced_config,
-                                   vectorize_cache_pos)
+                                   seed_prefix_cache, vectorize_cache_pos)
 from repro.serve.metrics import MetricsRecorder
+from repro.serve.prefix import PrefixIndex, PrefixPlan
 from repro.serve.scheduler import Request, RequestState, Scheduler
+
+# families whose transient prefill state is exactly (k, v, pos) — the only
+# ones a page-level prefix can fully reconstruct a mid-prompt state for.
+# Hybrid's mamba carry and ssm/rwkv state at an arbitrary split are not
+# page-resident; encdec's cross-K/V is per-slot, not paged.
+PREFIX_CACHE_FAMILIES = (Family.DENSE, Family.MOE, Family.VLM)
 
 log = logging.getLogger("repro.serve.engine")
 
@@ -136,15 +153,36 @@ def chunk_plan(prompt_len: int, ladder: List[int]) -> List[int]:
 class _PrefillJob:
     """One in-flight chunked prefill: K same-length requests being ingested
     jointly. ``cache`` is the dense transient request cache at batch K
-    (created inside the first-chunk jit); slots/pages are already reserved,
-    so completion (the splice) cannot fail."""
+    (created inside the first-chunk jit — or PRE-SEEDED with gathered
+    shared-prefix rows on a prefix-cache hit, in which case every chunk is a
+    continuation); slots/pages are already reserved, so completion (the
+    splice) cannot fail. ``prompts`` holds only the TAIL the chunks compute
+    (positions ``tail_start`` onward); ``write_floor`` is the first cache
+    row the completion splice may write — rows below it live in shared
+    immutable pages (aliased full pages) and are dropped by the scatter."""
     slots: List[int]
     reqs: List[Request]
-    prompts: np.ndarray            # (K, P)
-    plan: List[int]                # bucketed chunk lengths, sums to P
+    prompts: np.ndarray            # (K, P - tail_start) uncached tail tokens
+    plan: List[int]                # bucketed chunk lengths, sums to the tail
     idx: int = 0                   # next chunk index
-    filled: int = 0                # prompt tokens already ingested
+    filled: int = 0                # tail tokens already ingested
     cache: Optional[dict] = None   # None until the first chunk runs
+    tail_start: int = 0            # first prompt position the chunks compute
+    write_floor: int = 0           # splice drops rows below this
+    prefix_plans: Optional[List[PrefixPlan]] = None   # per-request, for
+    # registration at splice (None in scan mode / prefix-cache off)
+
+
+@functools.lru_cache(maxsize=64)
+def _jitted_prefix_seed(model: Model, s_max: int, cache_dtype):
+    """Gather shared prefix pages into a fresh transient prefill cache (the
+    prefix-cache hit path's replacement for the first-chunk jit). Retraced
+    per group batch K like the chunk executables; the resident cache is NOT
+    donated — shared pages stay readable by every aliasing slot."""
+    def seed(cache, phys_rows, row_ok, pos):
+        return seed_prefix_cache(model, cache, phys_rows, row_ok, pos,
+                                 s_max, cache_dtype)
+    return jax.jit(seed)
 
 
 @functools.lru_cache(maxsize=1)
@@ -158,37 +196,67 @@ def _jitted_insert_rows_paged():
 
 
 class PageAllocator:
-    """Host-side free-list allocator over a fixed pool of KV-cache pages.
+    """Host-side REFCOUNTED free-list allocator over a fixed pool of KV-cache
+    pages.
 
     Pure bookkeeping: page ids index the device pool's page axis; nothing
     here touches device memory. ``alloc`` is all-or-nothing (a request's
     worst case is reserved up front, so admission can never strand a
-    half-allocated request) and ``release`` rejects double-frees."""
+    half-allocated request) and hands pages out at refcount 1. ``share``
+    adds a reference — a prefix-cache index entry, or a second block table
+    aliasing the same immutable prefix page — and ``release`` drops one: a
+    page returns to the free list only when its LAST reference goes (so a
+    page can never be simultaneously free and referenced by a live block
+    table or prefix entry), and releasing a page with no references raises
+    (the double-free guard the property tests exercise)."""
 
     def __init__(self, num_pages: int):
         self.num_pages = num_pages
         self._free: List[int] = list(range(num_pages - 1, -1, -1))
-        self._held: set = set()
+        self._ref: Dict[int, int] = {}
 
     @property
     def free(self) -> int:
         return len(self._free)
 
+    @property
+    def held(self) -> set:
+        """Pages with at least one live reference (test/debug view)."""
+        return set(self._ref)
+
+    def refcount(self, page: int) -> int:
+        return self._ref.get(page, 0)
+
     def alloc(self, n: int) -> Optional[List[int]]:
-        """Reserve n pages; returns their ids or None if the free list is
-        short (caller defers admission — nothing is partially allocated)."""
+        """Reserve n pages at refcount 1; returns their ids or None if the
+        free list is short (caller defers admission — nothing is partially
+        allocated)."""
         if n > len(self._free):
             return None
         pages = [self._free.pop() for _ in range(n)]
-        self._held.update(pages)
+        for p in pages:
+            self._ref[p] = 1
         return pages
 
+    def share(self, page: int):
+        """Add a reference to a held page (block-table alias or prefix-index
+        entry). Sharing an unreferenced page is a bookkeeping bug."""
+        if page not in self._ref:
+            raise ValueError(f"share of unheld page {page}")
+        self._ref[page] += 1
+
     def release(self, pages: List[int]):
+        """Drop one reference per page; pages reaching zero return to the
+        free list. Releasing an already-free page raises."""
         for p in pages:
-            if p not in self._held:
+            n = self._ref.get(p, 0)
+            if n <= 0:
                 raise ValueError(f"double free of page {p}")
-            self._held.discard(p)
-            self._free.append(p)
+            if n == 1:
+                del self._ref[p]
+                self._free.append(p)
+            else:
+                self._ref[p] = n - 1
 
 
 class ServeEngine:
@@ -214,6 +282,7 @@ class ServeEngine:
                  top_k: int = 0, top_p: float = 1.0,
                  page_size: Optional[int] = None,
                  num_pages: Optional[int] = None,
+                 prefix_cache: Optional[bool] = None,
                  prefill_mode: str = "parallel",
                  prefill_chunk_tokens: int = 64,
                  prefill_attn_impl: str = "auto",
@@ -255,8 +324,11 @@ class ServeEngine:
         self.prefill_trace_evictions = 0
         self._jobs: List[_PrefillJob] = []
         self.max_prefill_tokens_per_tick = 0   # head-of-line bound witness
-        self.scheduler = scheduler or Scheduler()
-        self.metrics = metrics or MetricsRecorder()
+        # explicit None checks: an EMPTY Scheduler is falsy (__bool__ tracks
+        # queue depth), so `scheduler or Scheduler()` would silently discard
+        # a caller's configured (e.g. prefix-aware) scheduler
+        self.scheduler = Scheduler() if scheduler is None else scheduler
+        self.metrics = MetricsRecorder() if metrics is None else metrics
 
         if page_size is not None and model.cfg.family == Family.SSM:
             log.warning("ssm/rwkv state is O(1) in s_max — ignoring paging")
@@ -284,9 +356,35 @@ class ServeEngine:
             self.cache = vectorize_cache_pos(
                 model.init_cache(batch_slots, s_max, self.cache_dtype),
                 batch_slots, inactive=True)
+
+        # prefix cache: paged + parallel prefill + an attention-pure family
+        # only (the tail-only restart needs the full mid-prompt state to be
+        # reconstructible from K/V pages). None = auto-enable when supported;
+        # an explicit True on an unsupported config warns and falls back to
+        # full prefill rather than erroring (serving keeps working).
+        supported = (self.paged and self.prefill_mode == "parallel"
+                     and self.cfg.family in PREFIX_CACHE_FAMILIES)
+        if prefix_cache is None:
+            prefix_cache = supported
+        elif prefix_cache and not supported:
+            log.warning("prefix_cache unsupported here (needs paged cache, "
+                        "parallel prefill, and a dense/MoE/VLM family; got "
+                        "paged=%s mode=%s family=%s) — falling back to full "
+                        "prefill", self.paged, self.prefill_mode,
+                        self.cfg.family)
+            prefix_cache = False
+        self.prefix_cache = bool(prefix_cache)
+        self.prefix_index = (PrefixIndex(self.allocator, self.page_size)
+                             if self.prefix_cache else None)
         self._decode = _jitted_decode(model, compute_dtype)
         self._insert_rows = _jitted_insert_rows()
 
+        # (head rid, free pages, index version) at the last deferral: admit()
+        # short-circuits while nothing that could change the outcome has
+        # changed, instead of re-running the O(prompt) prefix lookup, the
+        # share/release churn, and a futile whole-index eviction walk on
+        # every decode tick a head request spends waiting for pages
+        self._defer_state: Optional[tuple] = None
         self.slot_req: List[Optional[Request]] = [None] * batch_slots
         self.cur_token = np.zeros((batch_slots, 1), np.int32)
         self.requests: Dict[int, Request] = {}
@@ -302,6 +400,7 @@ class ServeEngine:
               quantize_int8: bool = False, temperature: float = 0.0,
               top_k: int = 0, top_p: float = 1.0,
               page_size: Optional[int] = None, num_pages: Optional[int] = None,
+              prefix_cache: Optional[bool] = None,
               prefill_mode: str = "parallel", prefill_chunk_tokens: int = 64,
               prefill_attn_impl: str = "auto",
               compute_dtype=jnp.float32) -> "ServeEngine":
@@ -319,7 +418,8 @@ class ServeEngine:
         return cls(model, params, batch_slots=batch_slots, s_max=s_max,
                    compute_dtype=compute_dtype, temperature=temperature,
                    top_k=top_k, top_p=top_p, page_size=page_size,
-                   num_pages=num_pages, prefill_mode=prefill_mode,
+                   num_pages=num_pages, prefix_cache=prefix_cache,
+                   prefill_mode=prefill_mode,
                    prefill_chunk_tokens=prefill_chunk_tokens,
                    prefill_attn_impl=prefill_attn_impl, seed=seed)
 
@@ -423,10 +523,13 @@ class ServeEngine:
         return self._pages_for_rows(
             self._rows_needed(len(req.prompt), req.gen_len))
 
-    def _phys_rows(self, slots: List[int]) -> np.ndarray:
+    def _phys_rows(self, slots: List[int], floor: int = 0) -> np.ndarray:
         """(K, capacity) flattened pool-row index per logical cache row for a
         prefill group; rows beyond a slot's reservation map out of bounds and
-        are dropped by the paged splice."""
+        are dropped by the paged splice. ``floor`` additionally maps rows
+        BELOW it out of bounds — a prefix-hit group's leading rows live in
+        shared immutable pages aliased by other block tables, and the splice
+        must never write them (copy-on-write's no-write half)."""
         ps = self.page_size
         C = self.capacity
         oob = self.num_pages * ps
@@ -436,7 +539,28 @@ class ServeEngine:
             pages = np.asarray(self.slot_pages[slot], np.int64)
             cov = min(C, len(pages) * ps)
             phys[i, :cov] = pages[j[:cov] // ps] * ps + j[:cov] % ps
+        if floor > 0:
+            phys[:, :min(floor, C)] = oob
         return phys
+
+    def _prefix_gather_rows(self, plans: List[PrefixPlan], cached_len: int):
+        """(K, s_max) flattened pool rows + validity mask covering each
+        request's cached prefix: rows [0, cached_len) map through the hit's
+        full pages and (for an unaligned hit) the partial COW SOURCE page —
+        NOT the fresh page the block table holds in its place."""
+        ps = self.page_size
+        K = len(plans)
+        phys = np.zeros((K, self.s_max), np.int32)
+        ok = np.zeros((K, self.s_max), bool)
+        j = np.arange(cached_len)
+        for i, plan in enumerate(plans):
+            pages = list(plan.shared_pages)
+            if plan.partial is not None:
+                pages.append(plan.partial[0])
+            pages = np.asarray(pages, np.int64)
+            phys[i, :cached_len] = pages[j // ps] * ps + j % ps
+            ok[i, :cached_len] = True
+        return phys, ok
 
     def resident_cache_bytes(self) -> int:
         """Device bytes held by the resident serving cache (the paged pool
@@ -485,6 +609,14 @@ class ServeEngine:
         self._next_rid += 1
         req = Request(rid=rid, prompt=prompt,
                       gen_len=int(gen_len), priority=priority)
+        if (self.prefix_index is not None
+                and getattr(self.scheduler, "prefix_aware", False)):
+            # advisory ordering hint for a prefix-aware scheduler; does not
+            # touch the LRU order and is re-resolved authoritatively at
+            # admission (the index may have churned by then). Skipped for
+            # the default FIFO scheduler — the hint would be dead weight
+            # (an O(prompt) hash walk per submit with no consumer).
+            req.prefix_hint = self.prefix_index.probe_len(prompt)
         self.requests[rid] = req
         self.metrics.on_submit(rid, len(req.prompt))
         self.scheduler.submit(req)
@@ -516,17 +648,62 @@ class ServeEngine:
         Paged admission PEEKS before popping: when the free-page list cannot
         cover the head request's worst case, admission stops — the request
         stays queued at the head (strict priority/FIFO, no skip-ahead that
-        could starve long requests) until completions release pages."""
+        could starve long requests) until completions release pages. With
+        the prefix cache enabled, admission first resolves the longest
+        cached page-aligned prefix: hit pages alias into the block table
+        (one allocator reference each) and only the remainder is freshly
+        allocated — and when the free list is still short, LRU index-only
+        pages are EVICTED before deferring, so caching never makes
+        admission defer earlier than the uncached engine would."""
         pairs = []
+        plans: Dict[int, Optional[PrefixPlan]] = {}
         for slot in self.free_slots:
             req = self.scheduler.peek()
             if req is None:
                 break
+            plan = None
             if self.paged:
-                pages = self.allocator.alloc(self._pages_needed(req))
-                if pages is None:
+                defer_state = (req.rid, self.allocator.free,
+                               self.prefix_index.version
+                               if self.prefix_index is not None else 0)
+                if defer_state == self._defer_state:
+                    break       # same head, same pages, same index: still short
+                shared: List[int] = []
+                refs: List[int] = []
+                if self.prefix_index is not None:
+                    plan = self.prefix_index.lookup(req.prompt)
+                    shared = list(plan.shared_pages)
+                    # ref every page the plan READS — block-table aliases
+                    # AND the partial COW source (gathered at seed time, not
+                    # aliased) — so eviction for a later slot in this same
+                    # loop can never free-and-reallocate them out from under
+                    # the plan. The partial ref is dropped after the seed
+                    # gather (_seed_prefix_job); the aliases at _finish.
+                    refs = shared + ([plan.partial[0]] if plan.partial
+                                     else [])
+                    for pg in refs:
+                        self.allocator.share(pg)
+                need = self._pages_needed(req) - len(shared)
+                fresh = self.allocator.alloc(need)
+                if fresh is None and self.prefix_index is not None:
+                    evicted = self.prefix_index.evict(
+                        need - self.allocator.free)
+                    if evicted:
+                        self.metrics.on_prefix_evict(evicted)
+                    fresh = self.allocator.alloc(need)
+                if fresh is None:
+                    if refs:
+                        self.allocator.release(refs)     # back to index-only
                     self.deferrals += 1
+                    self._defer_state = (req.rid, self.allocator.free,
+                                         self.prefix_index.version
+                                         if self.prefix_index is not None
+                                         else 0)
                     break
+                if plan is not None:
+                    self.metrics.on_prefix_lookup(
+                        plan.cached_len, len(shared), plan.cow)
+                pages = shared + fresh
                 self.slot_pages[slot] = pages
                 self._bt_host[slot, :] = -1
                 self._bt_host[slot, :len(pages)] = pages
@@ -536,23 +713,62 @@ class ServeEngine:
             self.slot_req[slot] = req
             self.metrics.on_admit(req.rid)
             self.metrics.on_prefill(req.rid, len(req.prompt))
+            plans[slot] = plan
             pairs.append((slot, req))
         if self.paged and pairs:
             self.cache["block_tables"] = jnp.asarray(self._bt_host)
-        groups: Dict[int, list] = {}
+        # group by (prompt_len, cached_len): joint prefill needs equal tail
+        # shapes AND an equal gather offset across the group's requests
+        groups: Dict[tuple, list] = {}
         for slot, req in pairs:
-            groups.setdefault(len(req.prompt), []).append((slot, req))
-        for group in groups.values():
+            plan = plans[slot]
+            cached = plan.cached_len if plan is not None else 0
+            groups.setdefault((len(req.prompt), cached), []).append(
+                (slot, req))
+        for (plen, cached), group in groups.items():
             if self.prefill_mode == "scan":
                 self._prefill_group_scan(group)
-            else:
-                plen = len(group[0][1].prompt)
-                self._jobs.append(_PrefillJob(
-                    slots=[s for s, _ in group],
-                    reqs=[r for _, r in group],
-                    prompts=np.stack([r.prompt for _, r in group]),
-                    plan=chunk_plan(plen, self.prefill_ladder)))
+                continue
+            # a tail of at least one position always runs: the splice needs
+            # last-position logits to sample the first token, so a full-hit
+            # prompt recomputes (only) its final position
+            tail_start = min(cached, plen - 1)
+            group_plans = ([plans[s] for s, _ in group]
+                           if self.prefix_index is not None else None)
+            job = _PrefillJob(
+                slots=[s for s, _ in group],
+                reqs=[r for _, r in group],
+                prompts=np.stack([r.prompt[tail_start:] for _, r in group]),
+                plan=chunk_plan(plen - tail_start, self.prefill_ladder),
+                tail_start=tail_start,
+                write_floor=(cached // self.page_size * self.page_size
+                             if cached else 0),
+                prefix_plans=group_plans)
+            if cached:
+                self._seed_prefix_job(job, cached)
+            self._jobs.append(job)
         return len(pairs)
+
+    def _seed_prefix_job(self, job: _PrefillJob, cached_len: int):
+        """Materialise a prefix-hit group's transient cache: gather the
+        cached rows out of the shared pages (full pages AND the partial COW
+        source) into a fresh dense batch-K cache positioned at the tail
+        start. Every subsequent chunk is a continuation; the gather wall is
+        charged to prefill so hit-path rates stay honest."""
+        phys, ok = self._prefix_gather_rows(job.prefix_plans, cached_len)
+        t0 = self.metrics.now()
+        job.cache = _jitted_prefix_seed(self.model, self.s_max,
+                                        self.cache_dtype)(
+            self.cache, jnp.asarray(phys), jnp.asarray(ok),
+            jnp.asarray(job.tail_start, jnp.int32))
+        jax.block_until_ready(job.cache["k"])
+        self.metrics.on_prefix_gather(self.metrics.now() - t0)
+        # the gather has consumed the partial COW sources; drop the temporary
+        # admission-time references (aliased full pages stay ref'd via
+        # slot_pages until _finish)
+        for plan in job.prefix_plans:
+            if plan.partial is not None:
+                self.allocator.release([plan.partial[0]])
 
     def _prefill_group_scan(self, group):
         """Jointly prefill K same-length requests in ONE teacher-forced scan
@@ -587,7 +803,9 @@ class ServeEngine:
             C = job.plan[job.idx]
             if C > budget:
                 break
-            first = job.idx == 0
+            # a prefix-seeded job already has its transient cache (gathered
+            # from shared pages): every chunk is a continuation
+            first = job.cache is None
             K = len(job.slots)
             self._note_prefill_trace(first, K, C)
             toks = jnp.asarray(job.prompts[:, job.filled:job.filled + C])
@@ -606,23 +824,37 @@ class ServeEngine:
             ingested += C
             if job.idx == len(job.plan):
                 self._jobs.pop(0)
-                self._splice_and_start(job.slots, job.reqs, job.cache, logits)
+                self._splice_and_start(job.slots, job.reqs, job.cache, logits,
+                                       write_floor=job.write_floor,
+                                       prefix_plans=job.prefix_plans)
         self.max_prefill_tokens_per_tick = max(
             self.max_prefill_tokens_per_tick, ingested)
         return ingested
 
-    def _splice_and_start(self, slot_ids, reqs, rcache, logits):
+    def _splice_and_start(self, slot_ids, reqs, rcache, logits, *,
+                          write_floor: int = 0, prefix_plans=None):
         """Splice a completed group prefill cache into the resident cache
         (dense row scatter or paged page scatter — other slots untouched
         bit-for-bit), sample each request's first token from the prefill
-        logits, and flip the group to RUNNING."""
+        logits, and flip the group to RUNNING.
+
+        Prefix caching rides the same scatter: rows below ``write_floor``
+        (aliased immutable full pages) are dropped, while a partial hit's
+        gathered rows land in the FRESH page standing in for the shared
+        source — the copy-on-write copy costs no extra device pass. After
+        the splice the group's freshly computed prompt pages (now complete
+        and never written again) register in the prefix index."""
         slots = jnp.asarray(np.array(slot_ids, np.int32))
         if self.paged:
             self.cache = self._insert_rows_paged(
                 self.cache, rcache, slots,
-                jnp.asarray(self._phys_rows(slot_ids)))
+                jnp.asarray(self._phys_rows(slot_ids, write_floor)))
         else:
             self.cache = self._insert_rows(self.cache, rcache, slots)
+        if self.prefix_index is not None and prefix_plans is not None:
+            for slot, req, plan in zip(slot_ids, reqs, prefix_plans):
+                self.prefix_index.register(plan, self.slot_pages[slot],
+                                           len(req.prompt))
         toks = self._sample_rows(logits)
         for i, (slot, req) in enumerate(zip(slot_ids, reqs)):
             req.state = RequestState.RUNNING

@@ -78,6 +78,13 @@ class MetricsRecorder:
         self.prefill_chunk_tokens = 0         # token·rows pushed through chunks
         self.prefill_wall_s = 0.0             # wall spent inside chunk calls
         self.prefill_chunk_max_tokens = 0     # largest single chunk dispatch
+        # prefix cache (one lookup per paged admission when enabled)
+        self.prefix_lookups = 0
+        self.prefix_hits = 0
+        self.prefix_hit_tokens = 0            # prompt rows served from pages
+        self.prefix_pages_shared = 0          # full pages aliased, no copy
+        self.prefix_cow_copies = 0            # partial pages re-materialised
+        self.prefix_evictions = 0             # LRU entries dropped for space
         self._t_start: Optional[float] = None
         self._t_stop: Optional[float] = None
 
@@ -119,6 +126,29 @@ class MetricsRecorder:
         self.prefill_wall_s += wall_s
         self.prefill_chunk_max_tokens = max(self.prefill_chunk_max_tokens,
                                             n_tokens)
+
+    def on_prefix_lookup(self, hit_tokens: int, pages_shared: int,
+                         cow: bool):
+        """One prefix-cache lookup at admission: ``hit_tokens`` prompt rows
+        will be served from shared pages instead of recomputed
+        (0 = miss), ``pages_shared`` full pages alias into the block table,
+        ``cow`` marks a partial page re-materialised copy-on-write."""
+        self.prefix_lookups += 1
+        if hit_tokens > 0:
+            self.prefix_hits += 1
+            self.prefix_hit_tokens += hit_tokens
+        self.prefix_pages_shared += pages_shared
+        if cow:
+            self.prefix_cow_copies += 1
+
+    def on_prefix_evict(self, n_pages: int):
+        self.prefix_evictions += n_pages
+
+    def on_prefix_gather(self, wall_s: float):
+        """Wall spent gathering shared prefix rows into a transient prefill
+        cache — charged to prefill wall so hit-path prefill tokens/s pays
+        for its own overhead (the bench's effective rate stays honest)."""
+        self.prefill_wall_s += wall_s
 
     def on_first_token(self, rid: int):
         rec = self.requests[rid]
@@ -174,6 +204,19 @@ class MetricsRecorder:
                 self.prefill_chunk_tokens / max(self.prefill_wall_s,
                                                 MIN_WALL_S)
                 if self.prefill_wall_s > 0 else float("nan")),
+            # prefix cache: hit_rate is per-LOOKUP (one lookup per paged
+            # admission when enabled); hit_tokens / prefill_tokens is the
+            # fraction of prompt rows served from shared pages
+            "prefix": {
+                "lookups": self.prefix_lookups,
+                "hits": self.prefix_hits,
+                "hit_rate": (self.prefix_hits / self.prefix_lookups
+                             if self.prefix_lookups else float("nan")),
+                "hit_tokens": self.prefix_hit_tokens,
+                "pages_shared": self.prefix_pages_shared,
+                "cow_copies": self.prefix_cow_copies,
+                "evictions": self.prefix_evictions,
+            },
             "queue_wait_s": {"mean": float(np.mean(waits)) if waits
                              else float("nan"),
                              "p50": percentile(waits, 50),

@@ -31,6 +31,11 @@ class Request:
     state: RequestState = RequestState.QUEUED
     slot: Optional[int] = None
     tokens: List[int] = dataclasses.field(default_factory=list)
+    # prefix-cache rows the engine's submit-time probe found for this prompt
+    # (0 = none/unknown). A prefix-aware scheduler uses it as an ordering
+    # HINT within a priority level; it is advisory — the authoritative
+    # lookup happens again at admission.
+    prefix_hint: int = 0
 
     @property
     def remaining(self) -> int:
@@ -42,28 +47,51 @@ class Request:
 
 
 class Scheduler:
-    """Priority + FIFO admission queue.
+    """Priority + FIFO admission queue, optionally prefix-aware.
 
-    ``submit`` pushes; ``next_request`` pops the lowest (priority, seq) pair.
-    A monotone sequence number breaks priority ties so equal-priority
-    requests leave in arrival order and the heap never compares Request
-    objects directly.
+    ``submit`` pushes; ``next_request`` pops the lowest (priority, hint
+    rank, seq) tuple. A monotone sequence number breaks ties so
+    equal-priority requests leave in arrival order and the heap never
+    compares Request objects directly.
+
+    ``prefix_aware=True`` turns ``Request.prefix_hint`` (set by the engine's
+    submit-time prefix-cache probe) into an ordering HINT: within a priority
+    level, requests whose prompt prefix is already cached admit first —
+    their pages are resident NOW, and serving them before the cache churns
+    converts the hint into real skipped prefill. Strict FIFO is preserved
+    within each (priority, hinted?) class, and the default (False) keeps
+    the exact PR 1 ordering semantics.
+
+    FAIRNESS TRADEOFF: like the priority field itself (a steady priority-0
+    stream starves priority 1 forever — "think nice levels"), the hint has
+    no aging: under a sustained stream of cached-header traffic an unhinted
+    equal-priority request can be bypassed indefinitely. That is the deal
+    this opt-in makes — hit locality over strict arrival order. Deployments
+    needing a latency floor for cold prompts should encode it in
+    ``priority`` (which always dominates the hint) rather than enable this.
     """
 
-    def __init__(self):
+    def __init__(self, prefix_aware: bool = False):
         self._heap: list = []
         self._seq = itertools.count()
+        self.prefix_aware = prefix_aware
+
+    def _rank(self, req: Request) -> int:
+        if not self.prefix_aware:
+            return 0
+        return 0 if req.prefix_hint > 0 else 1
 
     def submit(self, req: Request) -> Request:
         if req.state != RequestState.QUEUED:
             raise ValueError(f"request {req.rid} is {req.state}, not QUEUED")
-        heapq.heappush(self._heap, (req.priority, next(self._seq), req))
+        heapq.heappush(self._heap,
+                       (req.priority, self._rank(req), next(self._seq), req))
         return req
 
     def next_request(self) -> Optional[Request]:
         if not self._heap:
             return None
-        _, _, req = heapq.heappop(self._heap)
+        *_, req = heapq.heappop(self._heap)
         return req
 
     def peek(self) -> Optional[Request]:
@@ -73,7 +101,7 @@ class Scheduler:
         being popped and stranded."""
         if not self._heap:
             return None
-        return self._heap[0][2]
+        return self._heap[0][-1]
 
     @property
     def waiting(self) -> int:

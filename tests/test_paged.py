@@ -172,8 +172,13 @@ def test_admission_defers_until_pages_free(qwen):
     counter ticks) and is admitted only after the first's pages release —
     and both still complete with full token counts."""
     model, params = qwen
+    # prefix_cache off: this test pins the RAW free-list recycling contract
+    # (every page back after the run); with caching on, prompt pages are
+    # deliberately RETAINED by the prefix index — tests/test_prefix.py
+    # covers that retention/eviction accounting
     engine = ServeEngine(model, params, batch_slots=2, s_max=S_MAX,
-                         page_size=8, num_pages=3)      # need 2 pages/request
+                         page_size=8, num_pages=3,      # need 2 pages/request
+                         prefix_cache=False)
     a = engine.submit(np.arange(1, 9, dtype=np.int32), 5)
     b = engine.submit(np.arange(9, 17, dtype=np.int32), 5)
     engine.step()
@@ -190,8 +195,10 @@ def test_pool_exhaustion_recycles_across_many_requests(qwen):
     pages recycle, everything completes (the continuous-batching loop cannot
     deadlock on page pressure)."""
     model, params = qwen
+    # prefix_cache off: pins full free-list recycling (see the note in
+    # test_admission_defers_until_pages_free)
     engine = ServeEngine(model, params, batch_slots=4, s_max=S_MAX,
-                         page_size=8, num_pages=4)
+                         page_size=8, num_pages=4, prefix_cache=False)
     rng = np.random.default_rng(3)
     reqs = [engine.submit(rng.integers(0, model.cfg.vocab_size, 8), 4)
             for _ in range(8)]

@@ -1,0 +1,425 @@
+"""Page-level prefix caching: bit-exact greedy equivalence with caching on
+vs off (per family, including full-prompt hits and mid-stream copy-on-write
+divergence), allocator refcount/COW invariants (no page simultaneously free
+and referenced by a live block table or the prefix index; double-release
+raises), LRU eviction under pool pressure, and the prefix-aware scheduler
+ordering hint.
+
+Equivalence leans on two anchors: shared pages hold EXACTLY the bytes the
+donor request's splice wrote (the same bytes an uncached run would write,
+since chunk plans for a shared prefix decompose identically under the
+greedy ladder), and every row a request writes lies beyond its aliased
+pages (partial hits are re-materialised into a fresh page by the splice —
+copy-on-write — before any write can land)."""
+import logging
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models.registry import get_model, reduced_config
+from repro.serve.engine import PageAllocator, ServeEngine
+from repro.serve.prefix import PrefixIndex
+from repro.serve.scheduler import Scheduler
+
+PS = 8          # page size: small so few-token prompts span several pages
+S_MAX = 48
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = reduced_config(configs.get_config("qwen2.5-32b"))
+    model = get_model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _engine(model, params, *, prefix_cache, **kw):
+    kw.setdefault("batch_slots", 2)
+    kw.setdefault("s_max", S_MAX)
+    kw.setdefault("page_size", PS)
+    return ServeEngine(model, params, prefix_cache=prefix_cache, **kw)
+
+
+def _prompts(vocab, seed=5):
+    """A shared 16-token (2-page) header plus aligned, unaligned, and
+    identical continuations — covers full-page alias, a full-prompt aligned
+    hit (tail recompute), and an unaligned full-prompt re-hit whose partial
+    page must be re-materialised copy-on-write (decode appends past it)."""
+    rng = np.random.default_rng(seed)
+    X = rng.integers(0, vocab, 16).astype(np.int32)
+    u = np.concatenate([X, rng.integers(0, vocab, 5).astype(np.int32)])
+    a = np.concatenate([X, rng.integers(0, vocab, 8).astype(np.int32)])
+    return [(X, 4), (a, 6), (X, 5), (u, 6), (u, 3)]
+
+
+def _serve_sequential(model, params, workload, *, prefix_cache, **kw):
+    eng = _engine(model, params, prefix_cache=prefix_cache, **kw)
+    toks = []
+    for prompt, gen in workload:
+        req = eng.submit(prompt, gen)
+        eng.run()
+        toks.append(list(req.tokens))
+    return eng, toks
+
+
+# ------------------------------------------------------------ equivalence
+@pytest.mark.parametrize("arch", ["qwen2.5-32b", "dbrx-132b",
+                                  "llama-3.2-vision-11b"])
+def test_prefix_bit_exact_greedy_supported_families(arch):
+    """Caching on vs off: identical greedy token streams for every cacheable
+    family (dense / MoE / VLM), across full-page hits, full-prompt hits
+    (tail recompute for logits), and unaligned partial-page COW hits."""
+    cfg = reduced_config(configs.get_config(arch))
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    wl = _prompts(cfg.vocab_size)
+    e_on, on = _serve_sequential(model, params, wl, prefix_cache=None)
+    _, off = _serve_sequential(model, params, wl, prefix_cache=False)
+    assert on == off
+    m = e_on.metrics
+    assert m.prefix_hits >= 3 and m.prefix_hit_tokens > 0
+    assert m.prefix_pages_shared >= 2
+    assert m.prefix_cow_copies >= 1          # the 21-token unaligned reuse
+
+
+@pytest.mark.parametrize("arch", ["whisper-large-v3", "hymba-1.5b"])
+def test_unsupported_family_falls_back_to_full_prefill(arch, caplog):
+    """encdec (cross-K/V not page-resident) and hybrid (mamba carry not
+    reconstructible) warn on an explicit prefix_cache=True, fall back to
+    full prefill, and still serve bit-exactly vs prefix off."""
+    cfg = reduced_config(configs.get_config(arch))
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    wl = _prompts(cfg.vocab_size)[:3]
+    with caplog.at_level(logging.WARNING, logger="repro.serve.engine"):
+        e_on, on = _serve_sequential(model, params, wl, prefix_cache=True)
+    _, off = _serve_sequential(model, params, wl, prefix_cache=False)
+    assert on == off
+    if e_on.paged:          # hymba pages its ring; both are prefix-off
+        assert not e_on.prefix_cache
+        assert any("prefix_cache unsupported" in r.message
+                   for r in caplog.records)
+    assert e_on.metrics.prefix_lookups == 0
+
+
+def test_ssm_prefix_request_is_served_dense():
+    """rwkv ignores paging entirely; prefix_cache=None auto-disables and the
+    request still completes (the ISSUE's 'otherwise full prefill' leg)."""
+    eng = ServeEngine.build("rwkv6-7b", reduced=True, batch_slots=2,
+                            s_max=16, page_size=8, prefix_cache=None)
+    assert not eng.paged and not eng.prefix_cache
+    req = eng.submit(np.array([1, 2, 3], np.int32), 4)
+    eng.run()
+    assert len(req.tokens) == 4
+
+
+def test_mid_stream_cow_divergence_matches_uncached(qwen):
+    """Two live requests share an UNALIGNED 21-token prefix then diverge:
+    each sharer's admission re-materialises the partial page copy-on-write
+    (its tail splice and decode write into that page's row range), the donor
+    is still decoding while the first sharer admits, and ALL token streams
+    match their uncached runs — mutating one request never changes a sibling
+    sharing its prefix."""
+    model, params = qwen
+    vocab = model.cfg.vocab_size
+    rng = np.random.default_rng(9)
+    X21 = rng.integers(0, vocab, 21).astype(np.int32)     # 2 pages + 5 rows
+    pA = np.concatenate([X21, rng.integers(0, vocab, 6).astype(np.int32)])
+    pB = np.concatenate([X21, rng.integers(0, vocab, 6).astype(np.int32)])
+
+    def run(prefix_cache):
+        eng = _engine(model, params, prefix_cache=prefix_cache)
+        r0 = eng.submit(X21, 8)
+        for _ in range(4):               # donor mid-decode when A arrives
+            eng.step()
+        rA = eng.submit(pA, 8)
+        for _ in range(3):               # A mid-decode when B arrives
+            eng.step()
+        rB = eng.submit(pB, 8)
+        eng.run()
+        return eng, list(r0.tokens), list(rA.tokens), list(rB.tokens)
+
+    e_on, t0_on, ta_on, tb_on = run(None)
+    _, t0_off, ta_off, tb_off = run(False)
+    assert (t0_on, ta_on, tb_on) == (t0_off, ta_off, tb_off)
+    assert ta_on != tb_on                # genuinely diverged
+    m = e_on.metrics
+    assert m.prefix_hits == 2            # both A and B hit the 21-row prefix
+    assert m.prefix_cow_copies == 2      # each re-materialised the partial
+
+
+def test_full_prompt_hit_skips_all_but_last_position(qwen):
+    """An identical repeated prompt re-computes exactly ONE position (the
+    last, for its logits): chunk-token accounting shows the skip and the
+    stream still matches."""
+    model, params = qwen
+    vocab = model.cfg.vocab_size
+    prompt = np.random.default_rng(13).integers(0, vocab, 16).astype(np.int32)
+    eng = _engine(model, params, prefix_cache=None)
+    r1 = eng.submit(prompt, 4)
+    eng.run()
+    before = eng.metrics.prefill_chunk_tokens
+    r2 = eng.submit(prompt, 4)
+    eng.run()
+    assert eng.metrics.prefill_chunk_tokens - before == 1
+    assert r1.tokens == r2.tokens
+    assert eng.metrics.prefix_hit_tokens == len(prompt)
+
+
+# ------------------------------------------------------- invariants / LRU
+def _check_invariants(eng):
+    free = set(eng.allocator._free)
+    held = eng.allocator.held
+    assert not free & held, "page both free and referenced"
+    live = {pg for pages in eng.slot_pages for pg in pages}
+    assert not free & live, "page both free and in a live block table"
+    idx_pages = set(eng.prefix_index.pages)
+    assert not free & idx_pages, "page both free and in the prefix index"
+    assert free | held == set(range(eng.num_pages)), "page leaked"
+
+
+def test_refcount_invariants_hold_through_serving(qwen):
+    """Step-by-step engine walk over a sharing+recycling workload: at every
+    tick, no page is simultaneously on the free list and in a live block
+    table or the prefix index, and no page leaks."""
+    model, params = qwen
+    vocab = model.cfg.vocab_size
+    eng = _engine(model, params, prefix_cache=None, batch_slots=2)
+    for prompt, gen in _prompts(vocab) * 2:
+        eng.submit(prompt, gen)
+    guard = 0
+    while (eng.scheduler.waiting or eng.active) and guard < 500:
+        eng.step()
+        _check_invariants(eng)
+        guard += 1
+    assert guard < 500 and not eng.active
+    _check_invariants(eng)
+
+
+def test_lru_eviction_under_pool_pressure(qwen):
+    """A pool too small to retain every prefix forces LRU eviction of
+    index-only pages; admission never deadlocks, streams still match the
+    uncached engine, and evictions are counted."""
+    model, params = qwen
+    vocab = model.cfg.vocab_size
+    rng = np.random.default_rng(21)
+    wl = [(rng.integers(0, vocab, 16).astype(np.int32), 4)
+          for _ in range(6)]
+    # 6 pages: one 16-token/gen-4 request needs ceil(19/8)=3, so at most one
+    # retired prefix (2 pages) survives beside a live request
+    kw = dict(batch_slots=1, num_pages=6)
+    e_on, on = _serve_sequential(model, params, wl, prefix_cache=None, **kw)
+    _, off = _serve_sequential(model, params, wl, prefix_cache=False, **kw)
+    assert on == off
+    assert e_on.metrics.prefix_evictions > 0
+    assert e_on.prefix_index.evictions > 0
+    _check_invariants(e_on)
+
+
+def test_deferral_logic_unchanged_with_retention(qwen):
+    """Admission deferral semantics survive prefix retention: while a live
+    request holds the pool, a second distinct-prompt request DEFERS exactly
+    as the uncached engine would (retained pages that CAN be evicted are,
+    before deferring; pages held by live requests are not)."""
+    model, params = qwen
+    vocab = model.cfg.vocab_size
+    rng = np.random.default_rng(41)
+    eng = _engine(model, params, prefix_cache=None, batch_slots=2,
+                  num_pages=3)                  # one 8+13 request needs all 3
+    a = eng.submit(rng.integers(0, vocab, 8).astype(np.int32), 13)
+    b = eng.submit(rng.integers(0, vocab, 8).astype(np.int32), 13)
+    eng.step()
+    assert a.slot is not None and b.slot is None
+    assert eng.deferrals >= 1
+    eng.run()
+    assert a.done and b.done
+    assert len(a.tokens) == 13 and len(b.tokens) == 13
+    # b's admission evicted a's retained prompt page to cover itself
+    assert eng.metrics.prefix_evictions >= 1
+    _check_invariants(eng)
+
+
+def test_eviction_spares_pages_aliased_by_live_requests(qwen):
+    """Pages a running request aliases (refcount > 1) are skipped by
+    eviction: the donor's header stays valid mid-flight even under pressure
+    from new admissions."""
+    model, params = qwen
+    vocab = model.cfg.vocab_size
+    rng = np.random.default_rng(23)
+    X = rng.integers(0, vocab, 16).astype(np.int32)
+    eng = _engine(model, params, prefix_cache=None, batch_slots=2,
+                  num_pages=8)
+    eng.submit(X, 2)
+    eng.run()
+    rA = eng.submit(np.concatenate(
+        [X, rng.integers(0, vocab, 8).astype(np.int32)]), 12)
+    for _ in range(3):
+        eng.step()
+    shared = set(eng.prefix_index.pages) & set(eng.slot_pages[rA.slot])
+    assert shared                       # A aliases the indexed header
+    # churn: distinct prompts force eviction of whatever is evictable
+    for _ in range(3):
+        p = rng.integers(0, vocab, 16).astype(np.int32)
+        eng.submit(p, 4)
+    eng.run()
+    assert rA.done and len(rA.tokens) == 12
+    _check_invariants(eng)
+
+
+# --------------------------------------------------------- allocator unit
+def test_allocator_share_release_refcounting():
+    a = PageAllocator(4)
+    pages = a.alloc(2)
+    assert a.free == 2 and all(a.refcount(p) == 1 for p in pages)
+    a.share(pages[0])
+    a.release(pages)                    # pages[0] survives at refcount 1
+    assert a.free == 3 and a.refcount(pages[0]) == 1
+    a.release([pages[0]])
+    assert a.free == 4
+    with pytest.raises(ValueError):
+        a.release([pages[0]])           # double free
+    with pytest.raises(ValueError):
+        a.share(pages[1])               # share of an unheld page
+
+
+def test_allocator_property_refcount_cow_invariants():
+    """Property test: random alloc/share/release traffic against a
+    reference model — the free list and the refcount map always partition
+    the pool, counts always match, and over-release always raises."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, strategies as st
+
+    @given(st.lists(st.tuples(st.integers(0, 2), st.integers(0, 7)),
+                    max_size=60))
+    def run(ops):
+        a = PageAllocator(8)
+        ref = {}                       # page -> refcount (the model)
+        for kind, arg in ops:
+            if kind == 0:              # alloc
+                got = a.alloc(arg)
+                if arg > 8 - len(ref):
+                    assert got is None
+                else:
+                    assert got is not None and len(got) == arg
+                    for p in got:
+                        assert p not in ref
+                        ref[p] = 1
+            elif kind == 1:            # share page `arg` if held
+                if arg in ref:
+                    a.share(arg)
+                    ref[arg] += 1
+                else:
+                    with pytest.raises(ValueError):
+                        a.share(arg)
+            else:                      # release page `arg`
+                if arg in ref:
+                    a.release([arg])
+                    ref[arg] -= 1
+                    if ref[arg] == 0:
+                        del ref[arg]
+                else:
+                    with pytest.raises(ValueError):
+                        a.release([arg])
+            assert a.held == set(ref)
+            assert a.free == 8 - len(ref)
+            assert all(a.refcount(p) == n for p, n in ref.items())
+    run()
+
+
+# ------------------------------------------------------------- index unit
+def test_prefix_index_chain_and_partial_lookup():
+    a = PageAllocator(8)
+    idx = PrefixIndex(a, page_size=4)
+    prompt = np.arange(10, dtype=np.int32)          # 2 full pages + 2 tail
+    pages = a.alloc(3)
+    plan = idx.lookup(prompt)
+    assert plan.cached_len == 0 and len(plan.full_hashes) == 2
+    idx.register(plan, pages, len(prompt))
+    assert len(idx) == 3                            # 2 full + 1 partial
+    # full replay hits everything, including the partial tail
+    hit = idx.lookup(prompt)
+    assert hit.cached_len == 10 and hit.shared_pages == pages[:2]
+    assert hit.partial == (pages[2], 2) and hit.cow
+    # longer prompt with the same header hits only the chain prefix
+    longer = np.concatenate([prompt[:8], np.full(4, 99, np.int32)])
+    hit2 = idx.lookup(longer)
+    assert hit2.cached_len == 8 and hit2.partial is None
+    # diverging second page breaks the chain after page 0
+    forked = prompt.copy()
+    forked[5] = 77
+    hit3 = idx.lookup(forked)
+    assert hit3.cached_len == 4 and hit3.shared_pages == pages[:1]
+
+
+def test_eviction_shrinks_chains_from_the_deep_end():
+    """Evicting a chain must shorten the hit, never zero it: chains are
+    LRU-touched deepest-first (root most-recent), so eviction reclaims the
+    deepest page while the root keeps matching — the failure mode where the
+    root went first left descendants index-held but unreachable."""
+    a = PageAllocator(4)
+    idx = PrefixIndex(a, page_size=4)
+    prompt = np.arange(12, dtype=np.int32)          # 3 full pages
+    pages = a.alloc(3)
+    idx.register(idx.lookup(prompt), pages, len(prompt))
+    a.release(pages)                                # index-only now
+    assert idx.evict(1) == 1
+    hit = idx.lookup(prompt)
+    assert hit.cached_len == 8                      # root + middle survive
+    assert a.refcount(pages[2]) == 0                # the DEEPEST page freed
+    assert idx.evict(1) == 1
+    assert idx.lookup(prompt).cached_len == 4       # shrinks, never zeroes
+    assert idx.evict(1) == 1
+    assert idx.lookup(prompt).cached_len == 0 and len(idx) == 0
+
+
+def test_prefix_index_eviction_is_lru_and_ref_gated():
+    a = PageAllocator(6)
+    idx = PrefixIndex(a, page_size=4)
+    pa = a.alloc(1)
+    pb = a.alloc(1)
+    plan_a = idx.lookup(np.arange(4, dtype=np.int32))
+    idx.register(plan_a, pa, 4)
+    plan_b = idx.lookup(np.arange(4, 8, dtype=np.int32))
+    idx.register(plan_b, pb, 4)
+    a.release(pa)
+    a.release(pb)                       # both now index-only (refcount 1)
+    idx.lookup(np.arange(4, dtype=np.int32))        # touch A -> B is LRU
+    assert idx.evict(1) == 1 and a.refcount(pb[0]) == 0
+    assert idx.lookup(np.arange(4, dtype=np.int32)).cached_len == 4
+    a.share(pa[0])                      # a live block table aliases A
+    assert idx.evict(1) == 0            # ref-gated: nothing evictable
+    a.release([pa[0]])
+    assert idx.evict(1) == 1 and len(idx) == 0
+
+
+# ---------------------------------------------------------- scheduler hint
+def test_scheduler_prefix_aware_ordering_hint(qwen):
+    """With prefix_aware=True, a request whose prompt prefix is cached
+    admits before an earlier same-priority request with no cached prefix;
+    the default scheduler keeps strict FIFO."""
+    model, params = qwen
+    vocab = model.cfg.vocab_size
+    rng = np.random.default_rng(31)
+    X = rng.integers(0, vocab, 16).astype(np.int32)
+    Y = rng.integers(0, vocab, 16).astype(np.int32)
+
+    def order(prefix_aware):
+        eng = _engine(model, params, prefix_cache=None, batch_slots=1,
+                      scheduler=Scheduler(prefix_aware=prefix_aware))
+        eng.submit(X, 2)
+        eng.run()                       # X's pages now cached
+        r_cold = eng.submit(Y, 2)       # submitted FIRST, no cached prefix
+        r_hot = eng.submit(X, 2)        # submitted second, cached prefix
+        if prefix_aware:
+            assert r_hot.prefix_hint == len(X) and r_cold.prefix_hint == 0
+        else:                           # probe skipped: no consumer
+            assert r_hot.prefix_hint == 0
+        eng.run()
+        recs = eng.metrics.requests
+        return recs[r_cold.rid].t_admit, recs[r_hot.rid].t_admit
+
+    cold_t, hot_t = order(True)
+    assert hot_t < cold_t               # hinted request jumped ahead
+    cold_t, hot_t = order(False)
+    assert cold_t < hot_t               # default stays FIFO
