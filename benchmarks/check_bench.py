@@ -35,20 +35,31 @@ import json
 import pathlib
 import sys
 
-# (json path, higher_is_better, absolute_rate) — every acceptance-cell rate
-# the gate watches. absolute_rate=True rows are raw tokens/s (machine-class
-# sensitive, gated at --abs-threshold); False rows are same-run ratios
-# (machine-independent, gated at --threshold). Paths into the per-section
-# acceptance CELL dictionaries resolved below.
+# (json path, higher_is_better, absolute_rate, threshold_override) — every
+# acceptance-cell rate the gate watches. absolute_rate=True rows are raw
+# tokens/s (machine-class sensitive, gated at --abs-threshold); False rows
+# are same-run ratios gated at --threshold unless overridden.
+#
+# Why the 0.5 overrides: the wall-clock SPEEDUP rows are ratios of two
+# separate engine runs on a shared host, and two healthy runs of identical
+# code have been observed to land 2.0x and 3.4x an hour apart (2026-07,
+# prefill cell) — a 20% gate on those rows is a flake machine. Their
+# absolute floor (>= 2x / >= 1.5x) lives in the passes_* flags that
+# --require-acceptance enforces on every fresh run; the relative row only
+# needs to catch genuine collapse. The resident-bytes ratio is a
+# deterministic function of config and stays at the tight default. Paths
+# into the per-section acceptance CELL dictionaries resolved below.
 GATED_METRICS = [
-    ("acceptance.speedup", True, False),
-    ("acceptance_cell.engine_tokens_per_s", True, True),
-    ("paged.acceptance.resident_bytes_ratio", False, False),
-    ("paged_cell.paged_tokens_per_s", True, True),
-    ("prefill.acceptance.speedup", True, False),
-    ("prefill_cell.parallel_prefill_tokens_per_s", True, True),
-    ("prefix.acceptance.speedup", True, False),
-    ("prefix_cell.cached_prefill_tokens_per_s", True, True),
+    ("acceptance.speedup", True, False, 0.5),
+    ("acceptance_cell.engine_tokens_per_s", True, True, None),
+    ("paged.acceptance.resident_bytes_ratio", False, False, None),
+    ("paged_cell.paged_tokens_per_s", True, True, None),
+    ("prefill.acceptance.speedup", True, False, 0.5),
+    ("prefill_cell.parallel_prefill_tokens_per_s", True, True, None),
+    ("prefix.acceptance.speedup", True, False, 0.5),
+    ("prefix_cell.cached_prefill_tokens_per_s", True, True, None),
+    ("prefill_paged.acceptance.speedup", True, False, 0.5),
+    ("prefill_paged_cell.kernel_prefill_tokens_per_s", True, True, None),
 ]
 
 
@@ -70,6 +81,9 @@ def _acceptance_cells(bench: dict) -> dict:
         # full-baseline vs quick-fresh gates the SAME workload
         if cell.get("prompt_len") == 128 and cell.get("overlap_tokens") == 96:
             out["prefix_cell"] = cell
+    for cell in bench.get("prefill_paged", {}).get("cells", []):
+        if cell.get("prompt_len") == 128:
+            out["prefill_paged_cell"] = cell
     return out
 
 
@@ -104,18 +118,27 @@ def check(baseline: dict, fresh: dict, threshold: float,
     base = _acceptance_cells(baseline)
     new = _acceptance_cells(fresh)
     failures = []
-    for path, higher, absolute in GATED_METRICS:
+    for path, higher, absolute, override in GATED_METRICS:
         if absolute and relative_only:
             continue
-        thr = max(threshold, abs_threshold) if absolute else threshold
+        if absolute:
+            thr = max(threshold, abs_threshold)
+        else:
+            thr = max(threshold, override or 0.0)
         b, f = _resolve(base, path), _resolve(new, path)
         if f is None:
             failures.append(f"{path}: missing from fresh bench")
             continue
-        if b is None:
-            # baseline predates this section (first run after adding it):
-            # nothing to regress against — report, don't fail
-            print(f"  [new] {path}: {f:.3f} (no baseline)")
+        if not isinstance(f, (int, float)) or isinstance(f, bool):
+            failures.append(f"{path}: fresh value {f!r} is not numeric")
+            continue
+        if b is None or not isinstance(b, (int, float)) or isinstance(b, bool):
+            # baseline predates this section (the first PR that adds a bench
+            # section MUST still pass the gate — there is nothing to regress
+            # against yet) or holds a non-numeric relic: skip with a warning,
+            # never KeyError/fail. The next commit's baseline picks it up.
+            print(f"  [skip] {path}: {f:.3f} — section missing from "
+                  f"baseline, nothing to gate against", file=sys.stderr)
             continue
         ok = (f >= (1 - thr) * b) if higher else (f <= (1 + thr) * b)
         arrow = ">=" if higher else "<="

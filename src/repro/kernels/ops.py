@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.kernels import flash_attention as _fa
 from repro.kernels import linear_scan as _ls
 from repro.kernels import matmul as _mm
+from repro.kernels import paged_attention as _pa
 from repro.kernels import quant_matmul as _qm
 from repro.kernels import ref as _ref
 
@@ -122,6 +123,62 @@ def flash_prefill(q, k, v, *, causal: bool = True, window: int = 0,
     return _fa.flash_attention_kv(q, k, v, causal=causal, window=window,
                                   block_q=bq, block_k=bk,
                                   interpret=_interpret())
+
+
+# trace-size guard for the paged kernel: interpret mode inlines one kernel
+# body per grid step (B * H * mps), so an oversized grid would explode trace
+# time on CPU; on TPU the Mosaic grid is free but tiny tiles are not worth
+# steering through the MXU — both ends route to the jnp oracle
+_PAGED_MAX_INTERPRET_GRID = 4096
+
+
+def _paged_dispatch(q, pool_k, pool_v, block_tables, start, window: int):
+    B, Sq, H, hd = q.shape
+    ps = pool_k.shape[1]
+    mps = block_tables.shape[1]
+    if _interpret():
+        if B * H * mps > _PAGED_MAX_INTERPRET_GRID:
+            return _ref.paged_attention(q, pool_k, pool_v, block_tables,
+                                        start, window=window)
+        return _pa.paged_attention(q, pool_k, pool_v, block_tables, start,
+                                   window=window, interpret=True)
+    if hd % 128 or ps % 8:
+        return _ref.paged_attention(q, pool_k, pool_v, block_tables, start,
+                                    window=window)
+    return _pa.paged_attention(q, pool_k, pool_v, block_tables, start,
+                               window=window, interpret=False)
+
+
+@functools.partial(jax.jit, static_argnames=("window",))
+def paged_decode(q, pool_k, pool_v, block_tables, cache_pos, *,
+                 window: int = 0):
+    """Single-token decode attention against a paged KV cache.
+
+    q: (B, 1, H, hd); pool_k/pool_v: (P, page_size, KV, hd) — one layer's
+    slice of the shared pool; block_tables: (B, mps) int32 (-1 =
+    unallocated); cache_pos: (B,) int32 per-slot positions (the new K/V row
+    must already be WRITTEN at logical row cache_pos[b] — the write stays a
+    plain block-table scatter outside the kernel). Gathers K/V blocks
+    through the block table inside the kernel and skips fully-masked pages;
+    a freed slot (all--1 table) returns exactly 0."""
+    return _paged_dispatch(q, pool_k, pool_v, block_tables, cache_pos,
+                           window)
+
+
+@functools.partial(jax.jit, static_argnames=("window",))
+def paged_prefill(q, pool_k, pool_v, block_tables, start, *,
+                  window: int = 0):
+    """Continuation-chunk prefill attention against a paged KV cache.
+
+    q: (B, C, H, hd) — C consecutive prompt positions, row i of slot b at
+    position ``start[b] + i``; the chunk's post-RoPE K/V rows must already
+    be spliced into the slot's pages (the engine's incremental per-chunk
+    scatter), so prior chunks, aliased prefix pages, and the current chunk
+    are all read uniformly through the block table. Causal masking is
+    ``k_pos <= q_pos`` over the slot's logical rows; pages wholly beyond
+    the chunk's causal frontier (or unallocated) are skipped, so mask work
+    scales with the slot's LIVE pages instead of O(C x s_max)."""
+    return _paged_dispatch(q, pool_k, pool_v, block_tables, start, window)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk",))

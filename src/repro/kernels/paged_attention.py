@@ -1,0 +1,151 @@
+"""Paged attention: block-table-indirect blockwise softmax over a shared
+KV page pool (the serving engine's vLLM-style cache layout).
+
+The repo's first kernel whose memory access pattern is INDIRECT: K/V blocks
+are not a function of grid indices alone — each (slot, kv-page) grid step
+reads the page named by ``block_tables[slot, page_idx]`` out of the shared
+pool ``(num_pages, page_size, KV, hd)``. The block table and the per-slot
+start positions ride in as SCALAR-PREFETCH operands
+(``pltpu.PrefetchScalarGridSpec``) so the index map can steer each block's
+DMA before the body runs — the same "compute never waits on a dense,
+oversized buffer" dataflow the paper builds around Ultra RAM placement.
+
+One kernel serves both serving attention shapes:
+
+* **decode** — Sq == 1, one new query row per slot at position ``start[b]``;
+* **prefill chunk** — Sq == C consecutive prompt positions starting at
+  ``start[b]`` (the engine's incremental per-chunk splice writes the chunk's
+  K/V rows into the pool FIRST, so the kernel reads prior chunks, aliased
+  prefix pages, and the current chunk uniformly through the block table).
+
+Fully-masked pages are SKIPPED (``pl.when``): unallocated block-table slots
+(page id -1), pages wholly beyond the causal frontier
+(``page_start > start + Sq - 1``), and — for windowed layers — pages wholly
+behind the sliding window. Work therefore scales with each slot's LIVE
+pages, not with the block-table span (s_max), which is exactly the
+O(C x s_max) masked-einsum cost this kernel replaces. Partially-filled last
+pages and partially-visible pages are handled by per-row masking inside the
+body; masked probabilities are explicitly zeroed (not just sentinel-masked)
+so a row with no valid key in a visited page contributes nothing, and a row
+with no valid key anywhere (a freed slot parked at INACTIVE_POS with an
+all--1 block table) returns exactly 0 through the ``l == 0`` guard.
+
+Grid: (B, H, mps) with the kv page index innermost so the online-softmax
+accumulators (m, l, acc) persist in VMEM scratch across a slot's pages —
+the paper's "accumulators in on-chip RAM" structure, same as the flash
+kernel. GQA shares each K/V block across ``H // KV`` query heads via the
+``h // G`` index map.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30   # f32 scratch sentinel (never materialized in low precision)
+
+
+def _kernel(bt_ref, start_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, scale: float, window: int,
+            block_q: int, page_size: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    nj = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    page = bt_ref[b, j]
+    start = start_ref[b]
+    k_start = j * page_size
+
+    def visit():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)              # (bq, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)              # (ps, hd)
+        # dot-then-scale in f32: the same operation order as the masked-
+        # einsum reference, so the degenerate one-page config stays
+        # numerically aligned with it
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        q_pos = start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, page_size), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, page_size), 1)
+        ok = k_pos <= q_pos
+        if window > 0:
+            ok &= k_pos > q_pos - window
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        # explicit zeroing, not exp(sentinel): a row fully masked in THIS
+        # page while m is still NEG_INF would otherwise turn exp(0) == 1
+        # into garbage mass from rows it may never attend
+        p = jnp.where(ok, jnp.exp(s - m_new[:, None]), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    # whole-page skip: unallocated, beyond the causal frontier of the LAST
+    # query row, or (windowed) wholly behind the FIRST query row's window
+    relevant = (page >= 0) & (k_start <= start + block_q - 1)
+    if window > 0:
+        relevant &= (k_start + page_size - 1) > (start - window)
+    pl.when(relevant)(visit)
+
+    @pl.when(j == nj - 1)
+    def _():
+        # l == 0 (no valid key anywhere — freed slot, all pages skipped)
+        # yields exactly 0, matching the reference oracle
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def paged_attention(q, pool_k, pool_v, block_tables, start, *,
+                    window: int = 0, interpret: bool = False):
+    """q: (B, Sq, H, hd); pool_k/pool_v: (P, page_size, KV, hd);
+    block_tables: (B, mps) int32 page ids (-1 = unallocated);
+    start: (B,) int32 — the position of each slot's FIRST query row (query
+    row i is at ``start[b] + i``; logical key row r lives in page ``r // ps``
+    at offset ``r % ps``). Returns (B, Sq, H, hd) in q.dtype."""
+    B, Sq, H, hd = q.shape
+    P, ps, KV, _ = pool_k.shape
+    assert H % KV == 0
+    G = H // KV
+    mps = block_tables.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    kernel = functools.partial(_kernel, scale=scale, window=window,
+                               block_q=Sq, page_size=ps)
+    # the kv index maps read the PREFETCHED block table: the page a grid
+    # step streams is data-dependent (clamped at 0 for unallocated slots —
+    # the body skips those steps entirely, the clamp only keeps the
+    # prefetch in bounds)
+    kv_spec = pl.BlockSpec(
+        (1, ps, 1, hd),
+        lambda b, h, j, bt, st: (jnp.maximum(bt[b, j], 0), 0, h // G, 0))
+    q_spec = pl.BlockSpec((1, Sq, 1, hd),
+                          lambda b, h, j, bt, st: (b, 0, h, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, H, mps),
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=q_spec,
+        scratch_shapes=[pltpu.VMEM((Sq,), jnp.float32),
+                        pltpu.VMEM((Sq,), jnp.float32),
+                        pltpu.VMEM((Sq, hd), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Sq, H, hd), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(block_tables, jnp.int32), jnp.asarray(start, jnp.int32),
+      q, pool_k, pool_v)

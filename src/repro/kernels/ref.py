@@ -1,11 +1,27 @@
 """Pure-jnp oracles for every Pallas kernel. These are the ground truth the
-kernel tests assert against (and the CPU execution path for small problems)."""
+kernel tests assert against (and the CPU execution path for small problems).
+Also home to :func:`mask_value`, the shared masking-sentinel helper — it
+lives at the kernels layer (no model dependency) so both kernels and models
+can import it at module scope without a package cycle."""
 from __future__ import annotations
 
 import math
 
 import jax
 import jax.numpy as jnp
+
+
+def mask_value(dtype) -> float:
+    """Finite large-negative sentinel for additive/where masking in
+    ``dtype``. -1e30 where representable (float32/bfloat16 — keeps the
+    historical numerics bit-for-bit), else half the dtype's minimum:
+    float16's max is 65504, so -1e30 silently overflows to -inf there and a
+    fully-masked softmax row (a freed serving slot parked at INACTIVE_POS)
+    turns into NaN via exp(-inf - -inf) instead of a harmless row."""
+    fi = jnp.finfo(jnp.dtype(dtype))
+    if float(fi.max) > 1e30:
+        return -1e30
+    return float(fi.min) / 2
 
 
 def matmul(a, b):
@@ -18,6 +34,49 @@ def quant_matmul(a, w_q, scales):
     out = a @ (w_q * scales) with f32 accumulation."""
     w = w_q.astype(jnp.float32) * scales.astype(jnp.float32)[None, :]
     return jnp.dot(a.astype(jnp.float32), w).astype(a.dtype)
+
+
+def paged_attention(q, pool_k, pool_v, block_tables, start, *, window=0):
+    """Oracle for the paged-attention kernel: gather each slot's logical
+    view through its block table and run a masked partial softmax.
+
+    q: (B, Sq, H, hd); pool_k/pool_v: (P, ps, KV, hd); block_tables:
+    (B, mps) int32 (-1 = unallocated); start: (B,) int32 first query
+    position per slot (query row i is at start[b] + i; logical key row r
+    lives in page r // ps at offset r % ps). Masked probabilities are
+    ZEROED (not sentinel-softmaxed): a query row with no valid key anywhere
+    — a freed slot with an all--1 block table — returns exactly 0, matching
+    the kernel's l == 0 guard."""
+    B, Sq, H, hd = q.shape
+    P, ps, KV, _ = pool_k.shape
+    mps = block_tables.shape[1]
+    G = H // KV
+    n_rows = mps * ps
+    j = jnp.arange(n_rows)
+    page = jnp.take_along_axis(
+        block_tables, jnp.broadcast_to(j // ps, (B, n_rows)), axis=1)
+    ok = page >= 0
+    phys = jnp.where(ok, page * ps + j % ps, 0)
+    flat_k = pool_k.reshape(P * ps, KV, hd)
+    flat_v = pool_v.reshape(P * ps, KV, hd)
+    view_k = flat_k[phys]                       # (B, n_rows, KV, hd)
+    view_v = flat_v[phys]
+    q_pos = start[:, None] + jnp.arange(Sq)[None, :]        # (B, Sq)
+    valid = ok[:, None, :] & (j[None, None, :] <= q_pos[:, :, None])
+    if window > 0:
+        valid &= j[None, None, :] > q_pos[:, :, None] - window
+    qg = q.reshape(B, Sq, KV, G, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, view_k.astype(q.dtype)
+                   ).astype(jnp.float32) / math.sqrt(hd)
+    vm = valid[:, None, None, :, :]
+    s = jnp.where(vm, s, mask_value(s.dtype))
+    m = s.max(axis=-1)
+    p = jnp.where(vm, jnp.exp(s - m[..., None]), 0.0)
+    l = p.sum(axis=-1)
+    acc = jnp.einsum("bkgqs,bskh->bkgqh", p.astype(q.dtype),
+                     view_v.astype(q.dtype)).astype(jnp.float32)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]            # (B,KV,G,Sq,hd)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd).astype(q.dtype)
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, q_positions=None,
@@ -38,7 +97,7 @@ def flash_attention(q, k, v, *, causal=True, window=0, q_positions=None,
         ok &= diff >= 0
     if window > 0:
         ok &= diff < window
-    s = jnp.where(ok, s, -1e30)
+    s = jnp.where(ok, s, mask_value(s.dtype))
     p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
     return jnp.einsum("bkgqs,bskh->bqkgh", p, v).reshape(B, Sq, H, hd)
 

@@ -36,12 +36,13 @@ def cross_entropy(logits, labels):
 def head_ce_chunk(x_c, head_w, labels_c, vocab: int, tied: bool):
     """CE over one sequence chunk without keeping logits alive.
     x_c: (B,C,D); head_w: (D,Vp) or tied table (Vp,D); labels_c: (B,C)."""
+    from repro.kernels.ref import mask_value
     w = head_w.astype(x_c.dtype)
     logits = (x_c @ w.T if tied else x_c @ w).astype(jnp.float32)
     vp = logits.shape[-1]
     if vocab < vp:
         mask = jax.lax.broadcasted_iota(jnp.int32, (vp,), 0) < vocab
-        logits = jnp.where(mask, logits, -1e30)
+        logits = jnp.where(mask, logits, mask_value(logits.dtype))
     logits = shard(logits, "batch", None, "vocab")
     lse = jax.nn.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(logits, labels_c[..., None], axis=-1)[..., 0]
@@ -343,11 +344,50 @@ def make_prefill_chunk(model: Model, *, compute_dtype=jnp.bfloat16,
     return first_chunk
 
 
-def make_decode_step(model: Model, *, compute_dtype=jnp.bfloat16):
-    """One-token decode against a KV/state cache; cache buffers are donated."""
+def make_prefill_chunk_paged(model: Model, *, compute_dtype=jnp.bfloat16,
+                             attn_impl: str = "kernel"):
+    """Incremental paged prefill step builder: each call computes one prompt
+    chunk for a group of K slots and splices its per-layer K/V STRAIGHT into
+    the resident paged cache's pools through the group's block tables —
+    there is no transient request cache and no completion splice, and a
+    prefix-cache hit's aliased pages are read in place (no gather seeding).
+
+    Returns ``chunk(params, cache, batch) -> (last_logits, cache)`` where
+    ``cache`` is the engine's resident paged cache (callers donate it) and
+    ``batch`` carries ``tokens`` (K, C), ``bt`` (K, mps) block-table rows,
+    and traced scalars ``start`` (the chunk's first absolute position — the
+    engine groups jobs so the whole group shares it) and ``floor`` (the
+    first row the group may write; rows below live in shared immutable
+    prefix pages — copy-on-write's no-write half). ``attn_impl='kernel'``
+    attends through the block-skipping Pallas kernel, ``'einsum'`` through
+    the masked-gather reference. Only families with
+    ``supports_paged_prefill`` (dense/MoE/VLM) accept this path."""
+    def chunk(params, cache, batch):
+        return model.prefill_chunk_paged(
+            params, batch["tokens"], cache, bt_rows=batch["bt"],
+            start=batch["start"], write_floor=batch["floor"],
+            compute_dtype=compute_dtype, attn_impl=attn_impl,
+            **_batch_extras(model, batch))
+    return chunk
+
+
+def make_decode_step(model: Model, *, compute_dtype=jnp.bfloat16,
+                     paged_attn_impl: Optional[str] = None):
+    """One-token decode against a KV/state cache; cache buffers are donated.
+    ``paged_attn_impl`` ('kernel' | 'einsum') selects the paged-cache read
+    path for the families that page through ``attention_decode_paged``
+    (dense/MoE/VLM/encdec); None keeps each family's default (the
+    masked-einsum reference) — hybrid's ring path has its own gather."""
+    from repro.configs.base import Family
+    extra = {}
+    if paged_attn_impl is not None and model.cfg.family in (
+            Family.DENSE, Family.MOE, Family.VLM, Family.ENCDEC):
+        extra["paged_attn_impl"] = paged_attn_impl
+
     def decode(params, cache, batch):
         logits, cache = model.decode_step(params, batch["token"], cache,
                                           compute_dtype=compute_dtype,
+                                          **extra,
                                           **_batch_extras(model, batch))
         return logits, cache
     return decode

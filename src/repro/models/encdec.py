@@ -208,17 +208,18 @@ def precompute_cross_kv(params, cfg: ArchConfig, enc_out):
 
 
 def _decode_layer(cfg, lp, x, ck, cv, xk, xv, pos, positions, enc_pos,
-                  block_tables=None):
+                  block_tables=None, paged_impl: str = "einsum"):
     """One decoder decode layer (self-attn against cache + cross-attn).
     Exposed for roofline probes. With ``block_tables``, ck/cv are one layer's
     (P, ps, KV, hd) page-pool slices (paged self-attn KV; the cross-attn
     xk/xv stay dense per slot — they are written once at prefill and fixed
-    at ENC_LEN, so paging buys nothing)."""
+    at ENC_LEN, so paging buys nothing); ``paged_impl`` selects the Pallas
+    block-gather kernel or the masked-einsum reference read."""
     h = L.apply_norm(x, lp["ln1"], "layernorm")
     if block_tables is not None:
         out, ck, cv = L.attention_decode_paged(
             lp["attn"], h, _self_dims(cfg, True), ck, cv, block_tables, pos,
-            positions)
+            positions, impl=paged_impl)
     else:
         out, ck, cv = L.attention_decode(lp["attn"], h, _self_dims(cfg, True),
                                          ck, cv, pos, positions)
@@ -294,7 +295,7 @@ def prefill_chunk(params, cfg: ArchConfig, tokens, cache, *,
 
 
 def decode_step(params, cfg: ArchConfig, token, cache, *, compute_dtype=jnp.bfloat16,
-                **_):
+                paged_attn_impl: str = "einsum", **_):
     B = token.shape[0]
     pos = cache["pos"]
     bt = cache.get("block_tables")
@@ -316,7 +317,7 @@ def decode_step(params, cfg: ArchConfig, token, cache, *, compute_dtype=jnp.bflo
         xk = jax.lax.dynamic_index_in_dim(cache["xk"], i, 0, keepdims=False)
         xv = jax.lax.dynamic_index_in_dim(cache["xv"], i, 0, keepdims=False)
         x, ck, cv = _decode_layer(cfg, lp, x, ck, cv, xk, xv, pos, positions,
-                                  enc_pos, bt)
+                                  enc_pos, bt, paged_attn_impl)
         ck_all = jax.lax.dynamic_update_index_in_dim(ck_all, ck, i, 0)
         cv_all = jax.lax.dynamic_update_index_in_dim(cv_all, cv, i, 0)
         return x, ck_all, cv_all

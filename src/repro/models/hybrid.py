@@ -231,7 +231,7 @@ def _ring_sdpa(lp, h, q, ck, cv, valid, dims):
     if valid.ndim == 2:
         valid = valid[:, None, :]                        # (B,1,S): all queries
     scores = jnp.where(valid[:, None, None, :, :], scores.astype(jnp.float32),
-                       -1e30)
+                       L.mask_value(jnp.float32))
     probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     out = jnp.einsum("bkgqs,bskh->bqkgh", probs, cv.astype(q.dtype)
                      ).reshape(B, Sq, H * hd)

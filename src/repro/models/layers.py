@@ -19,6 +19,11 @@ from repro.sharding.specs import shard
 
 
 # ---------------------------------------------------------------- numerics
+# canonical definition lives in kernels/ref.py (the dependency-free numerics
+# layer); re-exported here because every model-side masking site uses it
+from repro.kernels.ref import mask_value  # noqa: E402  (re-export)
+
+
 def cast_compute(x, dtype):
     return x.astype(dtype) if dtype is not None else x
 
@@ -162,7 +167,7 @@ def _mask_bias(q_pos, k_pos, window: int, causal: bool):
         ok &= diff >= 0
     if window > 0:
         ok &= diff < window
-    return jnp.where(ok, 0.0, -1e30).astype(jnp.float32)
+    return jnp.where(ok, 0.0, mask_value(jnp.float32)).astype(jnp.float32)
 
 
 def _sdpa_einsum(q, k, v, q_pos, k_pos, dims: AttnDims):
@@ -405,7 +410,8 @@ def _decode_sdpa_local(q, ck, cv, cache_pos, k_positions, window, hd):
     valid = kp <= cache_pos
     if window > 0:
         valid &= kp > cache_pos - window
-    scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
+    scores = jnp.where(valid[:, None, None, None, :], scores,
+                       mask_value(scores.dtype))
     m = scores.max(axis=-1)                                   # (B,KV,G,1)
     p = jnp.exp(scores - m[..., None])
     l = p.sum(axis=-1)
@@ -567,7 +573,8 @@ def attention_prefill_chunk(params, x, dims: AttnDims, cache_k, cache_v,
         valid = k_pos[None, None, :] <= positions[:, :, None]      # (B,C,S)
         if dims.window > 0:
             valid &= k_pos[None, None, :] > positions[:, :, None] - dims.window
-        scores = jnp.where(valid[:, None, None, :, :], scores, -1e30)
+        scores = jnp.where(valid[:, None, None, :, :], scores,
+                           mask_value(scores.dtype))
         probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
         out = jnp.einsum("bkgqs,bskh->bqkgh", probs, cv.astype(q.dtype)
                          ).reshape(B, C, H * hd)
@@ -617,7 +624,8 @@ def paged_write_rows(pool, rows, row_idx, valid):
 
 
 def attention_decode_paged(params, x, dims: AttnDims, pool_k, pool_v,
-                           block_tables, cache_pos, positions):
+                           block_tables, cache_pos, positions,
+                           impl: str = "einsum"):
     """Single-token decode against a PAGED KV cache (vLLM-style block tables).
 
     x: (B,1,D); pool_k/pool_v: (P, page_size, KV, hd) — ONE layer's slice of
@@ -629,15 +637,23 @@ def attention_decode_paged(params, x, dims: AttnDims, pool_k, pool_v,
     Writes go through block-table indirection: slot b's new K/V row lands in
     page block_tables[b, pos//ps] at offset pos % ps; writes from slots whose
     position is out of range (>= mps*ps — freed slots at INACTIVE_POS) or
-    whose page is unallocated are DROPPED. Reads gather the slot's logical
-    view (B, mps*ps, KV, hd) from its own pages and mask to
+    whose page is unallocated are DROPPED.
+
+    Reads: ``impl='kernel'`` routes through the Pallas paged-attention
+    kernel (``kernels.ops.paged_decode``) — K/V blocks are gathered through
+    the block table INSIDE the kernel and fully-masked pages (unallocated,
+    or beyond the causal frontier) are skipped, so read work scales with a
+    slot's live pages. ``impl='einsum'`` is the masked-gather reference:
+    materialize the slot's logical view (B, mps*ps, KV, hd) and mask to
     allocated-page AND position <= pos (AND the sliding window) — rows of
     never-allocated trailing pages carry an INACTIVE_POS key position, so
     they can never win the causal mask for a live slot.
 
-    With page_size == s_max (one page per slot) this reproduces the dense
-    ``attention_decode`` vector path bit-for-bit: the gathered view IS the
-    slot's dense cache row and the masks coincide."""
+    With page_size == s_max (one page per slot) the einsum path reproduces
+    the dense ``attention_decode`` vector path bit-for-bit (the gathered
+    view IS the slot's dense cache row and the masks coincide); the kernel
+    path matches it to greedy-token exactness (its online softmax uses the
+    same dot-then-scale f32 operation order)."""
     q, k, v = _qkv(params, x, dims, positions)
     P, ps, KV, hd = pool_k.shape
     B = q.shape[0]
@@ -645,7 +661,6 @@ def attention_decode_paged(params, x, dims: AttnDims, pool_k, pool_v,
     n_rows = mps * ps
     H = dims.num_heads
     G = H // KV
-    qg = q.reshape(B, 1, KV, G, hd)
     b_idx = jnp.arange(B)
 
     # ---- write the new K/V row via the block table
@@ -655,17 +670,96 @@ def attention_decode_paged(params, x, dims: AttnDims, pool_k, pool_v,
     pool_k = paged_write_rows(pool_k, k[:, 0], w_row, w_ok)
     pool_v = paged_write_rows(pool_v, v[:, 0], w_row, w_ok)
 
-    # ---- gather each slot's logical view and attend
-    phys, ok = paged_row_indices(block_tables, ps, n_rows)
+    if impl == "kernel":
+        from repro.kernels import ops as kops
+        # freed slots (cache_pos >= n_rows) carry an all--1 table: every
+        # page is skipped and the kernel returns 0 rows for them, so no
+        # clamping of start is needed for the skip logic to stay sound
+        out = kops.paged_decode(q, pool_k, pool_v, block_tables, cache_pos,
+                                window=dims.window)
+        out = out.reshape(B, 1, H * hd)
+    else:
+        # ---- gather each slot's logical view and attend
+        qg = q.reshape(B, 1, KV, G, hd)
+        phys, ok = paged_row_indices(block_tables, ps, n_rows)
+        flat_k = pool_k.reshape(P * ps, KV, hd)
+        flat_v = pool_v.reshape(P * ps, KV, hd)
+        view_k = flat_k[phys]                        # (B, n_rows, KV, hd)
+        view_v = flat_v[phys]
+        k_positions = jnp.where(ok, jnp.arange(n_rows)[None, :], INACTIVE_POS)
+        m, l, acc = _decode_sdpa_local(qg, view_k, view_v, cache_pos[:, None],
+                                       k_positions, dims.window, hd)
+        out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        out = out.transpose(0, 3, 1, 2, 4).reshape(B, 1, H * hd)
+    return out @ params["wo"].astype(x.dtype), pool_k, pool_v
+
+
+def attention_prefill_chunk_paged(params, x, dims: AttnDims, pool_k, pool_v,
+                                  block_tables, positions, write_floor,
+                                  impl: str = "kernel"):
+    """Multi-token prefill-chunk attention DIRECTLY against the paged pool —
+    the incremental-splice counterpart of ``attention_prefill_chunk``.
+
+    x: (B, C, D); pool_k/pool_v: one layer's (P, ps, KV, hd) pool slice;
+    block_tables: (B, mps) rows for the chunk's slots; positions: (B, C)
+    absolute query positions (row i at ``positions[:, 0] + i`` — the engine
+    groups jobs so a chunk's positions are contiguous and share a start);
+    write_floor: scalar — the first logical row this request may WRITE.
+
+    The chunk's post-RoPE K/V scatter straight into the slot's own pages
+    (the per-chunk incremental splice: there is no transient request cache
+    to fill and no completion splice to pay). Rows below ``write_floor``
+    are DROPPED — they live in shared immutable prefix pages aliased by
+    other block tables (copy-on-write's no-write half); the COW partial
+    page is re-materialised by the engine with the same scatter before the
+    first chunk runs. Attention then reads prior chunks, aliased prefix
+    pages, and the current chunk uniformly through the block table:
+    ``impl='kernel'`` uses the block-skipping Pallas kernel
+    (``ops.paged_prefill``); ``impl='einsum'`` is the masked-gather
+    reference over the full block-table span. Returns
+    (out (B, C, H*hd) @ wo, new_pool_k, new_pool_v)."""
+    q, k, v = _qkv(params, x, dims, positions)
+    B, C, KV, hd = k.shape
+    P, ps = pool_k.shape[:2]
+    mps = block_tables.shape[1]
+    n_rows = mps * ps
+    H = dims.num_heads
+
+    # ---- incremental splice: scatter the chunk's K/V rows via block table
+    page = jnp.take_along_axis(
+        block_tables, jnp.clip(positions // ps, 0, mps - 1), axis=1)
+    w_ok = ((page >= 0) & (positions >= write_floor)
+            & (positions >= 0) & (positions < n_rows))
+    w_rows = jnp.where(w_ok, page * ps + positions % ps, P * ps)  # OOB drop
     flat_k = pool_k.reshape(P * ps, KV, hd)
     flat_v = pool_v.reshape(P * ps, KV, hd)
-    view_k = flat_k[phys]                            # (B, n_rows, KV, hd)
-    view_v = flat_v[phys]
-    k_positions = jnp.where(ok, jnp.arange(n_rows)[None, :], INACTIVE_POS)
-    m, l, acc = _decode_sdpa_local(qg, view_k, view_v, cache_pos[:, None],
-                                   k_positions, dims.window, hd)
-    out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
-    out = out.transpose(0, 3, 1, 2, 4).reshape(B, 1, H * hd)
+    flat_k = flat_k.at[w_rows].set(k.astype(flat_k.dtype), mode="drop")
+    flat_v = flat_v.at[w_rows].set(v.astype(flat_v.dtype), mode="drop")
+    pool_k = flat_k.reshape(pool_k.shape)
+    pool_v = flat_v.reshape(pool_v.shape)
+
+    if impl == "kernel":
+        from repro.kernels import ops as kops
+        out = kops.paged_prefill(q, pool_k, pool_v, block_tables,
+                                 positions[:, 0], window=dims.window)
+        out = out.reshape(B, C, H * hd)
+    else:
+        G = H // KV
+        qg = q.reshape(B, C, KV, G, hd)
+        phys, ok = paged_row_indices(block_tables, ps, n_rows)
+        view_k = flat_k[phys]                        # (B, n_rows, KV, hd)
+        view_v = flat_v[phys]
+        scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, view_k.astype(q.dtype)
+                            ).astype(jnp.float32) / math.sqrt(hd)
+        k_pos = jnp.where(ok, jnp.arange(n_rows)[None, :], INACTIVE_POS)
+        valid = k_pos[:, None, :] <= positions[:, :, None]       # (B,C,S)
+        if dims.window > 0:
+            valid &= k_pos[:, None, :] > positions[:, :, None] - dims.window
+        scores = jnp.where(valid[:, None, None, :, :], scores,
+                           mask_value(scores.dtype))
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bkgqs,bskh->bqkgh", probs, view_v.astype(q.dtype)
+                         ).reshape(B, C, H * hd)
     return out @ params["wo"].astype(x.dtype), pool_k, pool_v
 
 
@@ -831,5 +925,6 @@ def lm_logits(params_embed, x, w_unembed=None, vocab: Optional[int] = None):
     vp = logits.shape[-1]
     if vocab is not None and vocab < vp:
         mask = jax.lax.broadcasted_iota(jnp.int32, (vp,), 0) < vocab
-        logits = jnp.where(mask, logits, jnp.asarray(-1e30, logits.dtype))
+        logits = jnp.where(mask, logits,
+                           jnp.asarray(mask_value(logits.dtype), logits.dtype))
     return logits

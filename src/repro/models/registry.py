@@ -54,6 +54,22 @@ class Model:
         See launch/steps.py::make_prefill_chunk for the serving contract."""
         return self.mod.prefill_chunk(params, self.cfg, tokens, cache, **kw)
 
+    @property
+    def supports_paged_prefill(self) -> bool:
+        """True for families whose prompt state is exactly (k, v, pos) — the
+        ones the incremental paged prefill (chunks splicing straight into
+        pages, attention through the block table) can serve. Mirrors the
+        prefix-cache support set: hybrid's recurrent carry and encdec's
+        encoder/cross-K/V are not page-resident."""
+        return hasattr(self.mod, "prefill_chunk_paged")
+
+    def prefill_chunk_paged(self, params, tokens, cache, **kw):
+        """Prompt chunk computed at full width and spliced into the RESIDENT
+        paged cache incrementally (no transient request cache). See
+        launch/steps.py::make_prefill_chunk_paged for the serving contract."""
+        return self.mod.prefill_chunk_paged(params, self.cfg, tokens, cache,
+                                            **kw)
+
     # -------------------------------------------------- input specs
     def extra_inputs(self, batch: int, seq: int, dtype=jnp.bfloat16) -> dict:
         """Modality-frontend STUB inputs (precomputed embeddings), per assignment."""
@@ -227,6 +243,30 @@ def insert_cache_rows_paged(cache, request_cache, slots, phys_rows):
             out[key] = leaf.at[slots].set(jnp.asarray(req, leaf.dtype))
         else:
             out[key] = leaf.at[:, slots].set(req.astype(leaf.dtype))
+    return out
+
+
+def copy_pool_rows(cache, src_rows, dst_rows):
+    """Copy K/V rows between flattened pool positions — the incremental
+    prefill's copy-on-write materialisation: a prefix hit's PARTIAL source
+    page rows are copied into the fresh page standing in for it, using the
+    same gather/scatter the per-chunk splice uses (no transient cache, no
+    extra device pass shape).
+
+    ``src_rows``/``dst_rows``: (K, R) int32 flattened pool rows
+    (page * page_size + offset); entries with dst >= num_pages * page_size
+    are DROPPED (the masked tail of a partial copy). Only the pool K/V
+    leaves move; everything else passes through untouched."""
+    src_rows = jnp.asarray(src_rows, jnp.int32)
+    dst_rows = jnp.asarray(dst_rows, jnp.int32)
+    out = dict(cache)
+    for key in ("k", "v"):
+        pool = cache[key]                   # (L, P, ps, KV, hd)
+        Lr, P, ps = pool.shape[:3]
+        flat = pool.reshape((Lr, P * ps) + pool.shape[3:])
+        rows = flat[:, jnp.clip(src_rows, 0, P * ps - 1)]
+        flat = flat.at[:, dst_rows].set(rows, mode="drop")
+        out[key] = flat.reshape(pool.shape)
     return out
 
 

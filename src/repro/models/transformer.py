@@ -152,12 +152,12 @@ def _super_apply_unrolled(cfg: ArchConfig, sp, x, positions, img, attn_impl):
 
 
 def _super_decode_unrolled(cfg: ArchConfig, sp, x, ck, cv, img, pos, positions,
-                           block_tables=None):
+                           block_tables=None, paged_impl: str = "einsum"):
     cks, cvs = [], []
     for i in range(cfg.cross_attn_every):
         lp = jax.tree.map(lambda t: t[i], sp["blocks"])
         x, c1, c2 = _decode_layer(cfg, lp, x, ck[i], cv[i], pos, positions,
-                                  block_tables)
+                                  block_tables, paged_impl)
         cks.append(c1)
         cvs.append(c2)
     x = _cross_apply(cfg, sp["cross"], x, img, "einsum")
@@ -258,16 +258,18 @@ def cache_logical(cfg: ArchConfig):
 
 
 def _decode_layer(cfg: ArchConfig, lp, x, ck, cv, pos, positions,
-                  block_tables=None):
+                  block_tables=None, paged_impl: str = "einsum"):
     """One decode layer: returns (x, new_ck, new_cv). Exposed for roofline
     probes (launch/probes.py) as well as the decode scan body. When
     ``block_tables`` is given, ck/cv are one layer's (P, ps, KV, hd) page-pool
-    slice and attention goes through the paged path (models/layers.py)."""
+    slice and attention goes through the paged path (models/layers.py);
+    ``paged_impl`` selects the Pallas block-gather kernel or the
+    masked-einsum reference read."""
     h = L.apply_norm(x, lp["ln1"], cfg.norm)
     if block_tables is not None:
         out, ck, cv = L.attention_decode_paged(lp["attn"], h, _attn_dims(cfg),
                                                ck, cv, block_tables, pos,
-                                               positions)
+                                               positions, impl=paged_impl)
     else:
         out, ck, cv = L.attention_decode(lp["attn"], h, _attn_dims(cfg), ck,
                                          cv, pos, positions)
@@ -384,8 +386,113 @@ def prefill_chunk(params, cfg: ArchConfig, tokens, cache, *, image_embeds=None,
                                             pos=start + C)
 
 
+# ------------------------------------------------- paged parallel prefill
+def _prefill_chunk_layer_paged(cfg: ArchConfig, lp, x, pk, pv, bt, positions,
+                               write_floor, impl):
+    """One layer over a prompt chunk attending the PAGED pool directly:
+    the chunk's K/V rows scatter into the slot's own pages (the incremental
+    splice) and attention reads everything — prior chunks, aliased prefix
+    pages, the current chunk — through the block table. Same residual
+    structure as ``_prefill_chunk_layer``/``_decode_layer``."""
+    h = L.apply_norm(x, lp["ln1"], cfg.norm)
+    out, pk, pv = L.attention_prefill_chunk_paged(
+        lp["attn"], h, _attn_dims(cfg), pk, pv, bt, positions, write_floor,
+        impl=impl)
+    x = x + out
+    h = L.apply_norm(x, lp["ln2"], cfg.norm)
+    if cfg.moe:
+        y, _ = L.moe(lp["moe"], h, _moe_dims(cfg))
+    else:
+        y = L.mlp(lp["mlp"], h)
+    return x + y, pk, pv
+
+
+def _super_prefill_chunk_paged_unrolled(cfg: ArchConfig, sp, x, pk, pv, bt,
+                                        img, positions, write_floor, impl):
+    pks, pvs = [], []
+    for i in range(cfg.cross_attn_every):
+        lp = jax.tree.map(lambda t: t[i], sp["blocks"])
+        x, p1, p2 = _prefill_chunk_layer_paged(cfg, lp, x, pk[i], pv[i], bt,
+                                               positions, write_floor, impl)
+        pks.append(p1)
+        pvs.append(p2)
+    x = _cross_apply(cfg, sp["cross"], x, img, "einsum")
+    return x, jnp.stack(pks), jnp.stack(pvs)
+
+
+def prefill_chunk_paged(params, cfg: ArchConfig, tokens, cache, *, bt_rows,
+                        start, write_floor, image_embeds=None,
+                        compute_dtype=jnp.bfloat16, attn_impl: str = "kernel",
+                        **_):
+    """Full-width prefill over one prompt chunk, spliced into the RESIDENT
+    paged cache incrementally (no transient request cache, no completion
+    splice — the tentpole path).
+
+    tokens: (K, C) — C consecutive prompt positions for a group of K slots,
+    starting at the traced scalar ``start``; ``cache`` is the engine's
+    resident PAGED cache (page pools + per-slot leaves); ``bt_rows``:
+    (K, mps) the group's block-table rows; ``write_floor``: traced scalar —
+    rows below it live in shared immutable prefix pages and are dropped by
+    the scatter. Every chunk is uniform (no first/continuation split): the
+    chunk writes its K/V rows into the group's pages, then attends the
+    pages through the block table, so a prefix-cache hit needs NO gather
+    seeding — aliased pages are read in place. Returns (last-position
+    logits (K, 1, Vp) float32, cache with updated pools); the engine
+    advances the group's ``pos`` at job completion."""
+    K, C = tokens.shape
+    start = jnp.asarray(start, jnp.int32)
+    write_floor = jnp.asarray(write_floor, jnp.int32)
+    positions = start + jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32),
+                                         (K, C))
+    x = L.embed_lookup(params["embed"], tokens, compute_dtype)
+
+    if cfg.cross_attn_every:
+        assert image_embeds is not None, "VLM prefill needs image_embeds"
+        img = image_embeds.astype(compute_dtype)
+        per = cfg.cross_attn_every
+        n_super = cfg.num_layers // per
+        pk0 = cache["k"].reshape(n_super, per, *cache["k"].shape[1:])
+        pv0 = cache["v"].reshape(n_super, per, *cache["v"].shape[1:])
+
+        def body(i, carry):
+            x, pk_all, pv_all = carry
+            sp = _index_tree(params["super"], i)
+            pk = jax.lax.dynamic_index_in_dim(pk_all, i, 0, keepdims=False)
+            pv = jax.lax.dynamic_index_in_dim(pv_all, i, 0, keepdims=False)
+            x, pk, pv = _super_prefill_chunk_paged_unrolled(
+                cfg, sp, x, pk, pv, bt_rows, img, positions, write_floor,
+                attn_impl)
+            pk_all = jax.lax.dynamic_update_index_in_dim(pk_all, pk, i, 0)
+            pv_all = jax.lax.dynamic_update_index_in_dim(pv_all, pv, i, 0)
+            return x, pk_all, pv_all
+
+        x, pk, pv = jax.lax.fori_loop(0, n_super, body, (x, pk0, pv0))
+        new_k = pk.reshape(cache["k"].shape)
+        new_v = pv.reshape(cache["v"].shape)
+    else:
+        def body(i, carry):
+            x, pk_all, pv_all = carry
+            lp = _index_tree(params["layers"], i)
+            pk = jax.lax.dynamic_index_in_dim(pk_all, i, 0, keepdims=False)
+            pv = jax.lax.dynamic_index_in_dim(pv_all, i, 0, keepdims=False)
+            x, pk, pv = _prefill_chunk_layer_paged(cfg, lp, x, pk, pv,
+                                                   bt_rows, positions,
+                                                   write_floor, attn_impl)
+            pk_all = jax.lax.dynamic_update_index_in_dim(pk_all, pk, i, 0)
+            pv_all = jax.lax.dynamic_update_index_in_dim(pv_all, pv, i, 0)
+            return x, pk_all, pv_all
+
+        x, new_k, new_v = jax.lax.fori_loop(
+            0, cfg.num_layers, body, (x, cache["k"], cache["v"]))
+
+    x = L.apply_norm(x[:, -1:], params["final_norm"], cfg.norm)
+    w_un = params["unembed"]["w"] if not cfg.tie_embeddings else None
+    logits = L.lm_logits(params["embed"], x, w_un, vocab=cfg.vocab_size)
+    return logits.astype(jnp.float32), dict(cache, k=new_k, v=new_v)
+
+
 def decode_step(params, cfg: ArchConfig, token, cache, *, image_embeds=None,
-                compute_dtype=jnp.bfloat16):
+                compute_dtype=jnp.bfloat16, paged_attn_impl: str = "einsum"):
     """token: (B, 1) int32. Returns (logits (B,1,V), new cache).
 
     Layers run in a fori_loop carrying the FULL (L,B,S,KV,hd) cache with
@@ -397,7 +504,9 @@ def decode_step(params, cfg: ArchConfig, token, cache, *, image_embeds=None,
     (serving engine with continuous batching). A cache carrying a
     "block_tables" leaf is PAGED (models/registry.py::init_paged_cache):
     "k"/"v" are (L, P, page_size, KV, hd) page pools and decode routes
-    through the block-table-indirect attention path."""
+    through the block-table-indirect attention path — through the Pallas
+    block-gather kernel with ``paged_attn_impl='kernel'``, the masked-einsum
+    reference otherwise."""
     B = token.shape[0]
     pos = cache["pos"]
     bt = cache.get("block_tables")
@@ -418,7 +527,7 @@ def decode_step(params, cfg: ArchConfig, token, cache, *, image_embeds=None,
             ck = jax.lax.dynamic_index_in_dim(ck_all, i, 0, keepdims=False)
             cv = jax.lax.dynamic_index_in_dim(cv_all, i, 0, keepdims=False)
             x, ck, cv = _super_decode_unrolled(cfg, sp, x, ck, cv, img, pos,
-                                               positions, bt)
+                                               positions, bt, paged_attn_impl)
             ck_all = jax.lax.dynamic_update_index_in_dim(ck_all, ck, i, 0)
             cv_all = jax.lax.dynamic_update_index_in_dim(cv_all, cv, i, 0)
             return x, ck_all, cv_all
@@ -432,7 +541,8 @@ def decode_step(params, cfg: ArchConfig, token, cache, *, image_embeds=None,
             lp = _index_tree(params["layers"], i)
             ck = jax.lax.dynamic_index_in_dim(ck_all, i, 0, keepdims=False)
             cv = jax.lax.dynamic_index_in_dim(cv_all, i, 0, keepdims=False)
-            x, ck, cv = _decode_layer(cfg, lp, x, ck, cv, pos, positions, bt)
+            x, ck, cv = _decode_layer(cfg, lp, x, ck, cv, pos, positions, bt,
+                                      paged_attn_impl)
             ck_all = jax.lax.dynamic_update_index_in_dim(ck_all, ck, i, 0)
             cv_all = jax.lax.dynamic_update_index_in_dim(cv_all, cv, i, 0)
             return x, ck_all, cv_all

@@ -45,23 +45,34 @@ Request lifecycle
    positions runs between decode ticks, so a long prompt cannot stall
    in-flight decodes (head-of-line bound). ``prefill_mode='scan'`` keeps the
    teacher-forced single-``lax.scan`` prefill as the bit-exactness anchor.
-   On the last chunk the group's rows are spliced into exactly the admitted
-   slots — a batch-axis scatter for the dense cache
-   (``registry.insert_cache_rows``), a scatter into exactly the slots' OWN
-   pages for the paged one (``registry.insert_cache_rows_paged``) — other
-   slots' entries are untouched bit-for-bit (the prefill-isolation
-   guarantee). The first generated token is sampled from the last chunk's
-   logits; its timestamp is the request's time-to-first-token (queue wait,
-   submit -> admit, is metered separately). See README.md in this package
-   for the admit -> bucket -> chunk -> splice walk-through.
+   Since PR 5 the paged dense/MoE/VLM path splices INCREMENTALLY: each
+   chunk scatters its K/V straight into the group's reserved pages and
+   attends them through the block-table-gather Pallas kernel
+   (``kernels/paged_attention.py`` — fully-masked pages skipped), so no
+   transient request cache exists, prefix hits read aliased pages in
+   place, and completion only flips the group's positions. On the
+   transient (einsum / scan / hybrid / encdec) paths the last chunk's rows
+   are spliced into exactly the admitted slots — a batch-axis scatter for
+   the dense cache (``registry.insert_cache_rows``), a scatter into
+   exactly the slots' OWN pages for the paged one
+   (``registry.insert_cache_rows_paged``) — other slots' entries are
+   untouched bit-for-bit (the prefill-isolation guarantee). The first
+   generated token is sampled from the last chunk's logits; its timestamp
+   is the request's time-to-first-token (queue wait, submit -> admit, is
+   metered separately). A chunk dispatch that raises — or a ``cancel()``
+   from any request state — releases the job's slots, pages, and aliased
+   prefix refcounts through ``release_job`` (requests marked
+   FAILED/CANCELLED) instead of stranding them. See README.md in this
+   package for the admit -> bucket -> chunk -> splice walk-through.
 3. **decode** — ``step()`` runs one batched decode tick for all slots
    against the per-slot-position cache (``cache["pos"]`` is a (B,) vector,
    so slots at different sequence depths coexist). Paged caches route
    attention through block-table indirection
-   (``layers.attention_decode_paged``; the hybrid ring pages too, and the
-   SSM state stays dense — it is O(1) in sequence length). One token per
-   active slot is sampled (greedy or temperature); requests that reach
-   ``gen_len`` retire.
+   (``layers.attention_decode_paged`` — the Pallas block-gather kernel
+   with ``paged_attn_impl='kernel'``, masked-gather einsum otherwise; the
+   hybrid ring pages too, and the SSM state stays dense — it is O(1) in
+   sequence length). One token per active slot is sampled (greedy or
+   temperature); requests that reach ``gen_len`` retire.
 4. **complete** — ``_finish`` parks the slot's cache position at the
    ``layers.INACTIVE_POS`` sentinel (all decode paths DROP writes from such
    slots and freeze their recurrent state, so freed rows are bit-stable),

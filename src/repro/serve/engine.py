@@ -49,12 +49,30 @@ Core invariants (see the package docstring for the request lifecycle):
 * **Page-level prefix caching (paged dense/MoE/VLM, default on).** Completed
   prompt pages are chain-hashed into a refcounted ``PrefixIndex``; admission
   aliases the longest cached page-aligned prefix into the request's block
-  table, seeds the transient prefill cache by GATHERING the shared rows and
-  runs only the uncached tail. Shared pages are immutable: a write that
-  would land in one (partial-page tails, decode appending past the prefix)
-  instead targets a fresh page that the splice re-materialises —
-  copy-on-write with no extra device pass. Eviction is LRU over pages only
-  the index references, and runs before admission ever defers.
+  table and runs only the uncached tail. Shared pages are immutable: a
+  write that would land in one (partial-page tails, decode appending past
+  the prefix) instead targets a fresh page that is re-materialised by the
+  same pool scatter — copy-on-write with no extra device pass. Eviction is
+  LRU over pages only the index references, and runs before admission ever
+  defers.
+
+* **Paged-attention kernel + incremental splice (default with the kernel).**
+  With ``paged_attn_impl='kernel'`` (auto on multi-page dense/MoE/VLM/encdec
+  pools) decode reads go through the Pallas block-table-gather kernel
+  (``kernels/paged_attention.py``) that SKIPS fully-masked pages, and —
+  for dense/MoE/VLM parallel prefill — continuation chunks splice their
+  K/V into the reserved pages INCREMENTALLY per chunk and attend the pages
+  directly: the transient dense request cache disappears, per-chunk mask
+  work stops scaling with s_max, prefix hits read aliased pages in place
+  (no gather seeding), and COW re-materialisation reuses the same scatter.
+  ``paged_attn_impl='einsum'`` keeps the masked-gather transient path (the
+  bit-exactness anchor; auto for the degenerate one-page config).
+
+* **Failure / cancellation release.** A prefill chunk dispatch that raises
+  aborts its job through ``release_job`` — slots freed, reserved pages and
+  aliased prefix refcounts released, requests marked FAILED — and
+  ``cancel()`` does the same from every request state, so an errored or
+  cancelled mid-prefill job can no longer strand pages until process exit.
 
 Multi-host serving is a ROADMAP follow-on.
 """
@@ -73,10 +91,11 @@ from repro import configs
 from repro.configs.base import Family
 from repro.launch import steps as steps_mod
 from repro.models.layers import INACTIVE_POS
-from repro.models.registry import (Model, cache_capacity, get_model,
-                                   init_paged_cache, insert_cache_rows,
-                                   insert_cache_rows_paged, reduced_config,
-                                   seed_prefix_cache, vectorize_cache_pos)
+from repro.models.registry import (Model, cache_capacity, copy_pool_rows,
+                                   get_model, init_paged_cache,
+                                   insert_cache_rows, insert_cache_rows_paged,
+                                   reduced_config, seed_prefix_cache,
+                                   vectorize_cache_pos)
 from repro.serve.metrics import MetricsRecorder
 from repro.serve.prefix import PrefixIndex, PrefixPlan
 from repro.serve.scheduler import Request, RequestState, Scheduler
@@ -87,6 +106,11 @@ from repro.serve.scheduler import Request, RequestState, Scheduler
 # page-resident; encdec's cross-K/V is per-slot, not paged.
 PREFIX_CACHE_FAMILIES = (Family.DENSE, Family.MOE, Family.VLM)
 
+# families whose paged decode goes through layers.attention_decode_paged and
+# can therefore route reads through the Pallas block-gather kernel; hybrid's
+# ring has its own gather and ssm never pages
+PAGED_KERNEL_FAMILIES = (Family.DENSE, Family.MOE, Family.VLM, Family.ENCDEC)
+
 log = logging.getLogger("repro.serve.engine")
 
 
@@ -95,8 +119,10 @@ log = logging.getLogger("repro.serve.engine")
 # e.g. benchmark repetitions — share one compiled executable instead of
 # re-tracing per instance (compile time would otherwise dominate short runs).
 @functools.lru_cache(maxsize=64)
-def _jitted_decode(model: Model, compute_dtype):
-    return jax.jit(steps_mod.make_decode_step(model, compute_dtype=compute_dtype),
+def _jitted_decode(model: Model, compute_dtype, paged_impl=None):
+    return jax.jit(steps_mod.make_decode_step(model,
+                                              compute_dtype=compute_dtype,
+                                              paged_attn_impl=paged_impl),
                    donate_argnums=(1,))
 
 
@@ -183,6 +209,23 @@ def _jitted_prefix_seed(model: Model, s_max: int, cache_dtype):
         return seed_prefix_cache(model, cache, phys_rows, row_ok, pos,
                                  s_max, cache_dtype)
     return jax.jit(seed)
+
+
+@functools.lru_cache(maxsize=64)
+def _jitted_prefill_chunk_paged(model: Model, compute_dtype, attn_impl: str):
+    """Incremental paged-prefill chunk executables: ONE callable per model
+    (no first/continuation split — every chunk writes into pages and attends
+    them through the block table), retraced per (group K, chunk C) shape
+    like the transient chunk path. The resident cache is donated: the pools
+    update in place each chunk instead of round-tripping a transient copy."""
+    fn = steps_mod.make_prefill_chunk_paged(model, compute_dtype=compute_dtype,
+                                            attn_impl=attn_impl)
+    return jax.jit(fn, donate_argnums=(1,))
+
+
+@functools.lru_cache(maxsize=1)
+def _jitted_copy_rows():
+    return jax.jit(copy_pool_rows, donate_argnums=(0,))
 
 
 @functools.lru_cache(maxsize=1)
@@ -286,6 +329,7 @@ class ServeEngine:
                  prefill_mode: str = "parallel",
                  prefill_chunk_tokens: int = 64,
                  prefill_attn_impl: str = "auto",
+                 paged_attn_impl: str = "auto",
                  max_prefill_traces: Optional[int] = None,
                  scheduler: Optional[Scheduler] = None,
                  metrics: Optional[MetricsRecorder] = None):
@@ -376,7 +420,44 @@ class ServeEngine:
         self.prefix_cache = bool(prefix_cache)
         self.prefix_index = (PrefixIndex(self.allocator, self.page_size)
                              if self.prefix_cache else None)
-        self._decode = _jitted_decode(model, compute_dtype)
+
+        # paged attention read path: 'kernel' = the Pallas block-gather
+        # kernel (and, with parallel prefill on a supported family, the
+        # INCREMENTAL per-chunk page splice — no transient request cache);
+        # 'einsum' = the masked-gather reference read + transient-cache
+        # prefill with a completion splice (the PR 2-4 path, kept as the
+        # bit-exactness anchor and the unsupported-family fallback).
+        if paged_attn_impl not in ("auto", "kernel", "einsum"):
+            raise ValueError(f"paged_attn_impl must be 'auto', 'kernel' or "
+                             f"'einsum', got {paged_attn_impl!r}")
+        kernel_ok = self.paged and self.cfg.family in PAGED_KERNEL_FAMILIES
+        if paged_attn_impl == "auto":
+            # the degenerate one-page-per-slot config (page_size == s_max) is
+            # the dense bit-exactness anchor and has no pages to skip — auto
+            # keeps it on the einsum path so the anchor stays bit-for-bit
+            paged_attn_impl = ("kernel" if kernel_ok
+                               and self.max_pages_per_slot > 1 else "einsum")
+        elif paged_attn_impl == "kernel" and not kernel_ok:
+            log.warning("paged_attn_impl='kernel' unsupported here (needs a "
+                        "paged cache on a dense/MoE/VLM/encdec family; got "
+                        "paged=%s family=%s) — using the masked-einsum path",
+                        self.paged, self.cfg.family)
+            paged_attn_impl = "einsum"
+        self.paged_attn_impl = paged_attn_impl
+        # incremental splice: continuation chunks write K/V straight into
+        # their reserved pages and attend them through the block table —
+        # the transient dense request cache disappears and per-chunk mask
+        # work stops scaling with s_max
+        self.incremental_splice = (
+            self.paged and self.prefill_mode == "parallel"
+            and self.paged_attn_impl == "kernel"
+            and model.supports_paged_prefill)
+        self.prefill_failures = 0
+        self.max_transient_cache_bytes = 0
+        self._cancel_at_splice: set = set()
+        self._decode = _jitted_decode(
+            model, compute_dtype,
+            self.paged_attn_impl if self.paged else None)
         self._insert_rows = _jitted_insert_rows()
 
         # (head rid, free pages, index version) at the last deferral: admit()
@@ -403,6 +484,7 @@ class ServeEngine:
               prefix_cache: Optional[bool] = None,
               prefill_mode: str = "parallel", prefill_chunk_tokens: int = 64,
               prefill_attn_impl: str = "auto",
+              paged_attn_impl: str = "auto",
               compute_dtype=jnp.float32) -> "ServeEngine":
         """Construct model + params from an arch id; the int8 PTQ path is the
         same structural quantize->dequant-on-load as the paper's C5 (the
@@ -421,7 +503,8 @@ class ServeEngine:
                    num_pages=num_pages, prefix_cache=prefix_cache,
                    prefill_mode=prefill_mode,
                    prefill_chunk_tokens=prefill_chunk_tokens,
-                   prefill_attn_impl=prefill_attn_impl, seed=seed)
+                   prefill_attn_impl=prefill_attn_impl,
+                   paged_attn_impl=paged_attn_impl, seed=seed)
 
     # ------------------------------------------------------------ extras
     def _decode_extras(self) -> dict:
@@ -443,6 +526,10 @@ class ServeEngine:
                                      self.s_max, self.cache_dtype, first,
                                      self.prefill_attn_impl)
 
+    def _chunk_paged_fn(self) -> Callable:
+        return _jitted_prefill_chunk_paged(self.model, self.compute_dtype,
+                                           self.paged_attn_impl)
+
     @property
     def prefill_trace_count(self) -> int:
         """Distinct (first, group K, chunk C) prefill shapes traced so far —
@@ -463,6 +550,8 @@ class ServeEngine:
                         self.max_prefill_traces)
             for f in (True, False):
                 self._chunk_fn(f).clear_cache()
+            if self.incremental_splice:
+                self._chunk_paged_fn().clear_cache()
             self._trace_keys = {key}
             self.prefill_trace_evictions += 1
 
@@ -659,6 +748,11 @@ class ServeEngine:
         plans: Dict[int, Optional[PrefixPlan]] = {}
         for slot in self.free_slots:
             req = self.scheduler.peek()
+            # requests cancelled while QUEUED are skipped lazily here (heap
+            # removal is O(n); admission already pops in order)
+            while req is not None and req.state is RequestState.CANCELLED:
+                self.scheduler.next_request()
+                req = self.scheduler.peek()
             if req is None:
                 break
             plan = None
@@ -745,7 +839,13 @@ class ServeEngine:
                              if cached else 0),
                 prefix_plans=group_plans)
             if cached:
-                self._seed_prefix_job(job, cached)
+                if self.incremental_splice:
+                    # aliased full pages are read IN PLACE by the paged
+                    # chunk attention — only a partial hit's COW page needs
+                    # materialising, with the same pool scatter
+                    self._cow_materialise_job(job, cached)
+                else:
+                    self._seed_prefix_job(job, cached)
             self._jobs.append(job)
         return len(pairs)
 
@@ -766,6 +866,40 @@ class ServeEngine:
         # the gather has consumed the partial COW sources; drop the temporary
         # admission-time references (aliased full pages stay ref'd via
         # slot_pages until _finish)
+        for plan in job.prefix_plans:
+            if plan.partial is not None:
+                self.allocator.release([plan.partial[0]])
+
+    def _cow_materialise_job(self, job: _PrefillJob, cached_len: int):
+        """Incremental-path half of a prefix hit: aliased FULL pages need no
+        work at all (the paged chunk attention reads them through the block
+        table), but a partial hit's rows ``[write_floor, cached_len)`` live
+        in a shared SOURCE page while the block table holds a fresh page in
+        that position — copy them across with the same flattened-pool
+        scatter the per-chunk splice uses (``registry.copy_pool_rows``),
+        then drop the admission-time source references. The copy wall is
+        charged to prefill like the transient path's gather, so hit-path
+        rates stay honest."""
+        ps = self.page_size
+        n = cached_len - job.write_floor          # partial rows to copy
+        if n > 0:
+            oob = self.num_pages * ps
+            K = len(job.slots)
+            src = np.zeros((K, ps), np.int64)
+            dst = np.full((K, ps), oob, np.int64)
+            offs = np.arange(ps)
+            for i, (slot, plan) in enumerate(zip(job.slots,
+                                                 job.prefix_plans)):
+                if plan.partial is None:
+                    continue
+                fresh = self.slot_pages[slot][cached_len // ps]
+                src[i, :n] = plan.partial[0] * ps + offs[:n]
+                dst[i, :n] = fresh * ps + offs[:n]
+            t0 = self.metrics.now()
+            self.cache = _jitted_copy_rows()(self.cache, jnp.asarray(src),
+                                             jnp.asarray(dst))
+            jax.block_until_ready(self.cache["k"])
+            self.metrics.on_prefix_gather(self.metrics.now() - t0)
         for plan in job.prefix_plans:
             if plan.partial is not None:
                 self.allocator.release([plan.partial[0]])
@@ -795,7 +929,18 @@ class ServeEngine:
         budget, whatever the longest queued prompt is. Bucketed ladder
         chunks that fit the remaining budget run back-to-back (a 12-token
         prompt under a 64 budget still completes in one tick as 8 + 4), in
-        strict job-FIFO order. Returns prompt positions ingested."""
+        strict job-FIFO order. Returns prompt positions ingested.
+
+        With ``incremental_splice`` the chunk dispatch writes its K/V rows
+        straight into the group's reserved pages and attends them through
+        the block table (``make_prefill_chunk_paged``) — no transient
+        request cache exists and completion only flips the group's ``pos``.
+
+        A chunk dispatch that RAISES aborts its whole job through
+        :meth:`release_job` (slots freed, pages and aliased prefix
+        refcounts released, requests marked FAILED) and the tick moves on —
+        an errored prompt can neither strand pages until process exit nor
+        wedge the queue behind it."""
         ingested = 0
         budget = self.prefill_chunk_tokens
         while self._jobs and budget > 0:
@@ -803,40 +948,78 @@ class ServeEngine:
             C = job.plan[job.idx]
             if C > budget:
                 break
-            # a prefix-seeded job already has its transient cache (gathered
-            # from shared pages): every chunk is a continuation
-            first = job.cache is None
             K = len(job.slots)
-            self._note_prefill_trace(first, K, C)
             toks = jnp.asarray(job.prompts[:, job.filled:job.filled + C])
-            batch = {"tokens": toks, **self._prefill_extras(K)}
             t0 = self.metrics.now()
-            if first:
-                logits, job.cache = self._chunk_fn(True)(self.params, batch)
-            else:
-                logits, job.cache = self._chunk_fn(False)(
-                    self.params, job.cache, batch)
-            jax.block_until_ready(logits)
+            try:
+                if self.incremental_splice:
+                    self._note_prefill_trace(False, K, C)
+                    batch = {
+                        "tokens": toks,
+                        "bt": jnp.asarray(self._bt_host[job.slots]),
+                        "start": jnp.asarray(job.tail_start + job.filled,
+                                             jnp.int32),
+                        "floor": jnp.asarray(job.write_floor, jnp.int32),
+                        **self._prefill_extras(K)}
+                    logits, self.cache = self._chunk_paged_fn()(
+                        self.params, self.cache, batch)
+                else:
+                    # a prefix-seeded job already has its transient cache
+                    # (gathered from shared pages): every chunk continues
+                    first = job.cache is None
+                    self._note_prefill_trace(first, K, C)
+                    batch = {"tokens": toks, **self._prefill_extras(K)}
+                    if first:
+                        logits, job.cache = self._chunk_fn(True)(self.params,
+                                                                 batch)
+                    else:
+                        logits, job.cache = self._chunk_fn(False)(
+                            self.params, job.cache, batch)
+                jax.block_until_ready(logits)
+            except Exception as err:  # noqa: BLE001 — released, not resumed
+                log.exception("prefill chunk failed for rids %s; releasing "
+                              "the job", [r.rid for r in job.reqs])
+                self.prefill_failures += 1
+                # the incremental dispatch DONATES the resident cache: a
+                # failure at EXECUTION time (not trace time) may have
+                # consumed or poisoned the shared pools every other live
+                # slot reads. Check BEFORE release_job — its _finish writes
+                # into the cache and would raise on dead buffers — and fail
+                # over to a fresh pool instead of crashing the next tick.
+                if self.incremental_splice and not self._cache_healthy():
+                    self._reset_poisoned_cache(err)
+                else:
+                    self.release_job(job, error=err)
+                continue
             self.metrics.on_prefill_chunk(K * C, self.metrics.now() - t0)
+            self.max_transient_cache_bytes = max(
+                self.max_transient_cache_bytes, self.transient_cache_bytes())
             job.idx += 1
             job.filled += C
             budget -= C
             ingested += C
             if job.idx == len(job.plan):
                 self._jobs.pop(0)
-                self._splice_and_start(job.slots, job.reqs, job.cache, logits,
-                                       write_floor=job.write_floor,
-                                       prefix_plans=job.prefix_plans)
+                self._splice_and_start(
+                    job.slots, job.reqs,
+                    None if self.incremental_splice else job.cache, logits,
+                    write_floor=job.write_floor,
+                    prefix_plans=job.prefix_plans)
         self.max_prefill_tokens_per_tick = max(
             self.max_prefill_tokens_per_tick, ingested)
         return ingested
 
     def _splice_and_start(self, slot_ids, reqs, rcache, logits, *,
                           write_floor: int = 0, prefix_plans=None):
-        """Splice a completed group prefill cache into the resident cache
-        (dense row scatter or paged page scatter — other slots untouched
-        bit-for-bit), sample each request's first token from the prefill
-        logits, and flip the group to RUNNING.
+        """Complete a group prefill: land its K/V in the resident cache,
+        sample each request's first token from the prefill logits, and flip
+        the group to RUNNING.
+
+        ``rcache`` is the group's transient request cache (dense row scatter
+        or paged page scatter — other slots untouched bit-for-bit), or None
+        on the INCREMENTAL path, where every chunk already spliced its rows
+        into the group's pages and completion only flips the group's
+        ``pos`` from the INACTIVE sentinel to prompt_len.
 
         Prefix caching rides the same scatter: rows below ``write_floor``
         (aliased immutable full pages) are dropped, while a partial hit's
@@ -845,7 +1028,10 @@ class ServeEngine:
         the splice the group's freshly computed prompt pages (now complete
         and never written again) register in the prefix index."""
         slots = jnp.asarray(np.array(slot_ids, np.int32))
-        if self.paged:
+        if rcache is None:
+            plens = jnp.asarray([len(r.prompt) for r in reqs], jnp.int32)
+            self.cache["pos"] = self.cache["pos"].at[slots].set(plens)
+        elif self.paged:
             self.cache = self._insert_rows_paged(
                 self.cache, rcache, slots,
                 jnp.asarray(self._phys_rows(slot_ids, write_floor)))
@@ -858,6 +1044,10 @@ class ServeEngine:
         toks = self._sample_rows(logits)
         for i, (slot, req) in enumerate(zip(slot_ids, reqs)):
             req.state = RequestState.RUNNING
+            if req.rid in self._cancel_at_splice:   # grouped mid-prefill
+                self._cancel_at_splice.discard(req.rid)   # cancel lands here
+                self._finish(slot, RequestState.CANCELLED)
+                continue
             if req.gen_len <= 0:                 # nothing to generate
                 self._finish(slot)
                 continue
@@ -867,16 +1057,21 @@ class ServeEngine:
             if req.done:
                 self._finish(slot)
 
-    def _finish(self, slot: int):
+    def _finish(self, slot: int, state: RequestState = RequestState.DONE):
         """Retire a slot: park its cache position at the INACTIVE_POS
         sentinel (decode drops its writes from now on — freed rows stay
         bit-stable), zero its feedback token, and return its pages to the
-        free list. Idempotent: a second call is a no-op."""
+        free list. Idempotent: a second call is a no-op. ``state`` records
+        WHY the slot retired (DONE / FAILED / CANCELLED) — the resource
+        reclamation is identical."""
         req = self.slot_req[slot]
         if req is None:
             return
-        req.state = RequestState.DONE
-        self.metrics.on_done(req.rid)
+        req.state = state
+        if state is RequestState.DONE:
+            self.metrics.on_done(req.rid)
+        else:                       # FAILED/CANCELLED: finalized, not served
+            self.metrics.on_aborted(req.rid)
         self.slot_req[slot] = None
         self.cur_token[slot, 0] = 0
         self.cache["pos"] = self.cache["pos"].at[slot].set(INACTIVE_POS)
@@ -885,6 +1080,145 @@ class ServeEngine:
             self.slot_pages[slot] = []
             self._bt_host[slot, :] = -1
             self.cache["block_tables"] = jnp.asarray(self._bt_host)
+
+    def _cache_healthy(self) -> bool:
+        """True when every resident-cache buffer is live and readable. A
+        failed donated dispatch leaves either deleted input buffers (the
+        exception fired mid-execution) or error-poisoned output buffers
+        (async backends surface execution errors on first access)."""
+        try:
+            jax.block_until_ready(self.cache["k"])
+        except Exception:  # noqa: BLE001 — any access error means poisoned
+            return False
+        return not any(getattr(leaf, "is_deleted", lambda: False)()
+                       for leaf in jax.tree.leaves(self.cache))
+
+    def _reset_poisoned_cache(self, error):
+        """Scorched-earth failover after a donated dispatch destroyed the
+        shared paged cache: every in-flight request is FAILED (their K/V
+        lived in the poisoned pools — there is nothing to resume), the
+        allocator and prefix index rebuild from scratch (index entries
+        would otherwise point at zeroed pages), and a FRESH pool cache is
+        installed so queued and future requests keep being served. Pure
+        host-side bookkeeping plus one cache re-init; never touches the
+        poisoned buffers."""
+        log.error("resident paged cache lost to a failed donated dispatch; "
+                  "failing %d in-flight request(s) and rebuilding the pool",
+                  self.active)
+        for job in list(self._jobs):        # PREFILLING jobs not yet failed
+            self._jobs.remove(job)
+            job.cache = None
+        msg = f"cache lost to failed dispatch: {error!r}"
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            req.state = RequestState.FAILED
+            req.error = msg
+            self.metrics.on_aborted(req.rid)
+            self.slot_req[slot] = None
+            self.cur_token[slot, 0] = 0
+        self._cancel_at_splice.clear()
+        self.allocator = PageAllocator(self.num_pages)
+        if self.prefix_index is not None:
+            self.prefix_index = PrefixIndex(self.allocator, self.page_size)
+        self.slot_pages = [[] for _ in range(self.batch_slots)]
+        self._bt_host[:] = -1
+        self._defer_state = None
+        self.cache = init_paged_cache(
+            self.model, self.batch_slots, self.s_max,
+            page_size=self.page_size, num_pages=self.num_pages,
+            dtype=self.cache_dtype)
+
+    def release_job(self, job: _PrefillJob, error=None,
+                    state: RequestState = RequestState.FAILED):
+        """Abort an in-flight prefill job and reclaim EVERYTHING it holds:
+        the group's slots, reserved pages (including aliased prefix-page
+        refcounts — released through the same ``_finish`` path completion
+        uses), the transient request cache, and the feedback tokens.
+        Invoked by ``_prefill_tick`` when a chunk dispatch raises and by
+        :meth:`cancel` — before this path existed, an errored or cancelled
+        mid-prefill job held its pages until process exit."""
+        if job in self._jobs:
+            self._jobs.remove(job)
+        job.cache = None
+        msg = "cancelled" if state is RequestState.CANCELLED else repr(error)
+        for slot, req in zip(job.slots, job.reqs):
+            req.error = msg
+            self._cancel_at_splice.discard(req.rid)
+            self._finish(slot, state)
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a request; returns True if it was still live. QUEUED
+        requests are marked and skipped at the next admission (lazy heap
+        removal); a PREFILLING request aborts immediately when it is its
+        job's only member (``release_job``) and at group completion
+        otherwise (the splice retires its slot without sampling — the
+        group's batch shape cannot change mid-stream); RUNNING requests
+        retire their slot on the spot. Either way every reserved page and
+        aliased prefix refcount is released."""
+        req = self.requests.get(rid)
+        if req is None or req.state in (RequestState.DONE,
+                                        RequestState.FAILED,
+                                        RequestState.CANCELLED):
+            return False
+        if req.state is RequestState.QUEUED:
+            req.state = RequestState.CANCELLED
+            req.error = "cancelled"
+            self.metrics.on_aborted(rid)
+            return True
+        if req.state is RequestState.PREFILLING:
+            job = next((j for j in self._jobs if req in j.reqs), None)
+            if job is None:                  # no chunk job (scan-mode window)
+                self._finish(req.slot, RequestState.CANCELLED)
+                req.error = "cancelled"
+                return True
+            if len(job.reqs) == 1:
+                self.release_job(job, state=RequestState.CANCELLED)
+            else:
+                req.error = "cancelled"
+                self._cancel_at_splice.add(rid)
+            return True
+        self._finish(req.slot, RequestState.CANCELLED)   # RUNNING
+        req.error = "cancelled"
+        return True
+
+    def transient_cache_bytes(self) -> int:
+        """Device bytes held RIGHT NOW by in-flight prefill jobs' transient
+        request caches. On the incremental-splice path this is 0 by
+        construction — chunks write straight into the resident pools and
+        only one chunk's activations are ever live — which is the
+        acceptance bound the bench records (``max_transient_cache_bytes``
+        tracks the high-water mark across a run)."""
+        total = 0
+        for job in self._jobs:
+            if job.cache is not None:
+                total += int(sum(l.size * l.dtype.itemsize
+                                 for l in jax.tree.leaves(job.cache)))
+        return total
+
+    def assert_page_invariants(self):
+        """Walk the allocator / block-table / prefix-index bookkeeping and
+        raise on any violated invariant: no page simultaneously free and
+        referenced, every live block-table or index page holds >= 1
+        reference, and nothing leaks (free + held partitions the pool).
+        Host-side only — tests call this per tick; release_job keeps it
+        true through failures and cancellations."""
+        if not self.paged:
+            return
+        free = set(self.allocator._free)
+        held = self.allocator.held
+        assert not (free & held), f"pages both free and referenced: {free & held}"
+        assert free | held == set(range(self.num_pages)), "page leaked"
+        live = {pg for pages in self.slot_pages for pg in pages}
+        assert not (free & live), "page both free and in a live block table"
+        for pg in live:
+            assert self.allocator.refcount(pg) >= 1, f"live page {pg} unref'd"
+        if self.prefix_index is not None:
+            idx = set(self.prefix_index.pages)
+            assert not (free & idx), "page both free and in the prefix index"
+            for pg in idx:
+                assert self.allocator.refcount(pg) >= 1, \
+                    f"indexed page {pg} unref'd"
 
     @property
     def running(self) -> int:
@@ -922,7 +1256,8 @@ class ServeEngine:
         long-running deployment should drain periodically). Metric records
         are kept so summary() percentiles stay complete."""
         done = [r for r in self.requests.values()
-                if r.state == RequestState.DONE]
+                if r.state in (RequestState.DONE, RequestState.FAILED,
+                               RequestState.CANCELLED)]
         for r in done:
             del self.requests[r.rid]
         return done

@@ -22,6 +22,10 @@ class RequestRecord:
     t_first_token: Optional[float] = None     # prefill done, token 1 sampled
     t_done: Optional[float] = None
     n_tokens: int = 0
+    aborted: bool = False     # FAILED/CANCELLED: excluded from completion
+    #                           counts and latency percentiles (a request
+    #                           cancelled right after submit would otherwise
+    #                           enter latency_s p50 as ~0 s)
 
     @property
     def ttft_s(self) -> Optional[float]:
@@ -166,13 +170,23 @@ class MetricsRecorder:
         if rec.t_done is None:
             rec.t_done = self._clock()
 
+    def on_aborted(self, rid: int):
+        """Close a record for a FAILED or CANCELLED request: the record is
+        finalized (drain-able) but excluded from ``completed`` and the
+        latency/tokens-per-second percentiles — an abort is not a served
+        request. Idempotent like on_done."""
+        rec = self.requests[rid]
+        if rec.t_done is None:
+            rec.t_done = self._clock()
+        rec.aborted = True
+
     def on_decode_step(self):
         self.decode_steps += 1
 
     # ------------------------------------------------------------ summary
     def summary(self) -> dict:
         recs = list(self.requests.values())
-        done = [r for r in recs if r.t_done is not None]
+        done = [r for r in recs if r.t_done is not None and not r.aborted]
         ttfts = [r.ttft_s for r in done if r.ttft_s is not None]
         waits = [r.queue_wait_s for r in done if r.queue_wait_s is not None]
         lats = [r.latency_s for r in done]
@@ -189,6 +203,7 @@ class MetricsRecorder:
         return {
             "requests": len(recs),
             "completed": len(done),
+            "aborted": sum(1 for r in recs if r.aborted),
             "wall_s": wall,
             "total_tokens": total_tokens,
             "throughput_tokens_per_s": (total_tokens / max(wall, MIN_WALL_S)

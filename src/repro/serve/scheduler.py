@@ -18,6 +18,8 @@ class RequestState(enum.Enum):
     PREFILLING = "prefilling"     # slot + pages reserved, prompt being chunked
     RUNNING = "running"
     DONE = "done"
+    FAILED = "failed"             # prefill dispatch raised; resources released
+    CANCELLED = "cancelled"       # caller aborted; resources released
 
 
 @dataclasses.dataclass
@@ -36,6 +38,9 @@ class Request:
     # HINT within a priority level; it is advisory — the authoritative
     # lookup happens again at admission.
     prefix_hint: int = 0
+    # set when the request leaves via FAILED (the prefill error, stringified)
+    # or CANCELLED ("cancelled") instead of completing
+    error: Optional[str] = None
 
     @property
     def remaining(self) -> int:

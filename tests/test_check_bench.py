@@ -1,0 +1,131 @@
+"""Unit tests for the CI bench-regression gate itself (benchmarks/
+check_bench.py). The gate has been load-bearing since PR 4 but untested —
+in particular the rule that a section PRESENT in the fresh bench but MISSING
+from the committed baseline (the first PR that adds a bench section) must
+skip with a warning, never fail or crash: otherwise no PR could ever
+introduce a new bench section and pass CI with it in the same change."""
+import copy
+
+import pytest
+
+from benchmarks.check_bench import GATED_METRICS, check
+
+BASE = {
+    "cells": [{"batch_slots": 4, "prompt_len": 32,
+               "engine_tokens_per_s": 1000.0}],
+    "acceptance": {"speedup": 3.0, "passes_2x": True},
+    "paged": {
+        "cells": [{"batch_slots": 4, "prompt_len": 32,
+                   "paged_tokens_per_s": 900.0}],
+        "acceptance": {"resident_bytes_ratio": 0.2,
+                       "passes_memory_drop": True},
+    },
+    "prefill": {
+        "cells": [{"prompt_len": 128,
+                   "parallel_prefill_tokens_per_s": 5000.0}],
+        "acceptance": {"speedup": 3.0, "passes_2x": True},
+    },
+    "prefix": {
+        "cells": [{"prompt_len": 128, "overlap_tokens": 96,
+                   "cached_prefill_tokens_per_s": 8000.0}],
+        "acceptance": {"speedup": 2.5, "passes_2x": True},
+    },
+    "prefill_paged": {
+        "cells": [{"prompt_len": 128,
+                   "kernel_prefill_tokens_per_s": 7000.0}],
+        "acceptance": {"speedup": 1.8, "passes_1_5x": True},
+    },
+}
+
+
+def test_identical_benches_pass():
+    assert check(copy.deepcopy(BASE), copy.deepcopy(BASE), 0.2, True) == []
+
+
+def test_relative_regression_fails():
+    # speedup rows are ratio-of-runs and carry a loosened 50% collapse
+    # threshold (their absolute floor is the passes_* flag) — a 30% wobble
+    # passes, a 60% collapse fails
+    fresh = copy.deepcopy(BASE)
+    fresh["prefill"]["acceptance"]["speedup"] = 3.0 * 0.7
+    assert check(copy.deepcopy(BASE), fresh, 0.2, False) == []
+    fresh["prefill"]["acceptance"]["speedup"] = 3.0 * 0.4   # collapse
+    fails = check(copy.deepcopy(BASE), fresh, 0.2, False)
+    assert any("prefill.acceptance.speedup" in f for f in fails)
+    # the deterministic byte ratio keeps the TIGHT default threshold: a
+    # 30% worsening there is a real regression, not noise
+    fresh = copy.deepcopy(BASE)
+    fresh["paged"]["acceptance"]["resident_bytes_ratio"] = 0.2 * 1.3
+    fails = check(copy.deepcopy(BASE), fresh, 0.2, False)
+    assert any("resident_bytes_ratio" in f for f in fails)
+
+
+def test_lower_is_better_metric_gated_in_the_right_direction():
+    fresh = copy.deepcopy(BASE)
+    fresh["paged"]["acceptance"]["resident_bytes_ratio"] = 0.2 * 1.5  # worse
+    fails = check(copy.deepcopy(BASE), fresh, 0.2, False)
+    assert any("resident_bytes_ratio" in f for f in fails)
+    # improving (shrinking) the ratio must NOT fail
+    fresh["paged"]["acceptance"]["resident_bytes_ratio"] = 0.1
+    assert check(copy.deepcopy(BASE), fresh, 0.2, False) == []
+
+
+def test_section_missing_from_baseline_skips_with_warning(capsys):
+    """The first-PR case: the fresh bench adds a section (here: every
+    section beyond the original engine cells) that the committed baseline
+    predates. The gate must SKIP those rows — warning on stderr — and pass,
+    not KeyError and not fail."""
+    base = {"cells": copy.deepcopy(BASE["cells"]),
+            "acceptance": copy.deepcopy(BASE["acceptance"])}
+    fails = check(base, copy.deepcopy(BASE), 0.2, True)
+    assert fails == []
+    err = capsys.readouterr().err
+    assert "missing from baseline" in err
+    assert "prefill_paged.acceptance.speedup" in err
+
+
+def test_section_missing_from_fresh_fails():
+    """The inverse is a real failure: the fresh bench silently dropping a
+    gated section would let regressions hide behind a truncated run."""
+    fresh = copy.deepcopy(BASE)
+    del fresh["prefix"]
+    fails = check(copy.deepcopy(BASE), fresh, 0.2, False)
+    assert any("prefix.acceptance.speedup" in f and "missing from fresh" in f
+               for f in fails)
+
+
+def test_non_numeric_values_reported_not_crashed():
+    fresh = copy.deepcopy(BASE)
+    fresh["acceptance"]["speedup"] = "fast"
+    fails = check(copy.deepcopy(BASE), fresh, 0.2, False)
+    assert any("not numeric" in f for f in fails)
+    base = copy.deepcopy(BASE)
+    base["acceptance"]["speedup"] = None
+    assert check(base, copy.deepcopy(BASE), 0.2, False) == []   # skip-warn
+
+
+def test_false_acceptance_flag_fails_only_when_required():
+    fresh = copy.deepcopy(BASE)
+    fresh["prefill_paged"]["acceptance"]["passes_1_5x"] = False
+    assert check(copy.deepcopy(BASE), fresh, 0.9, False) == []
+    fails = check(copy.deepcopy(BASE), fresh, 0.9, True)
+    assert any("passes_1_5x" in f for f in fails)
+
+
+def test_relative_only_skips_absolute_rows():
+    fresh = copy.deepcopy(BASE)
+    fresh["cells"][0]["engine_tokens_per_s"] = 1.0      # huge absolute drop
+    assert check(copy.deepcopy(BASE), fresh, 0.2, False,
+                 relative_only=True) == []
+    fails = check(copy.deepcopy(BASE), fresh, 0.2, False,
+                  abs_threshold=0.5, relative_only=False)
+    assert any("engine_tokens_per_s" in f for f in fails)
+
+
+def test_every_gated_metric_resolvable_in_reference_shape():
+    """Keep GATED_METRICS and the reference bench shape in sync: a metric
+    path that resolves in neither direction would silently gate nothing."""
+    from benchmarks.check_bench import _acceptance_cells, _resolve
+    tree = _acceptance_cells(copy.deepcopy(BASE))
+    for path, _, _, _ in GATED_METRICS:
+        assert _resolve(tree, path) is not None, path

@@ -93,6 +93,135 @@ def test_flash_prefill_exports_kv(cfg):
     np.testing.assert_array_equal(np.asarray(vo), np.asarray(v))
 
 
+# --------------------------------------------------------- paged attention
+def _paged_setup(key, B, Sq, H, KV, hd, P, ps, mps, fill):
+    """Random pool + per-slot block tables whose first ``fill[b] // ps + 1``
+    entries are allocated (non-contiguous page ids — the gather must really
+    go through the table)."""
+    ks = jax.random.split(key, 3)
+    q = _rand(ks[0], (B, Sq, H, hd))
+    pk = _rand(ks[1], (P, ps, KV, hd))
+    pv = _rand(ks[2], (P, ps, KV, hd))
+    rng = np.random.default_rng(3)
+    bt = np.full((B, mps), -1, np.int32)
+    perm = rng.permutation(P)
+    nxt = 0
+    for b in range(B):
+        need = -(-fill[b] // ps)
+        bt[b, :need] = perm[nxt:nxt + need]
+        nxt += need
+    return q, pk, pv, jnp.asarray(bt)
+
+
+@pytest.mark.parametrize("cfg", [
+    dict(Sq=8, H=4, KV=2, ps=8, mps=4, window=0),     # GQA prefill chunk
+    dict(Sq=1, H=4, KV=4, ps=8, mps=4, window=0),     # decode shape
+    dict(Sq=16, H=8, KV=2, ps=4, mps=8, window=6),    # sliding window
+    dict(Sq=8, H=2, KV=1, ps=16, mps=2, window=0),    # page > chunk
+])
+def test_paged_attention_matches_ref(cfg):
+    """Block-table gather + block-skip kernel vs the masked-gather oracle,
+    across GQA grouping, decode/prefill query widths, sliding windows, and
+    partially-filled last pages (start positions land mid-page)."""
+    Sq, H, KV, ps, mps = (cfg["Sq"], cfg["H"], cfg["KV"], cfg["ps"],
+                          cfg["mps"])
+    B, hd, P = 2, 16, 2 * mps + 3
+    # starts chosen so the last allocated page is PARTIALLY filled
+    fill = [ps + ps // 2 + Sq, ps // 2 + Sq]
+    q, pk, pv, bt = _paged_setup(KEY, B, Sq, H, KV, hd, P, ps, mps, fill)
+    start = jnp.asarray([f - Sq for f in fill], jnp.int32)
+    got = ops.paged_prefill(q, pk, pv, bt, start, window=cfg["window"])
+    want = ref.paged_attention(q, pk, pv, bt, start, window=cfg["window"])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_attention_skips_unallocated_and_future_pages():
+    """Rows of unallocated pages and pages beyond the causal frontier can
+    never contribute: poisoning them with huge values must not change the
+    output (the block-skip + masking contract), and a freed slot (all--1
+    table) returns exactly zero."""
+    B, Sq, H, KV, hd, P, ps, mps = 2, 4, 4, 2, 16, 8, 8, 4
+    q, pk, pv, bt = _paged_setup(KEY, B, Sq, H, KV, hd, P, ps, mps, [12, 4])
+    start = jnp.asarray([8, 0], jnp.int32)
+    base = ops.paged_prefill(q, pk, pv, bt, start)
+    # poison every pool row that is NOT a valid row of some slot's prefix
+    valid = np.zeros(P * ps, bool)
+    btn = np.asarray(bt)
+    for b, last in enumerate([11, 3]):
+        for r in range(last + 1):
+            valid[btn[b, r // ps] * ps + r % ps] = True
+    poison = jnp.where(jnp.asarray(valid)[:, None, None],
+                       pk.reshape(P * ps, KV, hd), 1e9).reshape(pk.shape)
+    poison_v = jnp.where(jnp.asarray(valid)[:, None, None],
+                         pv.reshape(P * ps, KV, hd), 1e9).reshape(pv.shape)
+    got = ops.paged_prefill(q, poison, poison_v, bt, start)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(base))
+    freed = ops.paged_decode(q[:, :1], pk, pv,
+                             jnp.full((B, mps), -1, jnp.int32),
+                             jnp.asarray([1 << 30, (1 << 30) + 7], jnp.int32))
+    assert np.all(np.asarray(freed) == 0)
+
+
+def test_paged_attention_prefix_aliased_pages_shared_across_slots():
+    """Two slots whose block tables alias the SAME physical prefix pages
+    (the prefix-cache layout) read identical prefix rows: with identical
+    queries and identical tail pages, their outputs coincide."""
+    Sq, H, KV, hd, P, ps, mps = 4, 4, 2, 16, 6, 8, 3
+    ks = jax.random.split(KEY, 3)
+    q1 = _rand(ks[0], (1, Sq, H, hd))
+    q = jnp.concatenate([q1, q1], axis=0)
+    pk = _rand(ks[1], (P, ps, KV, hd))
+    pv = _rand(ks[2], (P, ps, KV, hd))
+    flat_k = pk.reshape(P * ps, KV, hd)
+    flat_v = pv.reshape(P * ps, KV, hd)
+    # shared prefix page 2 for both slots; tail pages 0 vs 4 hold the SAME
+    # rows copied across (so outputs must match exactly)
+    rows = jnp.arange(ps)
+    flat_k = flat_k.at[4 * ps + rows].set(flat_k[0 * ps + rows])
+    flat_v = flat_v.at[4 * ps + rows].set(flat_v[0 * ps + rows])
+    pk = flat_k.reshape(P, ps, KV, hd)
+    pv = flat_v.reshape(P, ps, KV, hd)
+    bt = jnp.asarray([[2, 0, -1], [2, 4, -1]], jnp.int32)
+    start = jnp.asarray([ps + 2, ps + 2], jnp.int32)   # mid tail page
+    out = ops.paged_prefill(q, pk, pv, bt, start)
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(out[1]))
+
+
+def test_paged_attention_degenerate_one_page_spans_s_max():
+    """page_size == s_max (one page per slot): the paged kernel collapses to
+    plain causal attention over the slot's rows — cross-checked against the
+    flash-attention oracle on the same rows."""
+    B, S, H, KV, hd = 2, 16, 4, 2, 16
+    ks = jax.random.split(KEY, 3)
+    q = _rand(ks[0], (B, S, H, hd))
+    k = _rand(ks[1], (B, S, KV, hd))
+    v = _rand(ks[2], (B, S, KV, hd))
+    # pool with one page per slot holding that slot's rows
+    pk = jnp.stack([k[0], k[1]])
+    pv = jnp.stack([v[0], v[1]])
+    bt = jnp.asarray([[0], [1]], jnp.int32)
+    start = jnp.zeros((B,), jnp.int32)
+    got = ops.paged_prefill(q, pk, pv, bt, start)
+    want = ref.flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_mask_value_dtype_aware():
+    """The -1e30 sentinel satellite: finite in every dtype (fp16's max is
+    65504, so the historical constant overflowed to -inf there and a fully
+    masked row softmaxed to NaN), unchanged for f32/bf16."""
+    from repro.models.layers import mask_value
+    assert mask_value(jnp.float32) == -1e30
+    assert mask_value(jnp.bfloat16) == -1e30
+    f16 = mask_value(jnp.float16)
+    assert np.isfinite(np.float16(f16))
+    assert f16 < -1e4
+    for dt in (jnp.float32, jnp.bfloat16, jnp.float16):
+        assert np.isfinite(np.asarray(jnp.asarray(mask_value(dt), dt)))
+
+
 @pytest.mark.parametrize("T,chunk", [(64, 16), (64, 32), (128, 64), (33, 16)])
 def test_wkv6(T, chunk):
     B, H, N = 2, 3, 16

@@ -155,6 +155,109 @@ def test_kernel_prefill_path_matches(qwen):
         assert e.tokens == k.tokens
 
 
+# ------------------------------------------------- paged-kernel prefill
+@pytest.mark.parametrize("arch", ["qwen2.5-32b", "dbrx-132b",
+                                  "llama-3.2-vision-11b",
+                                  "whisper-large-v3"])
+def test_paged_kernel_on_off_greedy_equality(arch):
+    """The tentpole equivalence: paged_attn_impl='kernel' (Pallas
+    block-gather decode + incremental per-chunk page splice where the
+    family supports it) produces the same greedy streams as the
+    masked-einsum transient path for dense / MoE / VLM / encdec — with a
+    slot-recycling workload and a non-aligned prompt so partially-filled
+    last pages are exercised."""
+    model, params = _model(arch)
+    kw = dict(batch_slots=2, s_max=S_MAX, page_size=8,
+              prefill_chunk_tokens=4, prefix_cache=False)
+    off = ServeEngine(model, params, paged_attn_impl="einsum", **kw)
+    o_reqs = _workload(off, model.cfg.vocab_size, prompt_len=13)
+    off.run()
+    on = ServeEngine(model, params, paged_attn_impl="kernel", **kw)
+    assert on.paged_attn_impl == "kernel"
+    from repro.configs.base import Family
+    assert on.incremental_splice == (model.cfg.family != Family.ENCDEC)
+    n_reqs = _workload(on, model.cfg.vocab_size, prompt_len=13)
+    on.run()
+    for o, n in zip(o_reqs, n_reqs):
+        assert o.tokens == n.tokens and len(n.tokens) == n.gen_len
+    # the tentpole's memory claim: no transient request cache ever existed
+    if on.incremental_splice:
+        assert on.max_transient_cache_bytes == 0
+    assert off.max_transient_cache_bytes > 0
+
+
+@pytest.mark.parametrize("page_size", [4, 8, 16, 32])
+def test_paged_kernel_page_size_sweep(qwen, page_size):
+    """Explicit kernel impl across the page-size ladder INCLUDING the
+    degenerate page_size == s_max single-page config: greedy streams equal
+    the dense scan anchor at every size."""
+    model, params = qwen
+    scan = ServeEngine(model, params, batch_slots=2, s_max=S_MAX,
+                       prefill_mode="scan")
+    s_reqs = _workload(scan, model.cfg.vocab_size, prompt_len=13)
+    scan.run()
+    eng = ServeEngine(model, params, batch_slots=2, s_max=S_MAX,
+                      page_size=page_size, paged_attn_impl="kernel",
+                      prefill_chunk_tokens=4)
+    assert eng.incremental_splice
+    reqs = _workload(eng, model.cfg.vocab_size, prompt_len=13)
+    eng.run()
+    for s, p in zip(s_reqs, reqs):
+        assert s.tokens == p.tokens
+    assert eng.max_transient_cache_bytes == 0
+    eng.assert_page_invariants()
+
+
+def test_paged_kernel_prefix_aliased_pages_with_write_floor(qwen):
+    """Prefix-aliased pages under the incremental splice: sharers read the
+    donor's pages in place (no gather seeding), the chunk scatter drops
+    writes below ``write_floor`` (the aliased full pages stay immutable),
+    and an unaligned header's partial page is COW-materialised with the
+    pool scatter — streams identical to the uncached engine throughout."""
+    model, params = qwen
+    vocab = model.cfg.vocab_size
+    rng = np.random.default_rng(17)
+    X = rng.integers(0, vocab, 21).astype(np.int32)   # 2 pages + 5 rows @ 8
+    pA = np.concatenate([X, rng.integers(0, vocab, 6).astype(np.int32)])
+    pB = np.concatenate([X, rng.integers(0, vocab, 6).astype(np.int32)])
+
+    def serve(prefix_cache):
+        eng = ServeEngine(model, params, batch_slots=2, s_max=S_MAX,
+                          page_size=8, paged_attn_impl="kernel",
+                          prefix_cache=prefix_cache, prefill_chunk_tokens=4)
+        out = []
+        for prompt, gen in [(X, 4), (pA, 6), (pB, 6)]:
+            req = eng.submit(prompt, gen)
+            eng.run()
+            eng.assert_page_invariants()
+            out.append(list(req.tokens))
+        return eng, out
+
+    e_on, on = serve(None)
+    assert e_on.incremental_splice
+    _, off = serve(False)
+    assert on == off
+    m = e_on.metrics
+    assert m.prefix_hits == 2 and m.prefix_pages_shared >= 4
+    assert m.prefix_cow_copies == 2            # partial page per sharer
+    assert e_on.max_transient_cache_bytes == 0
+
+
+def test_paged_kernel_engine_vs_flag_defaults(qwen):
+    """'auto' resolves to the kernel for multi-page dense configs and to
+    einsum for the degenerate single-page anchor (which must stay
+    bit-exact with the dense path)."""
+    model, params = qwen
+    multi = ServeEngine(model, params, batch_slots=2, s_max=S_MAX,
+                        page_size=8)
+    assert multi.paged_attn_impl == "kernel" and multi.incremental_splice
+    degen = ServeEngine(model, params, batch_slots=2, s_max=S_MAX,
+                        page_size=S_MAX)
+    assert degen.paged_attn_impl == "einsum" and not degen.incremental_splice
+    dense = ServeEngine(model, params, batch_slots=2, s_max=S_MAX)
+    assert not dense.incremental_splice
+
+
 # ------------------------------------------------------------ bucketing
 def test_chunk_ladder_and_plan_units():
     assert chunk_ladder(64) == [64, 32, 16, 8, 4, 2, 1]

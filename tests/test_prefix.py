@@ -169,6 +169,10 @@ def test_full_prompt_hit_skips_all_but_last_position(qwen):
 
 # ------------------------------------------------------- invariants / LRU
 def _check_invariants(eng):
+    # the engine's own walker covers free/held disjointness, refcount >= 1
+    # for every live block-table and index page, and the no-leak partition
+    # (release_job keeps these true through failures and cancellations)
+    eng.assert_page_invariants()
     free = set(eng.allocator._free)
     held = eng.allocator.held
     assert not free & held, "page both free and referenced"

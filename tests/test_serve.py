@@ -339,6 +339,214 @@ def test_metrics_wall_clamp_and_idempotent_on_done():
         1 / MIN_WALL_S)
 
 
+# ------------------------------------------- release_job / cancellation
+@pytest.fixture(scope="module")
+def qwen_mp():
+    cfg = reduced_config(configs.get_config("qwen2.5-32b"))
+    model = get_model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def test_prefill_failure_releases_pages_and_engine_serves_on(qwen_mp,
+                                                             monkeypatch):
+    """The mid-prefill failure satellite: a chunk dispatch that raises must
+    release the job's slots, reserved pages, and aliased prefix refcounts
+    (before release_job existed they were held until process exit), mark
+    its requests FAILED, and leave the engine fully serviceable."""
+    from repro.serve.scheduler import RequestState
+    model, params = qwen_mp
+    engine = ServeEngine(model, params, batch_slots=2, s_max=32, page_size=8,
+                         prefill_chunk_tokens=4, prefix_cache=False)
+    assert engine.incremental_splice
+    real = engine._chunk_paged_fn
+    calls = {"n": 0}
+
+    def flaky():
+        fn = real()
+
+        def wrapped(params, cache, batch):
+            calls["n"] += 1
+            if calls["n"] == 2:                  # fail MID-prefill
+                raise RuntimeError("injected chunk failure")
+            return fn(params, cache, batch)
+        return wrapped
+
+    monkeypatch.setattr(engine, "_chunk_paged_fn", flaky)
+    doomed = engine.submit(np.arange(1, 14, dtype=np.int32), 4)
+    engine.step()                                # chunk 1 ok
+    assert doomed.state is RequestState.PREFILLING
+    engine.step()                                # chunk 2 raises -> released
+    assert doomed.state is RequestState.FAILED
+    assert "injected chunk failure" in doomed.error
+    assert engine.prefill_failures == 1
+    assert engine.free_pages == engine.num_pages
+    assert engine.slot_req == [None, None] and not engine._jobs
+    engine.assert_page_invariants()
+    monkeypatch.setattr(engine, "_chunk_paged_fn", real)
+    ok = engine.submit(promptA(), 4)             # engine still serves
+    engine.run()
+    assert ok.done and len(ok.tokens) == 4
+    assert engine.free_pages == engine.num_pages
+    engine.assert_page_invariants()
+
+
+def test_prefill_failure_transient_path_also_releases(mp, monkeypatch):
+    """Same contract on the transient (non-incremental) chunk path — the
+    hybrid family here — including the batch-K grouped case."""
+    from repro.serve.scheduler import RequestState
+    model, params = mp
+    engine = make_engine(model, params, page_size=8)
+    assert not engine.incremental_splice
+
+    def boom(first):
+        def fail(*a, **k):
+            raise RuntimeError("boom")
+        return fail
+
+    monkeypatch.setattr(engine, "_chunk_fn", boom)
+    a = engine.submit(promptA(), 4)
+    b = engine.submit(promptA(), 4)              # same length: one K=2 job
+    engine.step()
+    assert a.state is RequestState.FAILED and b.state is RequestState.FAILED
+    assert engine.free_pages == engine.num_pages
+    assert engine.transient_cache_bytes() == 0
+    engine.assert_page_invariants()
+
+
+def test_cancel_in_every_state(qwen_mp):
+    """cancel() releases resources from QUEUED (lazy heap skip), PREFILLING
+    (immediate job release for a singleton job), and RUNNING (slot retired
+    on the spot); double-cancel and cancel-after-done return False."""
+    from repro.serve.scheduler import RequestState
+    model, params = qwen_mp
+    engine = ServeEngine(model, params, batch_slots=1, s_max=32, page_size=8,
+                         prefill_chunk_tokens=2, prefix_cache=False)
+    running = engine.submit(promptA(), 8)
+    while running.state is not RequestState.RUNNING:
+        engine.step()
+    prefilling = engine.submit(np.arange(1, 13, dtype=np.int32), 4)
+    queued = engine.submit(promptB(), 4)
+    survivor = engine.submit(promptA(), 3)
+    assert engine.cancel(running.rid) and running.state is \
+        RequestState.CANCELLED
+    engine.step()                                # admits `prefilling`
+    assert prefilling.state is RequestState.PREFILLING
+    assert engine.cancel(prefilling.rid)
+    assert prefilling.state is RequestState.CANCELLED
+    assert engine.free_pages == engine.num_pages
+    assert engine.cancel(queued.rid) and queued.state is \
+        RequestState.CANCELLED
+    assert not engine.cancel(queued.rid)         # already cancelled
+    engine.run()
+    assert survivor.done and len(survivor.tokens) == 3   # queue undamaged
+    assert not queued.tokens and queued.error == "cancelled"
+    assert engine.free_pages == engine.num_pages
+    engine.assert_page_invariants()
+    assert not engine.cancel(survivor.rid)
+    # aborted requests are counted separately and never pollute completion
+    # counts or the latency percentiles (a cancel-right-after-submit would
+    # otherwise enter latency p50 as ~0 s)
+    s = engine.metrics.summary()
+    assert s["aborted"] == 3 and s["completed"] == 1
+
+
+def test_cancel_grouped_prefill_member_lands_at_splice(qwen_mp):
+    """Cancelling ONE member of a batch-K prefill job cannot change the
+    group's batch shape mid-stream: the cancelled member retires at the
+    splice without sampling while its group-mates run to completion."""
+    from repro.serve.scheduler import RequestState
+    model, params = qwen_mp
+    engine = ServeEngine(model, params, batch_slots=2, s_max=32, page_size=8,
+                         prefill_chunk_tokens=2, prefix_cache=False)
+    a = engine.submit(np.arange(1, 13, dtype=np.int32), 4)
+    b = engine.submit(np.arange(21, 33, dtype=np.int32), 4)
+    engine.step()                                # one K=2 job, chunk 1
+    assert a.state is RequestState.PREFILLING
+    assert engine.cancel(b.rid)
+    engine.run()
+    assert a.done and len(a.tokens) == 4
+    assert b.state is RequestState.CANCELLED and not b.tokens
+    assert engine.free_pages == engine.num_pages
+    engine.assert_page_invariants()
+
+
+def test_poisoned_cache_failover_keeps_serving(qwen_mp, monkeypatch):
+    """The incremental chunk dispatch DONATES the shared resident cache; a
+    failure at execution time can therefore destroy every live slot's K/V,
+    not just the failed job's. The engine must detect the dead buffers,
+    fail ALL in-flight requests, rebuild the pool/allocator/prefix index,
+    and keep serving queued and future requests."""
+    from repro.serve.scheduler import RequestState
+    model, params = qwen_mp
+    engine = ServeEngine(model, params, batch_slots=2, s_max=32, page_size=8,
+                         prefill_chunk_tokens=4)
+    assert engine.incremental_splice
+    bystander = engine.submit(promptA(), 12)
+    while bystander.state is not RequestState.RUNNING:
+        engine.step()
+
+    def dead():
+        def fail(params, cache, batch):
+            for leaf in jax.tree.leaves(cache):   # donated-and-lost buffers
+                leaf.delete()
+            raise RuntimeError("device OOM mid-dispatch")
+        return fail
+
+    monkeypatch.setattr(engine, "_chunk_paged_fn", dead)
+    doomed = engine.submit(np.arange(1, 14, dtype=np.int32), 4)
+    engine.step()                                # chunk raises -> failover
+    assert doomed.state is RequestState.FAILED
+    assert bystander.state is RequestState.FAILED   # its K/V died too
+    assert "cache lost" in bystander.error
+    assert engine.free_pages == engine.num_pages
+    engine.assert_page_invariants()
+    monkeypatch.undo()
+    ok = engine.submit(promptB(), 4)
+    engine.run()
+    assert ok.done and len(ok.tokens) == 4
+    s = engine.metrics.summary()
+    assert s["aborted"] == 2 and s["completed"] == 1
+
+
+# --------------------------------------------------- mask-sentinel fixes
+def test_all_freed_batch_bf16_decode_is_finite(qwen_mp):
+    """The -1e30 sentinel satellite, engine-level: with EVERY slot freed
+    (pos parked at INACTIVE_POS, block tables all -1) a bf16-compute decode
+    tick must produce finite logits — a fully-masked attention row comes
+    out harmless (zeros/uniform), never NaN out of softmax."""
+    import jax.numpy as jnp_
+    model, params = qwen_mp
+    engine = ServeEngine(model, params, batch_slots=2, s_max=32, page_size=8,
+                         compute_dtype=jnp_.bfloat16,
+                         cache_dtype=jnp_.bfloat16, prefix_cache=False)
+    req = engine.submit(promptA(), 2)
+    engine.run()
+    assert req.done
+    assert all(r is None for r in engine.slot_req)       # all freed
+    logits, engine.cache = engine._decode(
+        engine.params, engine.cache,
+        {"token": jax.numpy.asarray(engine.cur_token),
+         **engine._decode_extras()})
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_lm_logits_fp16_padding_mask_is_finite():
+    """Regression for the overflow itself: in float16 the old -1e30
+    sentinel became -inf (fp16 max is 65504) in the vocab-padding mask;
+    the dtype-aware sentinel keeps every logit finite."""
+    from repro.models import layers as L
+    table = jax.random.normal(jax.random.PRNGKey(0), (16, 8),
+                              jax.numpy.float16) * 0.1
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 8),
+                          jax.numpy.float16)
+    logits = L.lm_logits({"table": table}, x, None, vocab=10)
+    assert logits.dtype == jax.numpy.float16
+    out = np.asarray(logits, np.float32)
+    assert np.isfinite(out).all()
+    # padding columns still lose every argmax
+    assert (out.argmax(-1) < 10).all()
+
+
 def test_int8_ptq_path_through_engine():
     """The PTQ path is wired through the engine unchanged."""
     engine = ServeEngine.build(ARCH, reduced=True, batch_slots=2, s_max=32,
