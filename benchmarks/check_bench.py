@@ -60,6 +60,15 @@ GATED_METRICS = [
     ("prefix_cell.cached_prefill_tokens_per_s", True, True, None),
     ("prefill_paged.acceptance.speedup", True, False, 0.5),
     ("prefill_paged_cell.kernel_prefill_tokens_per_s", True, True, None),
+    # goodput SLO flags (PR 6): BOOLEAN rows, compared as 0/1 — a
+    # True -> False flip under higher_is_better regresses at any threshold.
+    # They are machine-independent (relative-only safe): the SLOs are
+    # multiples of the SAME machine's measured unloaded percentiles and the
+    # slo-gain flag compares two replays of one seeded schedule in one run.
+    ("goodput.acceptance.passes_steady_slo", True, False, None),
+    ("goodput.acceptance.passes_slo_gain", True, False, None),
+    ("goodput.acceptance.passes_roofline_bound", True, False, None),
+    ("goodput.acceptance.goodput_tokens_per_s", True, True, None),
 ]
 
 
@@ -129,10 +138,17 @@ def check(baseline: dict, fresh: dict, threshold: float,
         if f is None:
             failures.append(f"{path}: missing from fresh bench")
             continue
-        if not isinstance(f, (int, float)) or isinstance(f, bool):
+        # acceptance FLAGS gate as 0/1: a baseline-True row that comes back
+        # False is a regression at any threshold (0 >= (1-t)*1 never holds),
+        # and a False -> True flip always passes
+        if isinstance(f, bool):
+            f = int(f)
+        if isinstance(b, bool):
+            b = int(b)
+        if not isinstance(f, (int, float)):
             failures.append(f"{path}: fresh value {f!r} is not numeric")
             continue
-        if b is None or not isinstance(b, (int, float)) or isinstance(b, bool):
+        if b is None or not isinstance(b, (int, float)):
             # baseline predates this section (the first PR that adds a bench
             # section MUST still pass the gate — there is nothing to regress
             # against yet) or holds a non-numeric relic: skip with a warning,

@@ -179,3 +179,33 @@ def calibrate(gemms: Sequence[Gemm], hw: HardwareProfile = ZCU104,
                     if err < best_err:
                         best, best_err = fit, err
     return best
+
+
+# ---------------------------------------------------------------- serving
+def decode_roofline(n_params: int, hw: HardwareProfile = ZCU104,
+                    fit: FitConstants = DEFAULT_FIT,
+                    bytes_per_param: int = 2) -> dict:
+    """Analytic tokens/s ceiling for batch-1 autoregressive decode — the
+    serving-side counterpart of the FPS ladder. Each generated token
+    touches every live parameter once: 2 FLOPs per MAC on the compute
+    side, ``bytes_per_param`` of weight traffic on the memory side (KV
+    reads are second-order for the model sizes served here), so
+
+        compute_bound = peak_flops * efficiency / (2 * n_params)
+        memory_bound  = bw_fast / (n_params * bytes_per_param)
+
+    and the roofline is their min. The serve bench uses this as a sanity
+    ceiling: measured open-loop GOODPUT can never exceed the roofline of a
+    profile calibrated from the same machine's closed-loop capacity —
+    queueing and SLO misses only ever subtract."""
+    if n_params <= 0:
+        raise ValueError(f"n_params must be positive, got {n_params}")
+    compute = hw.peak_flops * fit.efficiency / (2.0 * n_params)
+    memory = fit.bw_fast / (n_params * bytes_per_param)
+    return {
+        "n_params": int(n_params),
+        "compute_tokens_per_s": compute,
+        "memory_tokens_per_s": memory,
+        "tokens_per_s": min(compute, memory),
+        "bound": "compute" if compute <= memory else "memory",
+    }

@@ -86,9 +86,13 @@ Request lifecycle
 ``launch/serve.py`` remains a thin CLI shim over this package.
 """
 from repro.serve.engine import PageAllocator, ServeEngine
-from repro.serve.metrics import MetricsRecorder
+from repro.serve.metrics import SLO, MetricsRecorder
 from repro.serve.prefix import PrefixIndex, PrefixPlan
-from repro.serve.scheduler import Request, RequestState, Scheduler
+from repro.serve.scheduler import (Request, RequestState, SchedPolicy,
+                                   Scheduler)
+from repro.serve.workload import ArrivalEvent, WorkloadSpec, generate, replay
 
-__all__ = ["ServeEngine", "PageAllocator", "MetricsRecorder", "PrefixIndex",
-           "PrefixPlan", "Request", "RequestState", "Scheduler"]
+__all__ = ["ServeEngine", "PageAllocator", "MetricsRecorder", "SLO",
+           "PrefixIndex", "PrefixPlan", "Request", "RequestState",
+           "SchedPolicy", "Scheduler", "ArrivalEvent", "WorkloadSpec",
+           "generate", "replay"]

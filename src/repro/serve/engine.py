@@ -98,7 +98,8 @@ from repro.models.registry import (Model, cache_capacity, copy_pool_rows,
                                    vectorize_cache_pos)
 from repro.serve.metrics import MetricsRecorder
 from repro.serve.prefix import PrefixIndex, PrefixPlan
-from repro.serve.scheduler import Request, RequestState, Scheduler
+from repro.serve.scheduler import (Request, RequestState, SchedPolicy,
+                                   Scheduler)
 
 # families whose transient prefill state is exactly (k, v, pos) — the only
 # ones a page-level prefix can fully reconstruct a mid-prompt state for.
@@ -197,6 +198,7 @@ class _PrefillJob:
     write_floor: int = 0           # splice drops rows below this
     prefix_plans: Optional[List[PrefixPlan]] = None   # per-request, for
     # registration at splice (None in scan mode / prefix-cache off)
+    deficit: int = 0               # DRR chunk-token credit (policy.drr only)
 
 
 @functools.lru_cache(maxsize=64)
@@ -332,7 +334,8 @@ class ServeEngine:
                  paged_attn_impl: str = "auto",
                  max_prefill_traces: Optional[int] = None,
                  scheduler: Optional[Scheduler] = None,
-                 metrics: Optional[MetricsRecorder] = None):
+                 metrics: Optional[MetricsRecorder] = None,
+                 policy: Optional[SchedPolicy] = None):
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -373,6 +376,12 @@ class ServeEngine:
         # a caller's configured (e.g. prefix-aware) scheduler
         self.scheduler = Scheduler() if scheduler is None else scheduler
         self.metrics = MetricsRecorder() if metrics is None else metrics
+        # SLO-aware scheduling policy: every SchedPolicy default is OFF, so
+        # policy=None keeps greedy token streams bit-identical to the
+        # pre-policy engine (the standing anchor discipline)
+        self.policy = SchedPolicy() if policy is None else policy
+        self._drr_cursor = 0          # rotates the DRR starting job per tick
+        self._consec_prefill_ticks = 0  # starvation-guard state
 
         if page_size is not None and model.cfg.family == Family.SSM:
             log.warning("ssm/rwkv state is O(1) in s_max — ignoring paging")
@@ -485,6 +494,7 @@ class ServeEngine:
               prefill_mode: str = "parallel", prefill_chunk_tokens: int = 64,
               prefill_attn_impl: str = "auto",
               paged_attn_impl: str = "auto",
+              policy: Optional[SchedPolicy] = None,
               compute_dtype=jnp.float32) -> "ServeEngine":
         """Construct model + params from an arch id; the int8 PTQ path is the
         same structural quantize->dequant-on-load as the paper's C5 (the
@@ -504,7 +514,7 @@ class ServeEngine:
                    prefill_mode=prefill_mode,
                    prefill_chunk_tokens=prefill_chunk_tokens,
                    prefill_attn_impl=prefill_attn_impl,
-                   paged_attn_impl=paged_attn_impl, seed=seed)
+                   paged_attn_impl=paged_attn_impl, policy=policy, seed=seed)
 
     # ------------------------------------------------------------ extras
     def _decode_extras(self) -> dict:
@@ -609,8 +619,12 @@ class ServeEngine:
         return -(-min(rows, self.capacity) // self.page_size)
 
     def _pages_needed(self, req: Request) -> int:
+        # ``remaining`` (== gen_len for a fresh request) rather than gen_len:
+        # a PREEMPTED request re-admits with its generated tokens folded into
+        # the prompt, and charging full gen_len again would overcount its
+        # reservation by len(tokens) — past s_max in the worst case
         return self._pages_for_rows(
-            self._rows_needed(len(req.prompt), req.gen_len))
+            self._rows_needed(len(req.prompt), req.remaining))
 
     def _phys_rows(self, slots: List[int], floor: int = 0) -> np.ndarray:
         """(K, capacity) flattened pool-row index per logical cache row for a
@@ -707,7 +721,7 @@ class ServeEngine:
             # (an O(prompt) hash walk per submit with no consumer).
             req.prefix_hint = self.prefix_index.probe_len(prompt)
         self.requests[rid] = req
-        self.metrics.on_submit(rid, len(req.prompt))
+        self.metrics.on_submit(rid, len(req.prompt), priority)
         self.scheduler.submit(req)
         return req
 
@@ -747,13 +761,14 @@ class ServeEngine:
         pairs = []
         plans: Dict[int, Optional[PrefixPlan]] = {}
         for slot in self.free_slots:
+            # lazily-cancelled heads are pruned inside Scheduler.peek — the
+            # scheduler is the single source of truth for queue liveness
             req = self.scheduler.peek()
-            # requests cancelled while QUEUED are skipped lazily here (heap
-            # removal is O(n); admission already pops in order)
-            while req is not None and req.state is RequestState.CANCELLED:
-                self.scheduler.next_request()
+            while req is not None and self._shed_head(req):
                 req = self.scheduler.peek()
             if req is None:
+                break
+            if self._defer_head(req):
                 break
             plan = None
             if self.paged:
@@ -785,6 +800,22 @@ class ServeEngine:
                     if evicted:
                         self.metrics.on_prefix_evict(evicted)
                     fresh = self.allocator.alloc(need)
+                if fresh is None and self.policy.preemption:
+                    # pool pressure: pause strictly-lower-priority RUNNING
+                    # slots (recompute-style re-queue) until the head fits
+                    # or no eligible victim remains. Each preemption demotes
+                    # the victim's registered prompt pages to index-only, so
+                    # eviction re-runs before the retry — otherwise a cached
+                    # victim frees nothing and admission deadlocks
+                    while fresh is None and \
+                            self._preempt_lowest(below=req.priority):
+                        if (self.prefix_index is not None
+                                and need > self.allocator.free):
+                            evicted = self.prefix_index.evict(
+                                need - self.allocator.free)
+                            if evicted:
+                                self.metrics.on_prefix_evict(evicted)
+                        fresh = self.allocator.alloc(need)
                 if fresh is None:
                     if refs:
                         self.allocator.release(refs)     # back to index-only
@@ -848,6 +879,97 @@ class ServeEngine:
                     self._seed_prefix_job(job, cached)
             self._jobs.append(job)
         return len(pairs)
+
+    # ------------------------------------------- admission control / preempt
+    def _admission_pressure(self) -> bool:
+        """True when the AVAILABLE-page fraction is below the policy's
+        low-water mark — the signal admission control sheds/defers on.
+        Available counts the free list PLUS the prefix index's reclaimable
+        (index-only) pages: a warm cache parks most of the free list in
+        evictable pages, and a raw free-list reading would shed load the
+        pool could trivially serve. Always False for dense caches and with
+        the default policy (low_water == 0)."""
+        pol = self.policy
+        if not (self.paged and pol.admission_low_water > 0.0):
+            return False
+        avail = self.allocator.free
+        if self.prefix_index is not None:
+            avail += self.prefix_index.reclaimable
+        return avail < pol.admission_low_water * self.num_pages
+
+    def _gated(self, req: Request) -> bool:
+        pol = self.policy
+        return (pol.admission_shed_priority is not None
+                and req.priority >= pol.admission_shed_priority
+                and self._admission_pressure())
+
+    def _shed_head(self, req: Request) -> bool:
+        """Admission control, shedding flavor: under pool pressure a queued
+        head at/below the shed priority is popped and FAILED outright so the
+        pool's remaining headroom serves the load the SLO protects. Returns
+        True when the head was shed (the caller re-peeks)."""
+        if not (self.policy.admission_shed and self._gated(req)):
+            return False
+        self.scheduler.next_request()
+        req.state = RequestState.FAILED
+        req.error = "shed: free pages below admission low water"
+        self.metrics.on_shed(req.rid)
+        self.metrics.on_aborted(req.rid)
+        return True
+
+    def _defer_head(self, req: Request) -> bool:
+        """Admission control, deferring flavor (``admission_shed=False``):
+        the gated head stays queued — strict order, no skip-ahead — until
+        completions lift the pool back over the low-water mark."""
+        return (not self.policy.admission_shed) and self._gated(req)
+
+    def _preempt_lowest(self, below: int) -> bool:
+        """Preempt the worst-priority RUNNING slot whose priority is
+        STRICTLY greater (worse) than ``below``; among equals the most
+        recently submitted loses (least generated work to recompute).
+        Returns False when no eligible victim exists."""
+        victim_slot, victim = None, None
+        for slot, r in enumerate(self.slot_req):
+            if r is None or r.state is not RequestState.RUNNING:
+                continue
+            if r.priority <= below:
+                continue
+            if victim is None or (r.priority, r.rid) > (victim.priority,
+                                                        victim.rid):
+                victim_slot, victim = slot, r
+        if victim is None:
+            return False
+        self._preempt(victim_slot)
+        return True
+
+    def _preempt(self, slot: int):
+        """Pause a RUNNING request recompute-style: release its slot and
+        pages (K/V is reproducible — vLLM's recompute preemption), fold the
+        tokens generated so far into the prompt, and re-queue it under its
+        ORIGINAL arrival seq. On re-admission the folded prompt re-prefills
+        (through the prefix cache when enabled, which typically still holds
+        its pages) and the completion splice samples exactly the token the
+        uninterrupted decode would have produced — greedy streams stay
+        bit-identical across a preemption. The request record stays open:
+        the pause surfaces as one long inter-token gap, which is precisely
+        what preemption trades against higher-priority TTFT."""
+        req = self.slot_req[slot]
+        if req.tokens:
+            req.prompt = np.concatenate(
+                [req.prompt, np.asarray(req.tokens, np.int32)])
+        req.state = RequestState.QUEUED
+        req.slot = None
+        self.slot_req[slot] = None
+        self.cur_token[slot, 0] = 0
+        self.cache["pos"] = self.cache["pos"].at[slot].set(INACTIVE_POS)
+        if self.paged:
+            self.allocator.release(self.slot_pages[slot])
+            self.slot_pages[slot] = []
+            self._bt_host[slot, :] = -1
+            self.cache["block_tables"] = jnp.asarray(self._bt_host)
+        self.metrics.on_preempt(req.rid)
+        self._defer_state = None      # freed pages can change the outcome
+        self.scheduler.submit(req)
 
     def _seed_prefix_job(self, job: _PrefillJob, cached_len: int):
         """Materialise a prefix-hit group's transient cache: gather the
@@ -929,7 +1051,9 @@ class ServeEngine:
         budget, whatever the longest queued prompt is. Bucketed ladder
         chunks that fit the remaining budget run back-to-back (a 12-token
         prompt under a 64 budget still completes in one tick as 8 + 4), in
-        strict job-FIFO order. Returns prompt positions ingested.
+        strict job-FIFO order — or deficit-round-robin across jobs when
+        ``policy.drr`` is set (same budget, fairly split; see
+        ``_prefill_tick_drr``). Returns prompt positions ingested.
 
         With ``incremental_splice`` the chunk dispatch writes its K/V rows
         straight into the group's reserved pages and attends them through
@@ -941,73 +1065,122 @@ class ServeEngine:
         refcounts released, requests marked FAILED) and the tick moves on —
         an errored prompt can neither strand pages until process exit nor
         wedge the queue behind it."""
-        ingested = 0
         budget = self.prefill_chunk_tokens
-        while self._jobs and budget > 0:
-            job = self._jobs[0]
-            C = job.plan[job.idx]
-            if C > budget:
-                break
-            K = len(job.slots)
-            toks = jnp.asarray(job.prompts[:, job.filled:job.filled + C])
-            t0 = self.metrics.now()
-            try:
-                if self.incremental_splice:
-                    self._note_prefill_trace(False, K, C)
-                    batch = {
-                        "tokens": toks,
-                        "bt": jnp.asarray(self._bt_host[job.slots]),
-                        "start": jnp.asarray(job.tail_start + job.filled,
-                                             jnp.int32),
-                        "floor": jnp.asarray(job.write_floor, jnp.int32),
-                        **self._prefill_extras(K)}
-                    logits, self.cache = self._chunk_paged_fn()(
-                        self.params, self.cache, batch)
-                else:
-                    # a prefix-seeded job already has its transient cache
-                    # (gathered from shared pages): every chunk continues
-                    first = job.cache is None
-                    self._note_prefill_trace(first, K, C)
-                    batch = {"tokens": toks, **self._prefill_extras(K)}
-                    if first:
-                        logits, job.cache = self._chunk_fn(True)(self.params,
-                                                                 batch)
-                    else:
-                        logits, job.cache = self._chunk_fn(False)(
-                            self.params, job.cache, batch)
-                jax.block_until_ready(logits)
-            except Exception as err:  # noqa: BLE001 — released, not resumed
-                log.exception("prefill chunk failed for rids %s; releasing "
-                              "the job", [r.rid for r in job.reqs])
-                self.prefill_failures += 1
-                # the incremental dispatch DONATES the resident cache: a
-                # failure at EXECUTION time (not trace time) may have
-                # consumed or poisoned the shared pools every other live
-                # slot reads. Check BEFORE release_job — its _finish writes
-                # into the cache and would raise on dead buffers — and fail
-                # over to a fresh pool instead of crashing the next tick.
-                if self.incremental_splice and not self._cache_healthy():
-                    self._reset_poisoned_cache(err)
-                else:
-                    self.release_job(job, error=err)
-                continue
-            self.metrics.on_prefill_chunk(K * C, self.metrics.now() - t0)
-            self.max_transient_cache_bytes = max(
-                self.max_transient_cache_bytes, self.transient_cache_bytes())
-            job.idx += 1
-            job.filled += C
-            budget -= C
-            ingested += C
-            if job.idx == len(job.plan):
-                self._jobs.pop(0)
-                self._splice_and_start(
-                    job.slots, job.reqs,
-                    None if self.incremental_splice else job.cache, logits,
-                    write_floor=job.write_floor,
-                    prefix_plans=job.prefix_plans)
+        if self.policy.drr and len(self._jobs) > 1:
+            ingested = self._prefill_tick_drr(budget)
+        else:
+            # default: strict job-FIFO (the pre-policy behavior, bit-exact)
+            ingested = 0
+            while self._jobs and budget > 0:
+                job = self._jobs[0]
+                if job.plan[job.idx] > budget:
+                    break
+                got = self._run_chunk(job)
+                if got is None:     # dispatch raised; job released/pool reset
+                    continue
+                budget -= got
+                ingested += got
         self.max_prefill_tokens_per_tick = max(
             self.max_prefill_tokens_per_tick, ingested)
         return ingested
+
+    def _prefill_tick_drr(self, budget: int) -> int:
+        """Deficit round-robin across pending prefill jobs: every job earns
+        a quantum of chunk-token credit per tick (carry capped at 2x the
+        tick budget) and spends it in rotation, so K concurrent prompts
+        interleave at chunk granularity instead of the head job draining
+        the whole budget every tick until it completes. The rotation start
+        advances each tick so leftover budget is not always offered to the
+        same job first. The per-tick budget (head-of-line bound) is
+        unchanged — DRR only redistributes it."""
+        ingested = 0
+        q = self.policy.drr_quantum or max(1, budget // len(self._jobs))
+        for job in self._jobs:
+            job.deficit = min(job.deficit + q, 2 * self.prefill_chunk_tokens)
+        self._drr_cursor += 1
+        while budget > 0 and self._jobs:
+            n = len(self._jobs)
+            order = [self._jobs[(self._drr_cursor + k) % n] for k in range(n)]
+            ran = False
+            for job in order:
+                if budget <= 0 or job not in self._jobs:
+                    continue        # completed/released by an earlier chunk
+                C = job.plan[job.idx]
+                if C > budget or C > job.deficit:
+                    continue
+                got = self._run_chunk(job)
+                ran = True
+                if got is None:     # failure path mutated the job list:
+                    break           # rebuild the rotation from live state
+                job.deficit -= got
+                budget -= got
+                ingested += got
+            if not ran:
+                break               # nobody could spend: credit accrues
+        return ingested
+
+    def _run_chunk(self, job: _PrefillJob) -> Optional[int]:
+        """Dispatch ``job``'s next bucketed chunk; on the final chunk,
+        splice-and-start the group. Returns the chunk length ingested, or
+        None when the dispatch raised — the job was released (or the whole
+        poisoned pool reset) and the caller must re-read the job list."""
+        C = job.plan[job.idx]
+        K = len(job.slots)
+        toks = jnp.asarray(job.prompts[:, job.filled:job.filled + C])
+        t0 = self.metrics.now()
+        try:
+            if self.incremental_splice:
+                self._note_prefill_trace(False, K, C)
+                batch = {
+                    "tokens": toks,
+                    "bt": jnp.asarray(self._bt_host[job.slots]),
+                    "start": jnp.asarray(job.tail_start + job.filled,
+                                         jnp.int32),
+                    "floor": jnp.asarray(job.write_floor, jnp.int32),
+                    **self._prefill_extras(K)}
+                logits, self.cache = self._chunk_paged_fn()(
+                    self.params, self.cache, batch)
+            else:
+                # a prefix-seeded job already has its transient cache
+                # (gathered from shared pages): every chunk continues
+                first = job.cache is None
+                self._note_prefill_trace(first, K, C)
+                batch = {"tokens": toks, **self._prefill_extras(K)}
+                if first:
+                    logits, job.cache = self._chunk_fn(True)(self.params,
+                                                             batch)
+                else:
+                    logits, job.cache = self._chunk_fn(False)(
+                        self.params, job.cache, batch)
+            jax.block_until_ready(logits)
+        except Exception as err:  # noqa: BLE001 — released, not resumed
+            log.exception("prefill chunk failed for rids %s; releasing "
+                          "the job", [r.rid for r in job.reqs])
+            self.prefill_failures += 1
+            # the incremental dispatch DONATES the resident cache: a
+            # failure at EXECUTION time (not trace time) may have
+            # consumed or poisoned the shared pools every other live
+            # slot reads. Check BEFORE release_job — its _finish writes
+            # into the cache and would raise on dead buffers — and fail
+            # over to a fresh pool instead of crashing the next tick.
+            if self.incremental_splice and not self._cache_healthy():
+                self._reset_poisoned_cache(err)
+            else:
+                self.release_job(job, error=err)
+            return None
+        self.metrics.on_prefill_chunk(K * C, self.metrics.now() - t0)
+        self.max_transient_cache_bytes = max(
+            self.max_transient_cache_bytes, self.transient_cache_bytes())
+        job.idx += 1
+        job.filled += C
+        if job.idx == len(job.plan):
+            self._jobs.remove(job)
+            self._splice_and_start(
+                job.slots, job.reqs,
+                None if self.incremental_splice else job.cache, logits,
+                write_floor=job.write_floor,
+                prefix_plans=job.prefix_plans)
+        return C
 
     def _splice_and_start(self, slot_ids, reqs, rcache, logits, *,
                           write_floor: int = 0, prefix_plans=None):
@@ -1051,9 +1224,16 @@ class ServeEngine:
             if req.gen_len <= 0:                 # nothing to generate
                 self._finish(slot)
                 continue
+            # a request resumed after preemption already streamed tokens:
+            # this splice's sample is its NEXT token, not its first —
+            # on_first_token is idempotent and would silently drop it
+            resumed = bool(req.tokens)
             req.tokens.append(int(toks[i]))
             self.cur_token[slot, 0] = int(toks[i])
-            self.metrics.on_first_token(req.rid)
+            if resumed:
+                self.metrics.on_token(req.rid)
+            else:
+                self.metrics.on_first_token(req.rid)
             if req.done:
                 self._finish(slot)
 
@@ -1227,12 +1407,31 @@ class ServeEngine:
                    if r is not None and r.state == RequestState.RUNNING)
 
     def step(self) -> int:
-        """One engine tick: admit waiting requests, ingest at most ONE
-        bucketed prefill chunk (the interleave that bounds decode
-        inter-token latency under long-prompt ingestion), then one decode
-        tick for every RUNNING slot; returns #active after the tick."""
+        """One engine tick: admit waiting requests, ingest at most one
+        prefill-chunk BUDGET of prompt work (the interleave that bounds
+        decode inter-token latency under long-prompt ingestion), then one
+        decode tick for every RUNNING slot; returns #active after the tick.
+
+        With ``policy.max_consecutive_prefill_ticks`` set, the decode-
+        starvation guard skips the prefill interleave for one tick after N
+        consecutive ticks in which prefill dispatched work while slots were
+        decoding — under sustained admission pressure the per-tick chunk
+        budget alone bounds each tick's prefill share, but nothing else
+        guarantees decode ever gets a prefill-free tick."""
         self.admit()
-        self._prefill_tick()
+        pol = self.policy
+        if (pol.max_consecutive_prefill_ticks > 0 and self._jobs
+                and self.running > 0
+                and self._consec_prefill_ticks
+                >= pol.max_consecutive_prefill_ticks):
+            self._consec_prefill_ticks = 0
+            self.metrics.on_starvation_skip()
+        else:
+            ingested = self._prefill_tick()
+            if ingested > 0 and self.running > 0:
+                self._consec_prefill_ticks += 1
+            else:
+                self._consec_prefill_ticks = 0
         if self.running:
             batch = {"token": jnp.asarray(self.cur_token),
                      **self._decode_extras()}

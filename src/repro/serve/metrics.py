@@ -18,10 +18,16 @@ class RequestRecord:
     rid: int
     prompt_len: int
     t_submit: float
+    priority: int = 0
     t_admit: Optional[float] = None           # slot reserved, prefill begins
     t_first_token: Optional[float] = None     # prefill done, token 1 sampled
+    t_last_token: Optional[float] = None      # most recent token (ITL base)
     t_done: Optional[float] = None
     n_tokens: int = 0
+    itl_s: List[float] = dataclasses.field(default_factory=list)
+    #                           inter-token gaps (len == n_tokens - 1 for a
+    #                           normally-streamed request); the per-request
+    #                           p95 of these is what the ITL SLO checks
     aborted: bool = False     # FAILED/CANCELLED: excluded from completion
     #                           counts and latency percentiles (a request
     #                           cancelled right after submit would otherwise
@@ -56,6 +62,15 @@ class RequestRecord:
             return None
         return self.n_tokens / max(lat, 1e-9)
 
+    @property
+    def itl_p95_s(self) -> Optional[float]:
+        """Per-request p95 inter-token gap; None when the request produced
+        fewer than two tokens (no gap exists — the ITL SLO is then
+        trivially met)."""
+        if not self.itl_s:
+            return None
+        return percentile(self.itl_s, 95)
+
 
 def percentile(xs: List[float], q: float) -> float:
     if not xs:
@@ -67,6 +82,28 @@ def percentile(xs: List[float], q: float) -> float:
 # granularity noise (or an injected test clock that never advanced): dividing
 # by them reports absurd token rates, so summary() clamps the denominator.
 MIN_WALL_S = 1e-6
+
+
+@dataclasses.dataclass(frozen=True)
+class SLO:
+    """Service-level objective for the open-loop harness. A request MEETS
+    the SLO iff it completed (not aborted), its time-to-first-token is at
+    most ``ttft_s``, and the p95 of its inter-token gaps is at most
+    ``itl_p95_s`` (single-token requests have no gaps and meet the ITL leg
+    trivially). Goodput is tokens/s summed over SLO-meeting requests only;
+    attainment denominators count EVERY submitted request — shed and
+    aborted load is a miss, not a statistical no-show."""
+    ttft_s: float
+    itl_p95_s: float
+
+    def met_by(self, rec: RequestRecord) -> bool:
+        if rec.aborted or rec.t_done is None:
+            return False
+        ttft = rec.ttft_s
+        if ttft is None or ttft > self.ttft_s:
+            return False
+        itl = rec.itl_p95_s
+        return itl is None or itl <= self.itl_p95_s
 
 
 class MetricsRecorder:
@@ -89,6 +126,10 @@ class MetricsRecorder:
         self.prefix_pages_shared = 0          # full pages aliased, no copy
         self.prefix_cow_copies = 0            # partial pages re-materialised
         self.prefix_evictions = 0             # LRU entries dropped for space
+        # SLO-aware scheduling counters (all zero with the default policy)
+        self.preemptions = 0                  # RUNNING slots paused+re-queued
+        self.shed_requests = 0                # admission control gave up early
+        self.starvation_guard_skips = 0       # prefill ticks skipped for decode
         self._t_start: Optional[float] = None
         self._t_stop: Optional[float] = None
 
@@ -105,9 +146,10 @@ class MetricsRecorder:
     def on_stop(self):
         self._t_stop = self._clock()
 
-    def on_submit(self, rid: int, prompt_len: int):
+    def on_submit(self, rid: int, prompt_len: int, priority: int = 0):
         self.requests[rid] = RequestRecord(rid=rid, prompt_len=prompt_len,
-                                           t_submit=self._clock())
+                                           t_submit=self._clock(),
+                                           priority=priority)
 
     def on_admit(self, rid: int):
         rec = self.requests[rid]
@@ -155,13 +197,35 @@ class MetricsRecorder:
         self.prefill_wall_s += wall_s
 
     def on_first_token(self, rid: int):
+        # idempotent like on_done: the token COUNT rides the same guard as
+        # the timestamp, so a duplicate call (retried splice, defensive
+        # engine path) cannot double-count token 1
         rec = self.requests[rid]
         if rec.t_first_token is None:
             rec.t_first_token = self._clock()
-        rec.n_tokens += 1
+            rec.t_last_token = rec.t_first_token
+            rec.n_tokens += 1
 
     def on_token(self, rid: int):
-        self.requests[rid].n_tokens += 1
+        rec = self.requests[rid]
+        rec.n_tokens += 1
+        now = self._clock()
+        if rec.t_last_token is not None:
+            rec.itl_s.append(now - rec.t_last_token)
+        rec.t_last_token = now
+
+    def on_preempt(self, rid: int):
+        """A RUNNING request was paused and re-queued (recompute-style).
+        The pause shows up naturally as one long inter-token gap when the
+        request resumes — the ITL SLO is exactly what preemption trades
+        away for higher-priority TTFT, so nothing is reset here."""
+        self.preemptions += 1
+
+    def on_shed(self, rid: int):
+        self.shed_requests += 1
+
+    def on_starvation_skip(self):
+        self.starvation_guard_skips += 1
 
     def on_done(self, rid: int):
         # idempotent: a duplicate _finish must not move t_done forward and
@@ -184,14 +248,21 @@ class MetricsRecorder:
         self.decode_steps += 1
 
     # ------------------------------------------------------------ summary
-    def summary(self) -> dict:
+    def summary(self, slo: Optional[SLO] = None) -> dict:
         recs = list(self.requests.values())
         done = [r for r in recs if r.t_done is not None and not r.aborted]
         ttfts = [r.ttft_s for r in done if r.ttft_s is not None]
         waits = [r.queue_wait_s for r in done if r.queue_wait_s is not None]
         lats = [r.latency_s for r in done]
         tps = [r.tokens_per_s for r in done if r.tokens_per_s is not None]
-        total_tokens = sum(r.n_tokens for r in recs)
+        itls = [g for r in done for g in r.itl_s]
+        # throughput counts SERVED tokens only: a FAILED/CANCELLED request's
+        # partial stream was never delivered, so crediting it would inflate
+        # tokens/s exactly when the engine is misbehaving (aborts are
+        # already excluded from `completed`). Aborted work is still visible,
+        # separately, as `aborted_tokens`.
+        total_tokens = sum(r.n_tokens for r in recs if not r.aborted)
+        aborted_tokens = sum(r.n_tokens for r in recs if r.aborted)
         t_end = self._t_stop if self._t_stop is not None else self._clock()
         # without on_start() (engine driven via step(), not run()) there is
         # no wall clock — report NaN like the other missing-data fields, not
@@ -200,14 +271,18 @@ class MetricsRecorder:
         # reporting a near-infinite rate
         wall = (t_end - self._t_start) if self._t_start is not None else \
             float("nan")
-        return {
+        out = {
             "requests": len(recs),
             "completed": len(done),
             "aborted": sum(1 for r in recs if r.aborted),
             "wall_s": wall,
             "total_tokens": total_tokens,
+            "aborted_tokens": aborted_tokens,
             "throughput_tokens_per_s": (total_tokens / max(wall, MIN_WALL_S)
                                         if wall > 0 else float("nan")),
+            "preemptions": self.preemptions,
+            "shed_requests": self.shed_requests,
+            "starvation_guard_skips": self.starvation_guard_skips,
             "decode_steps": self.decode_steps,
             "prefills": self.prefills,
             "prefill_tokens": self.prefill_tokens,
@@ -241,6 +316,46 @@ class MetricsRecorder:
                        "p95": percentile(ttfts, 95)},
             "latency_s": {"p50": percentile(lats, 50),
                           "p95": percentile(lats, 95)},
+            "itl_s": {"p50": percentile(itls, 50),
+                      "p95": percentile(itls, 95)},
             "request_tokens_per_s": {"p50": percentile(tps, 50),
                                      "p95": percentile(tps, 95)},
+        }
+        if slo is not None:
+            out["goodput"] = self._goodput(recs, slo, wall)
+        return out
+
+    def _goodput(self, recs: List[RequestRecord], slo: SLO,
+                 wall: float) -> dict:
+        """Goodput and SLO attainment, overall and per priority class.
+        Attainment denominators are ALL submitted requests of the class —
+        a shed or failed request counts as a miss (the alternative, only
+        grading survivors, would let admission control buy attainment by
+        refusing the very load it is graded on)."""
+        def _cls(rs: List[RequestRecord]) -> dict:
+            met = [r for r in rs if slo.met_by(r)]
+            ttft_ok = [r for r in rs
+                       if not r.aborted and r.ttft_s is not None
+                       and r.ttft_s <= slo.ttft_s]
+            n = len(rs)
+            return {
+                "submitted": n,
+                "completed": sum(1 for r in rs
+                                 if r.t_done is not None and not r.aborted),
+                "slo_met": len(met),
+                "slo_attainment": (len(met) / n) if n else float("nan"),
+                "ttft_attainment": (len(ttft_ok) / n) if n else float("nan"),
+                "good_tokens": sum(r.n_tokens for r in met),
+            }
+        overall = _cls(recs)
+        by_prio = {}
+        for p in sorted({r.priority for r in recs}):
+            by_prio[str(p)] = _cls([r for r in recs if r.priority == p])
+        return {
+            "slo": {"ttft_s": slo.ttft_s, "itl_p95_s": slo.itl_p95_s},
+            "goodput_tokens_per_s": (
+                overall["good_tokens"] / max(wall, MIN_WALL_S)
+                if wall > 0 else float("nan")),
+            **overall,
+            "by_priority": by_prio,
         }

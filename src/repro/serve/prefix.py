@@ -117,6 +117,16 @@ class PrefixIndex:
         """page id -> valid rows for every indexed page (test/debug view)."""
         return {page: rows for page, rows in self._entries.values()}
 
+    @property
+    def reclaimable(self) -> int:
+        """Pages ``evict`` could free right now (refcount 1: held only by
+        the index). Admission-control pressure counts these as available —
+        a warm cache legitimately parks most of the free list in
+        index-only pages, and shedding load over memory that one ``evict``
+        call would hand back is a false positive."""
+        return sum(1 for page, _ in self._entries.values()
+                   if self.allocator.refcount(page) == 1)
+
     # ------------------------------------------------------------ lookup
     def lookup(self, prompt: np.ndarray, touch: bool = True) -> PrefixPlan:
         """Longest cached page-aligned prefix of ``prompt``.

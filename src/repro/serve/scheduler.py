@@ -41,6 +41,10 @@ class Request:
     # set when the request leaves via FAILED (the prefill error, stringified)
     # or CANCELLED ("cancelled") instead of completing
     error: Optional[str] = None
+    # scheduler-assigned arrival sequence, set once on FIRST submit and kept
+    # across re-queues: a preempted request rejoins the FIFO order at its
+    # original arrival position instead of the back of its priority level
+    seq: Optional[int] = None
 
     @property
     def remaining(self) -> int:
@@ -51,13 +55,59 @@ class Request:
         return len(self.tokens) >= self.gen_len
 
 
+@dataclasses.dataclass(frozen=True)
+class SchedPolicy:
+    """Opt-in scheduling features for the serve engine. EVERY default is
+    "off": an engine built with ``SchedPolicy()`` (or ``policy=None``) emits
+    bit-identical greedy token streams to the pre-policy engine — the
+    standing anchor discipline. Each knob is independent; the bench's burst
+    cell enables them together.
+
+    - ``drr``: deficit round-robin across concurrent prefill jobs. Each
+      tick every pending job earns ``drr_quantum`` chunk-token credit and
+      jobs spend credit to dispatch chunks, so one long prompt can no
+      longer monopolize the per-tick chunk budget (FIFO job order is the
+      off-behavior). ``drr_quantum=0`` derives the quantum from the chunk
+      budget split over pending jobs.
+    - ``max_consecutive_prefill_ticks``: decode-starvation guard. After N
+      consecutive ticks in which prefill dispatched work while slots were
+      decoding, one tick skips prefill so running requests always make
+      token progress under sustained admission pressure. 0 disables.
+    - ``preemption``: under pool pressure, pause the lowest-priority
+      RUNNING slot (strictly lower than the queue head), release its pages
+      and re-queue it recompute-style — generated tokens fold into the
+      prompt and re-prefill on re-admission (pages are cheap to release/
+      alias; KV is reproducible). The request keeps its arrival ``seq``.
+    - ``admission_low_water`` / ``admission_shed_priority``: admission
+      control. When the free-page fraction drops below the low-water mark,
+      queued requests at ``priority >= admission_shed_priority`` are shed
+      (FAILED, ``admission_shed=True``) or deferred in place (False)
+      instead of admitted. ``low_water=0.0`` disables.
+    """
+    drr: bool = False
+    drr_quantum: int = 0
+    max_consecutive_prefill_ticks: int = 0
+    preemption: bool = False
+    admission_low_water: float = 0.0
+    admission_shed_priority: Optional[int] = None
+    admission_shed: bool = True
+
+
 class Scheduler:
     """Priority + FIFO admission queue, optionally prefix-aware.
 
     ``submit`` pushes; ``next_request`` pops the lowest (priority, hint
     rank, seq) tuple. A monotone sequence number breaks ties so
     equal-priority requests leave in arrival order and the heap never
-    compares Request objects directly.
+    compares Request objects directly. The sequence number is assigned once
+    per request and survives re-queues (preemption), so a paused request
+    keeps its arrival position.
+
+    Lazily-cancelled requests (``cancel()`` flips a QUEUED request to
+    CANCELLED without touching the heap) are pruned here, at the single
+    source of truth: ``peek``/``next_request`` skip dead heads and
+    ``waiting``/``__len__``/``__bool__`` count only live entries, so every
+    consumer agrees and no caller needs its own skip loop.
 
     ``prefix_aware=True`` turns ``Request.prefix_hint`` (set by the engine's
     submit-time prefix-cache probe) into an ordering HINT: within a priority
@@ -67,19 +117,22 @@ class Scheduler:
     within each (priority, hinted?) class, and the default (False) keeps
     the exact PR 1 ordering semantics.
 
-    FAIRNESS TRADEOFF: like the priority field itself (a steady priority-0
-    stream starves priority 1 forever — "think nice levels"), the hint has
-    no aging: under a sustained stream of cached-header traffic an unhinted
-    equal-priority request can be bypassed indefinitely. That is the deal
-    this opt-in makes — hit locality over strict arrival order. Deployments
-    needing a latency floor for cold prompts should encode it in
-    ``priority`` (which always dominates the hint) rather than enable this.
+    FAIRNESS: the hint ages. Each time a hinted request pops ahead of an
+    older unhinted request of the same priority the bypass counter ticks;
+    after ``hint_max_bypasses`` consecutive bypasses the OLDEST bypassed
+    unhinted request is promoted to the hinted rank (keeping its seq), so a
+    sustained cached-header stream can delay a cold prompt by at most
+    ``hint_max_bypasses`` admissions instead of forever. Priorities still
+    dominate the hint and have no aging ("think nice levels").
     """
 
-    def __init__(self, prefix_aware: bool = False):
+    def __init__(self, prefix_aware: bool = False,
+                 hint_max_bypasses: int = 4):
         self._heap: list = []
         self._seq = itertools.count()
         self.prefix_aware = prefix_aware
+        self.hint_max_bypasses = hint_max_bypasses
+        self._bypasses = 0            # consecutive hinted-over-unhinted pops
 
     def _rank(self, req: Request) -> int:
         if not self.prefix_aware:
@@ -89,14 +142,49 @@ class Scheduler:
     def submit(self, req: Request) -> Request:
         if req.state != RequestState.QUEUED:
             raise ValueError(f"request {req.rid} is {req.state}, not QUEUED")
+        if req.seq is None:
+            req.seq = next(self._seq)
         heapq.heappush(self._heap,
-                       (req.priority, self._rank(req), next(self._seq), req))
+                       (req.priority, self._rank(req), req.seq, req))
         return req
 
+    def _prune(self):
+        """Drop lazily-cancelled entries from the heap head so peek/pop
+        never surface a dead request."""
+        while self._heap and \
+                self._heap[0][-1].state is RequestState.CANCELLED:
+            heapq.heappop(self._heap)
+
+    def _age_hint(self, popped_prio: int, popped_rank: int, popped_seq: int):
+        """Hint aging: count pops where a hinted request bypasses an older
+        unhinted request of the same priority; at the bound, promote the
+        oldest such victim to the hinted rank (seq preserved) and reset."""
+        if not self.prefix_aware or self.hint_max_bypasses <= 0:
+            return
+        if popped_rank != 0:              # an unhinted request was served:
+            self._bypasses = 0            # the stream is not starving anyone
+            return
+        victims = [i for i, (p, rank, seq, r) in enumerate(self._heap)
+                   if p == popped_prio and rank == 1 and seq < popped_seq
+                   and r.state is not RequestState.CANCELLED]
+        if not victims:
+            self._bypasses = 0
+            return
+        self._bypasses += 1
+        if self._bypasses < self.hint_max_bypasses:
+            return
+        oldest = min(victims, key=lambda i: self._heap[i][2])
+        prio, _, seq, req = self._heap[oldest]
+        self._heap[oldest] = (prio, 0, seq, req)
+        heapq.heapify(self._heap)
+        self._bypasses = 0
+
     def next_request(self) -> Optional[Request]:
+        self._prune()
         if not self._heap:
             return None
-        *_, req = heapq.heappop(self._heap)
+        prio, rank, seq, req = heapq.heappop(self._heap)
+        self._age_hint(prio, rank, seq)
         return req
 
     def peek(self) -> Optional[Request]:
@@ -104,16 +192,23 @@ class Scheduler:
         peeks first so a request that cannot be covered by the free-page list
         defers in place (strict priority/FIFO order, no skip-ahead) instead of
         being popped and stranded."""
+        self._prune()
         if not self._heap:
             return None
         return self._heap[0][-1]
 
     @property
     def waiting(self) -> int:
-        return len(self._heap)
+        # O(n): lazily-cancelled entries deeper in the heap must not count.
+        # Queues here are small (hundreds at most) and the engine polls this
+        # once per tick, so the scan is cheaper than keeping a side index
+        # coherent with engine-side state flips.
+        return sum(1 for *_, r in self._heap
+                   if r.state is not RequestState.CANCELLED)
 
     def __len__(self) -> int:
-        return len(self._heap)
+        return self.waiting
 
     def __bool__(self) -> bool:
-        return bool(self._heap)
+        return any(r.state is not RequestState.CANCELLED
+                   for *_, r in self._heap)

@@ -35,6 +35,12 @@ BASE = {
                    "kernel_prefill_tokens_per_s": 7000.0}],
         "acceptance": {"speedup": 1.8, "passes_1_5x": True},
     },
+    "goodput": {
+        "cells": [{"cell": "burst", "policy_on": True}],
+        "acceptance": {"passes_steady_slo": True, "passes_slo_gain": True,
+                       "passes_roofline_bound": True,
+                       "goodput_tokens_per_s": 120.0},
+    },
 }
 
 
@@ -120,6 +126,22 @@ def test_relative_only_skips_absolute_rows():
     fails = check(copy.deepcopy(BASE), fresh, 0.2, False,
                   abs_threshold=0.5, relative_only=False)
     assert any("engine_tokens_per_s" in f for f in fails)
+
+
+def test_boolean_flag_rows_gate_true_to_false_flips():
+    """Goodput SLO flags gate as 0/1: a baseline-True row coming back False
+    is a regression at any threshold, and — being same-run relative facts —
+    the flag rows stay gated under CI's --relative-only mode."""
+    fresh = copy.deepcopy(BASE)
+    fresh["goodput"]["acceptance"]["passes_slo_gain"] = False
+    fails = check(copy.deepcopy(BASE), fresh, 0.2, False)
+    assert any("goodput.acceptance.passes_slo_gain" in f for f in fails)
+    fails = check(copy.deepcopy(BASE), fresh, 0.2, False, relative_only=True)
+    assert any("goodput.acceptance.passes_slo_gain" in f for f in fails)
+    # a False -> True flip is an improvement, never a failure
+    base = copy.deepcopy(BASE)
+    base["goodput"]["acceptance"]["passes_slo_gain"] = False
+    assert check(base, copy.deepcopy(BASE), 0.2, False) == []
 
 
 def test_every_gated_metric_resolvable_in_reference_shape():
