@@ -954,9 +954,11 @@ class ServeEngine:
         the pause surfaces as one long inter-token gap, which is precisely
         what preemption trades against higher-priority TTFT."""
         req = self.slot_req[slot]
-        if req.tokens:
+        fresh = req.tokens[req.folded:]   # tokens[:folded] are already in
+        if fresh:                         # the prompt from an earlier pause
             req.prompt = np.concatenate(
-                [req.prompt, np.asarray(req.tokens, np.int32)])
+                [req.prompt, np.asarray(fresh, np.int32)])
+            req.folded = len(req.tokens)
         req.state = RequestState.QUEUED
         req.slot = None
         self.slot_req[slot] = None

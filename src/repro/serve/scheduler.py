@@ -45,6 +45,10 @@ class Request:
     # across re-queues: a preempted request rejoins the FIFO order at its
     # original arrival position instead of the back of its priority level
     seq: Optional[int] = None
+    # count of ``tokens`` entries already folded into ``prompt`` by
+    # preemption; a later preemption folds only ``tokens[folded:]`` so a
+    # twice-preempted request never duplicates context
+    folded: int = 0
 
     @property
     def remaining(self) -> int:

@@ -252,6 +252,46 @@ def test_preemption_pauses_lowest_and_resumes_bit_exact(qwen_mp):
     assert list(victim.tokens) == list(ref_victim.tokens)
 
 
+def test_double_preemption_folds_tokens_once(qwen_mp):
+    """Preempting the SAME request twice must not re-fold already-folded
+    tokens: each pause appends only the tokens generated since the last
+    fold (``Request.folded`` watermark), so the re-prefilled context never
+    duplicates and the resumed greedy stream still matches an
+    uninterrupted run bit-for-bit."""
+    model, params = qwen_mp
+    kw = dict(batch_slots=2, s_max=48, page_size=8, num_pages=6,
+              prefix_cache=False)
+    eng = ServeEngine(model, params, policy=SchedPolicy(preemption=True),
+                      **kw)
+    prompt = np.arange(1, 9, dtype=np.int32)
+    victim = eng.submit(prompt, 8, priority=1)
+    for _ in range(4):                    # prefill + decode a little
+        eng.step()
+    assert victim.state is RequestState.RUNNING and victim.tokens
+    eng._preempt(victim.slot)             # first pause
+    n_first = len(victim.tokens)
+    assert len(victim.prompt) == len(prompt) + n_first
+
+    for _ in range(400):                  # resume, decode past the fold...
+        eng.step()
+        if (victim.state is RequestState.RUNNING
+                and len(victim.tokens) > n_first):
+            break
+        assert not victim.done, "victim finished before second preemption"
+    else:
+        raise AssertionError("victim never resumed past the first fold")
+    eng._preempt(victim.slot)             # ...second pause
+    # only the tokens generated SINCE the first fold were appended
+    assert len(victim.prompt) == len(prompt) + len(victim.tokens)
+    assert eng.metrics.preemptions == 2
+    _drain(eng, victim)
+
+    ref = ServeEngine(model, params, policy=None, **kw)
+    ref_victim = ref.submit(prompt, 8, priority=1)
+    _drain(ref, ref_victim)
+    assert list(victim.tokens) == list(ref_victim.tokens)
+
+
 def test_admission_control_sheds_and_defers(qwen_mp):
     """Below the low-water mark a queued head at/beyond the shed priority
     is FAILED (shed=True) or parked in place (shed=False); premium heads
