@@ -60,6 +60,13 @@ GATED_METRICS = [
     ("prefix_cell.cached_prefill_tokens_per_s", True, True, None),
     ("prefill_paged.acceptance.speedup", True, False, 0.5),
     ("prefill_paged_cell.kernel_prefill_tokens_per_s", True, True, None),
+    # kv_quant (PR 7): the bytes ratio is a deterministic function of
+    # config (lower is better, tight default threshold) and the greedy
+    # prefix-match mean is same-run/same-seed (higher is better); the int8
+    # decode rate row is absolute and machine-class sensitive
+    ("kv_quant.acceptance.resident_bytes_ratio", False, False, None),
+    ("kv_quant.acceptance.greedy_prefix_match_mean", True, False, None),
+    ("kv_quant_cell.int8_decode_tokens_per_s", True, True, None),
     # goodput SLO flags (PR 6): BOOLEAN rows, compared as 0/1 — a
     # True -> False flip under higher_is_better regresses at any threshold.
     # They are machine-independent (relative-only safe): the SLOs are
@@ -93,6 +100,10 @@ def _acceptance_cells(bench: dict) -> dict:
     for cell in bench.get("prefill_paged", {}).get("cells", []):
         if cell.get("prompt_len") == 128:
             out["prefill_paged_cell"] = cell
+    for cell in bench.get("kv_quant", {}).get("cells", []):
+        # prompt 32 is the acceptance cell (quick runs record only it)
+        if cell.get("prompt_len") == 32:
+            out["kv_quant_cell"] = cell
     return out
 
 

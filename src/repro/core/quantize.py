@@ -42,11 +42,39 @@ class QuantizedTensor:
         return (self.q.astype(jnp.float32) * self.scale).astype(dtype)
 
 
+def page_scale(amax):
+    """Symmetric int8 scale for a quantization block with max-abs ``amax``.
+
+    An all-zero block (a freshly-released KV page, a fully-masked row group)
+    has amax == 0; dividing by amax/127 would produce inf/NaN scales that
+    poison every later dequant. Such blocks get scale 1.0 — their quantized
+    payload is all zeros, so dequant returns exact zeros either way."""
+    amax = jnp.asarray(amax, jnp.float32)
+    return jnp.where(amax > 0, amax / 127.0, 1.0)
+
+
+def quantize_page(x, valid=None) -> Tuple[jax.Array, jax.Array]:
+    """Quantize one block (e.g. a KV page) to int8 with ONE symmetric scale.
+
+    ``valid`` optionally masks rows along the leading axis (a partial page:
+    only rows below the write frontier are content); masked rows are
+    excluded from the amax and stored as 0. Returns ``(q int8, scale f32
+    scalar)``; dequant is ``q.astype(f32) * scale``."""
+    x = jnp.asarray(x, jnp.float32)
+    if valid is not None:
+        vm = jnp.reshape(jnp.asarray(valid, bool),
+                         (-1,) + (1,) * (x.ndim - 1))
+        x = jnp.where(vm, x, 0.0)
+    scale = page_scale(jnp.max(jnp.abs(x)))
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
 def quantize_per_channel(w, axis: int = -1) -> QuantizedTensor:
     """Symmetric int8 per-output-channel quantization along `axis`."""
     amax = jnp.max(jnp.abs(w), axis=tuple(i for i in range(w.ndim) if i != axis % w.ndim),
                    keepdims=True)
-    scale = jnp.maximum(amax, 1e-8) / 127.0
+    scale = page_scale(amax)
     q = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
     return QuantizedTensor(q=q, scale=scale.astype(jnp.float32))
 

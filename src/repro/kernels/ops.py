@@ -132,21 +132,23 @@ def flash_prefill(q, k, v, *, causal: bool = True, window: int = 0,
 _PAGED_MAX_INTERPRET_GRID = 4096
 
 
-def _paged_dispatch(q, pool_k, pool_v, block_tables, start, window: int):
+def _paged_dispatch(q, pool_k, pool_v, block_tables, start, window: int,
+                    k_scale=None, v_scale=None):
     B, Sq, H, hd = q.shape
     ps = pool_k.shape[1]
     mps = block_tables.shape[1]
+    sc = dict(k_scale=k_scale, v_scale=v_scale)
     if _interpret():
         if B * H * mps > _PAGED_MAX_INTERPRET_GRID:
             return _ref.paged_attention(q, pool_k, pool_v, block_tables,
-                                        start, window=window)
+                                        start, window=window, **sc)
         return _pa.paged_attention(q, pool_k, pool_v, block_tables, start,
-                                   window=window, interpret=True)
+                                   window=window, interpret=True, **sc)
     if hd % 128 or ps % 8:
         return _ref.paged_attention(q, pool_k, pool_v, block_tables, start,
-                                    window=window)
+                                    window=window, **sc)
     return _pa.paged_attention(q, pool_k, pool_v, block_tables, start,
-                               window=window, interpret=False)
+                               window=window, interpret=False, **sc)
 
 
 @functools.partial(jax.jit, static_argnames=("window",))
@@ -179,6 +181,24 @@ def paged_prefill(q, pool_k, pool_v, block_tables, start, *,
     the chunk's causal frontier (or unallocated) are skipped, so mask work
     scales with the slot's LIVE pages instead of O(C x s_max)."""
     return _paged_dispatch(q, pool_k, pool_v, block_tables, start, window)
+
+
+@functools.partial(jax.jit, static_argnames=("window",))
+def paged_decode_q8(q, pool_k, pool_v, k_scale, v_scale, block_tables,
+                    cache_pos, *, window: int = 0):
+    """paged_decode over INT8 pools: pool_k/pool_v are int8, k_scale/v_scale
+    are (P,) f32 per-page symmetric scales. Dequant happens inside the
+    kernel's gather (scales prefetched to SMEM) — HBM traffic stays int8."""
+    return _paged_dispatch(q, pool_k, pool_v, block_tables, cache_pos,
+                           window, k_scale=k_scale, v_scale=v_scale)
+
+
+@functools.partial(jax.jit, static_argnames=("window",))
+def paged_prefill_q8(q, pool_k, pool_v, k_scale, v_scale, block_tables,
+                     start, *, window: int = 0):
+    """paged_prefill over INT8 pools (see paged_decode_q8)."""
+    return _paged_dispatch(q, pool_k, pool_v, block_tables, start,
+                           window, k_scale=k_scale, v_scale=v_scale)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk",))

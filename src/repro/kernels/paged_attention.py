@@ -109,32 +109,110 @@ def _kernel(bt_ref, start_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0, :, 0, :] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
 
 
+def _kernel_q8(bt_ref, start_ref, ks_ref, vs_ref, q_ref, k_ref, v_ref, o_ref,
+               m_ref, l_ref, acc_ref, *, scale: float, window: int,
+               block_q: int, page_size: int):
+    """Int8-page variant: identical online softmax, but the gathered K/V
+    block is DEQUANTIZED in-register right after the DMA — the page's
+    symmetric scale rides in as a scalar-prefetch operand, so HBM only ever
+    moves int8 payload (the ~4x KV-bandwidth win) and no fp32 page is
+    materialized outside VMEM."""
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    nj = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    page = bt_ref[b, j]
+    start = start_ref[b]
+    k_start = j * page_size
+    pg = jnp.maximum(page, 0)
+
+    def visit():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)              # (bq, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32) * ks_ref[pg]  # (ps, hd)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        q_pos = start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, page_size), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, page_size), 1)
+        ok = k_pos <= q_pos
+        if window > 0:
+            ok &= k_pos > q_pos - window
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.where(ok, jnp.exp(s - m_new[:, None]), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        v = v_ref[0, :, 0, :].astype(jnp.float32) * vs_ref[pg]
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    relevant = (page >= 0) & (k_start <= start + block_q - 1)
+    if window > 0:
+        relevant &= (k_start + page_size - 1) > (start - window)
+    pl.when(relevant)(visit)
+
+    @pl.when(j == nj - 1)
+    def _():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
 def paged_attention(q, pool_k, pool_v, block_tables, start, *,
-                    window: int = 0, interpret: bool = False):
+                    window: int = 0, interpret: bool = False,
+                    k_scale=None, v_scale=None):
     """q: (B, Sq, H, hd); pool_k/pool_v: (P, page_size, KV, hd);
     block_tables: (B, mps) int32 page ids (-1 = unallocated);
     start: (B,) int32 — the position of each slot's FIRST query row (query
     row i is at ``start[b] + i``; logical key row r lives in page ``r // ps``
-    at offset ``r % ps``). Returns (B, Sq, H, hd) in q.dtype."""
+    at offset ``r % ps``). Returns (B, Sq, H, hd) in q.dtype.
+
+    k_scale/v_scale: optional (P,) f32 per-page symmetric scales for int8
+    pools; when given, the q8 kernel dequantizes each gathered page inside
+    the kernel body (scales prefetched to SMEM alongside the block table)."""
     B, Sq, H, hd = q.shape
     P, ps, KV, _ = pool_k.shape
     assert H % KV == 0
     G = H // KV
     mps = block_tables.shape[1]
     scale = 1.0 / math.sqrt(hd)
-    kernel = functools.partial(_kernel, scale=scale, window=window,
+    quantized = k_scale is not None
+    kern = _kernel_q8 if quantized else _kernel
+    kernel = functools.partial(kern, scale=scale, window=window,
                                block_q=Sq, page_size=ps)
     # the kv index maps read the PREFETCHED block table: the page a grid
     # step streams is data-dependent (clamped at 0 for unallocated slots —
     # the body skips those steps entirely, the clamp only keeps the
-    # prefetch in bounds)
-    kv_spec = pl.BlockSpec(
-        (1, ps, 1, hd),
-        lambda b, h, j, bt, st: (jnp.maximum(bt[b, j], 0), 0, h // G, 0))
-    q_spec = pl.BlockSpec((1, Sq, 1, hd),
-                          lambda b, h, j, bt, st: (b, 0, h, 0))
+    # prefetch in bounds). Scalar-prefetch operands land FIRST in the
+    # kernel signature and as trailing index-map params; the q8 path adds
+    # the two scale tables after (bt, start).
+    if quantized:
+        kv_map = lambda b, h, j, bt, st, ks, vs: (
+            jnp.maximum(bt[b, j], 0), 0, h // G, 0)
+        q_map = lambda b, h, j, bt, st, ks, vs: (b, 0, h, 0)
+        num_prefetch = 4
+        prefetch = (jnp.asarray(block_tables, jnp.int32),
+                    jnp.asarray(start, jnp.int32),
+                    jnp.asarray(k_scale, jnp.float32),
+                    jnp.asarray(v_scale, jnp.float32))
+    else:
+        kv_map = lambda b, h, j, bt, st: (jnp.maximum(bt[b, j], 0), 0,
+                                          h // G, 0)
+        q_map = lambda b, h, j, bt, st: (b, 0, h, 0)
+        num_prefetch = 2
+        prefetch = (jnp.asarray(block_tables, jnp.int32),
+                    jnp.asarray(start, jnp.int32))
+    kv_spec = pl.BlockSpec((1, ps, 1, hd), kv_map)
+    q_spec = pl.BlockSpec((1, Sq, 1, hd), q_map)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=num_prefetch,
         grid=(B, H, mps),
         in_specs=[q_spec, kv_spec, kv_spec],
         out_specs=q_spec,
@@ -147,5 +225,4 @@ def paged_attention(q, pool_k, pool_v, block_tables, start, *,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Sq, H, hd), q.dtype),
         interpret=interpret,
-    )(jnp.asarray(block_tables, jnp.int32), jnp.asarray(start, jnp.int32),
-      q, pool_k, pool_v)
+    )(*prefetch, q, pool_k, pool_v)

@@ -36,7 +36,8 @@ def quant_matmul(a, w_q, scales):
     return jnp.dot(a.astype(jnp.float32), w).astype(a.dtype)
 
 
-def paged_attention(q, pool_k, pool_v, block_tables, start, *, window=0):
+def paged_attention(q, pool_k, pool_v, block_tables, start, *, window=0,
+                    k_scale=None, v_scale=None):
     """Oracle for the paged-attention kernel: gather each slot's logical
     view through its block table and run a masked partial softmax.
 
@@ -46,7 +47,11 @@ def paged_attention(q, pool_k, pool_v, block_tables, start, *, window=0):
     lives in page r // ps at offset r % ps). Masked probabilities are
     ZEROED (not sentinel-softmaxed): a query row with no valid key anywhere
     — a freed slot with an all--1 block table — returns exactly 0, matching
-    the kernel's l == 0 guard."""
+    the kernel's l == 0 guard.
+
+    k_scale/v_scale: optional (P,) f32 per-page symmetric dequant scales for
+    int8 pools — the gathered view is dequantized page-wise before the
+    softmax, mirroring the kernel's in-gather dequant."""
     B, Sq, H, hd = q.shape
     P, ps, KV, _ = pool_k.shape
     mps = block_tables.shape[1]
@@ -61,6 +66,12 @@ def paged_attention(q, pool_k, pool_v, block_tables, start, *, window=0):
     flat_v = pool_v.reshape(P * ps, KV, hd)
     view_k = flat_k[phys]                       # (B, n_rows, KV, hd)
     view_v = flat_v[phys]
+    if k_scale is not None:
+        pg = jnp.where(ok, page, 0)
+        view_k = (view_k.astype(jnp.float32)
+                  * k_scale[pg][..., None, None]).astype(q.dtype)
+        view_v = (view_v.astype(jnp.float32)
+                  * v_scale[pg][..., None, None]).astype(q.dtype)
     q_pos = start[:, None] + jnp.arange(Sq)[None, :]        # (B, Sq)
     valid = ok[:, None, :] & (j[None, None, :] <= q_pos[:, :, None])
     if window > 0:

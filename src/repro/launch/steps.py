@@ -378,10 +378,13 @@ def make_decode_step(model: Model, *, compute_dtype=jnp.bfloat16,
     path for the families that page through ``attention_decode_paged``
     (dense/MoE/VLM/encdec); None keeps each family's default (the
     masked-einsum reference) — hybrid's ring path has its own gather."""
-    from repro.configs.base import Family
+    # function-level import: launch.steps is imported by serve.engine, and
+    # serve/__init__ imports engine — a module-level kvcache import here
+    # would cycle through the serve package at import time
+    from repro.serve.kvcache import PAGED_KERNEL_FAMILIES
     extra = {}
-    if paged_attn_impl is not None and model.cfg.family in (
-            Family.DENSE, Family.MOE, Family.VLM, Family.ENCDEC):
+    if (paged_attn_impl is not None
+            and model.cfg.family in PAGED_KERNEL_FAMILIES):
         extra["paged_attn_impl"] = paged_attn_impl
 
     def decode(params, cache, batch):

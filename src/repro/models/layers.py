@@ -623,9 +623,106 @@ def paged_write_rows(pool, rows, row_idx, valid):
     return flat.reshape(pool.shape)
 
 
+# ------------------------------------------- int8 page writes (q8 backend)
+def _requant_page(blk, content):
+    """One symmetric int8 scale per page from its LIVE rows only.
+    blk: (B, ps, KV, hd) f32 dequantized page content; content: (B, ps) bool
+    — rows beyond the sequence frontier may hold stale payload from a
+    recycled page, so they are excluded from the amax AND zeroed in the
+    output. Returns (q (B,ps,KV,hd) int8, scale (B,) f32)."""
+    from repro.core.quantize import page_scale
+    vm = content[..., None, None]
+    masked = jnp.where(vm, blk, 0.0)
+    scale = page_scale(jnp.max(jnp.abs(masked), axis=(1, 2, 3)))
+    q = jnp.clip(jnp.round(masked / scale[:, None, None, None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def paged_append_row_q8(pool, scale, rows, block_tables, safe_pos, valid):
+    """Decode-append one K/V row per slot into an INT8 page pool.
+
+    The page is a quantization block: appending a row changes the page's
+    max-abs, so the slot's CURRENT page is dequantized (one page per slot —
+    never the full pool), the new row overlaid at ``safe_pos % ps``, and the
+    page re-quantized with a fresh symmetric scale. Rows past the append
+    offset are treated as stale (recycled-page payload) and zeroed. Invalid
+    writes (freed slots, unallocated pages) drop both the page and its
+    scale update. pool: (P, ps, KV, hd) int8; scale: (P,) f32; rows:
+    (B, KV, hd); safe_pos: (B,) clipped logical positions; valid: (B,)."""
+    P, ps = pool.shape[:2]
+    mps = block_tables.shape[1]
+    B = rows.shape[0]
+    page = jnp.take_along_axis(
+        block_tables, jnp.clip(safe_pos // ps, 0, mps - 1)[:, None],
+        axis=1)[:, 0]
+    pg = jnp.clip(page, 0, P - 1)
+    blk = pool[pg].astype(jnp.float32) * scale[pg][:, None, None, None]
+    off = safe_pos % ps
+    blk = blk.at[jnp.arange(B), off].set(rows.astype(jnp.float32))
+    content = jnp.arange(ps)[None, :] <= off[:, None]
+    q, new_scale = _requant_page(blk, content)
+    tgt = jnp.where(valid & (page >= 0), pg, P)      # OOB -> dropped
+    pool = pool.at[tgt].set(q, mode="drop")
+    scale = scale.at[tgt].set(new_scale, mode="drop")
+    return pool, scale
+
+
+def paged_splice_chunk_q8(pool, scale, rows, block_tables, positions,
+                          write_floor):
+    """Chunk-splice C rows per slot into an INT8 page pool (the incremental
+    prefill splice, quantized). Visits each logical page the chunk overlaps
+    (a static loop of at most C//ps + 2 pages), overlays the chunk's rows on
+    the page's dequantized live content, and re-quantizes the whole page —
+    so a COW-rematerialised partial page gets its fresh scale here, exactly
+    once. Pages the chunk does NOT write (aliased prefix pages below
+    ``write_floor``, including a full-hit's recomputed last row) are left
+    untouched: their payload AND scale stay shared.
+
+    pool: (P, ps, KV, hd) int8; scale: (P,) f32; rows: (B, C, KV, hd);
+    positions: (B, C) absolute query positions (contiguous, shared start);
+    write_floor: scalar first writable logical row."""
+    P, ps = pool.shape[:2]
+    B, C = positions.shape
+    mps = block_tables.shape[1]
+    n_rows = mps * ps
+    start = positions[:, :1]                          # (B, 1)
+    b_idx = jnp.arange(B)[:, None]
+    for t in range((C - 1) // ps + 2):
+        lpg = positions[:, 0] // ps + t               # (B,) logical page
+        page = jnp.take_along_axis(
+            block_tables, jnp.clip(lpg, 0, mps - 1)[:, None], axis=1)[:, 0]
+        in_range = (lpg < mps) & (page >= 0)
+        pg = jnp.clip(page, 0, P - 1)
+        blk = pool[pg].astype(jnp.float32) * scale[pg][:, None, None, None]
+        row_pos = lpg[:, None] * ps + jnp.arange(ps)[None, :]   # (B, ps)
+        ci = row_pos - start                          # chunk-relative index
+        from_chunk = ((ci >= 0) & (ci < C) & (row_pos >= write_floor)
+                      & (row_pos < n_rows))
+        chunk_rows = rows[b_idx, jnp.clip(ci, 0, C - 1)]        # (B,ps,KV,hd)
+        blk = jnp.where(from_chunk[..., None, None],
+                        chunk_rows.astype(jnp.float32), blk)
+        content = (row_pos <= start + C - 1) & (row_pos < n_rows)
+        q, new_scale = _requant_page(blk, content)
+        writable = from_chunk.any(axis=1) & in_range
+        tgt = jnp.where(writable, pg, P)
+        pool = pool.at[tgt].set(q, mode="drop")
+        scale = scale.at[tgt].set(new_scale, mode="drop")
+    return pool, scale
+
+
+def dequant_paged_view(view, phys, scale, page_size: int, dtype):
+    """Dequantize a block-table-gathered int8 view (B, n_rows, KV, hd) using
+    the per-page scales of the pages each row was gathered from."""
+    P = scale.shape[0]
+    pg = jnp.clip(phys // page_size, 0, P - 1)
+    return (view.astype(jnp.float32) * scale[pg][..., None, None]).astype(dtype)
+
+
 def attention_decode_paged(params, x, dims: AttnDims, pool_k, pool_v,
                            block_tables, cache_pos, positions,
-                           impl: str = "einsum"):
+                           impl: str = "einsum", *, k_scale=None,
+                           v_scale=None):
     """Single-token decode against a PAGED KV cache (vLLM-style block tables).
 
     x: (B,1,D); pool_k/pool_v: (P, page_size, KV, hd) — ONE layer's slice of
@@ -653,7 +750,13 @@ def attention_decode_paged(params, x, dims: AttnDims, pool_k, pool_v,
     the dense ``attention_decode`` vector path bit-for-bit (the gathered
     view IS the slot's dense cache row and the masks coincide); the kernel
     path matches it to greedy-token exactness (its online softmax uses the
-    same dot-then-scale f32 operation order)."""
+    same dot-then-scale f32 operation order).
+
+    ``k_scale``/``v_scale``: optional (P,) f32 per-page symmetric scales —
+    the int8-backend path. The new row's write re-quantizes the slot's
+    current page in place (``paged_append_row_q8``), reads dequantize
+    per-page (inside the Pallas kernel's gather on the kernel path), and
+    the return grows to (out, pool_k, pool_v, k_scale, v_scale)."""
     q, k, v = _qkv(params, x, dims, positions)
     P, ps, KV, hd = pool_k.shape
     B = q.shape[0]
@@ -661,22 +764,33 @@ def attention_decode_paged(params, x, dims: AttnDims, pool_k, pool_v,
     n_rows = mps * ps
     H = dims.num_heads
     G = H // KV
-    b_idx = jnp.arange(B)
+    quantized = k_scale is not None
 
     # ---- write the new K/V row via the block table
     safe_pos = jnp.clip(cache_pos, 0, n_rows - 1)
     w_row, page_ok = paged_write_target(block_tables, safe_pos, ps)
     w_ok = (cache_pos >= 0) & (cache_pos < n_rows) & page_ok
-    pool_k = paged_write_rows(pool_k, k[:, 0], w_row, w_ok)
-    pool_v = paged_write_rows(pool_v, v[:, 0], w_row, w_ok)
+    if quantized:
+        pool_k, k_scale = paged_append_row_q8(pool_k, k_scale, k[:, 0],
+                                              block_tables, safe_pos, w_ok)
+        pool_v, v_scale = paged_append_row_q8(pool_v, v_scale, v[:, 0],
+                                              block_tables, safe_pos, w_ok)
+    else:
+        pool_k = paged_write_rows(pool_k, k[:, 0], w_row, w_ok)
+        pool_v = paged_write_rows(pool_v, v[:, 0], w_row, w_ok)
 
     if impl == "kernel":
         from repro.kernels import ops as kops
         # freed slots (cache_pos >= n_rows) carry an all--1 table: every
         # page is skipped and the kernel returns 0 rows for them, so no
         # clamping of start is needed for the skip logic to stay sound
-        out = kops.paged_decode(q, pool_k, pool_v, block_tables, cache_pos,
-                                window=dims.window)
+        if quantized:
+            out = kops.paged_decode_q8(q, pool_k, pool_v, k_scale, v_scale,
+                                       block_tables, cache_pos,
+                                       window=dims.window)
+        else:
+            out = kops.paged_decode(q, pool_k, pool_v, block_tables,
+                                    cache_pos, window=dims.window)
         out = out.reshape(B, 1, H * hd)
     else:
         # ---- gather each slot's logical view and attend
@@ -686,17 +800,24 @@ def attention_decode_paged(params, x, dims: AttnDims, pool_k, pool_v,
         flat_v = pool_v.reshape(P * ps, KV, hd)
         view_k = flat_k[phys]                        # (B, n_rows, KV, hd)
         view_v = flat_v[phys]
+        if quantized:
+            view_k = dequant_paged_view(view_k, phys, k_scale, ps, q.dtype)
+            view_v = dequant_paged_view(view_v, phys, v_scale, ps, q.dtype)
         k_positions = jnp.where(ok, jnp.arange(n_rows)[None, :], INACTIVE_POS)
         m, l, acc = _decode_sdpa_local(qg, view_k, view_v, cache_pos[:, None],
                                        k_positions, dims.window, hd)
         out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
         out = out.transpose(0, 3, 1, 2, 4).reshape(B, 1, H * hd)
-    return out @ params["wo"].astype(x.dtype), pool_k, pool_v
+    out = out @ params["wo"].astype(x.dtype)
+    if quantized:
+        return out, pool_k, pool_v, k_scale, v_scale
+    return out, pool_k, pool_v
 
 
 def attention_prefill_chunk_paged(params, x, dims: AttnDims, pool_k, pool_v,
                                   block_tables, positions, write_floor,
-                                  impl: str = "kernel"):
+                                  impl: str = "kernel", *, k_scale=None,
+                                  v_scale=None):
     """Multi-token prefill-chunk attention DIRECTLY against the paged pool —
     the incremental-splice counterpart of ``attention_prefill_chunk``.
 
@@ -717,31 +838,53 @@ def attention_prefill_chunk_paged(params, x, dims: AttnDims, pool_k, pool_v,
     ``impl='kernel'`` uses the block-skipping Pallas kernel
     (``ops.paged_prefill``); ``impl='einsum'`` is the masked-gather
     reference over the full block-table span. Returns
-    (out (B, C, H*hd) @ wo, new_pool_k, new_pool_v)."""
+    (out (B, C, H*hd) @ wo, new_pool_k, new_pool_v).
+
+    ``k_scale``/``v_scale``: optional (P,) f32 per-page scales — the int8
+    backend. The splice re-quantizes each page the chunk writes
+    (``paged_splice_chunk_q8``; untouched aliased prefix pages keep their
+    shared scale), reads dequantize per-page, and the return grows to
+    (out, pool_k, pool_v, k_scale, v_scale)."""
     q, k, v = _qkv(params, x, dims, positions)
     B, C, KV, hd = k.shape
     P, ps = pool_k.shape[:2]
     mps = block_tables.shape[1]
     n_rows = mps * ps
     H = dims.num_heads
+    quantized = k_scale is not None
 
     # ---- incremental splice: scatter the chunk's K/V rows via block table
-    page = jnp.take_along_axis(
-        block_tables, jnp.clip(positions // ps, 0, mps - 1), axis=1)
-    w_ok = ((page >= 0) & (positions >= write_floor)
-            & (positions >= 0) & (positions < n_rows))
-    w_rows = jnp.where(w_ok, page * ps + positions % ps, P * ps)  # OOB drop
-    flat_k = pool_k.reshape(P * ps, KV, hd)
-    flat_v = pool_v.reshape(P * ps, KV, hd)
-    flat_k = flat_k.at[w_rows].set(k.astype(flat_k.dtype), mode="drop")
-    flat_v = flat_v.at[w_rows].set(v.astype(flat_v.dtype), mode="drop")
-    pool_k = flat_k.reshape(pool_k.shape)
-    pool_v = flat_v.reshape(pool_v.shape)
+    if quantized:
+        pool_k, k_scale = paged_splice_chunk_q8(pool_k, k_scale, k,
+                                                block_tables, positions,
+                                                write_floor)
+        pool_v, v_scale = paged_splice_chunk_q8(pool_v, v_scale, v,
+                                                block_tables, positions,
+                                                write_floor)
+        flat_k = pool_k.reshape(P * ps, KV, hd)
+        flat_v = pool_v.reshape(P * ps, KV, hd)
+    else:
+        page = jnp.take_along_axis(
+            block_tables, jnp.clip(positions // ps, 0, mps - 1), axis=1)
+        w_ok = ((page >= 0) & (positions >= write_floor)
+                & (positions >= 0) & (positions < n_rows))
+        w_rows = jnp.where(w_ok, page * ps + positions % ps, P * ps)  # drop
+        flat_k = pool_k.reshape(P * ps, KV, hd)
+        flat_v = pool_v.reshape(P * ps, KV, hd)
+        flat_k = flat_k.at[w_rows].set(k.astype(flat_k.dtype), mode="drop")
+        flat_v = flat_v.at[w_rows].set(v.astype(flat_v.dtype), mode="drop")
+        pool_k = flat_k.reshape(pool_k.shape)
+        pool_v = flat_v.reshape(pool_v.shape)
 
     if impl == "kernel":
         from repro.kernels import ops as kops
-        out = kops.paged_prefill(q, pool_k, pool_v, block_tables,
-                                 positions[:, 0], window=dims.window)
+        if quantized:
+            out = kops.paged_prefill_q8(q, pool_k, pool_v, k_scale, v_scale,
+                                        block_tables, positions[:, 0],
+                                        window=dims.window)
+        else:
+            out = kops.paged_prefill(q, pool_k, pool_v, block_tables,
+                                     positions[:, 0], window=dims.window)
         out = out.reshape(B, C, H * hd)
     else:
         G = H // KV
@@ -749,6 +892,9 @@ def attention_prefill_chunk_paged(params, x, dims: AttnDims, pool_k, pool_v,
         phys, ok = paged_row_indices(block_tables, ps, n_rows)
         view_k = flat_k[phys]                        # (B, n_rows, KV, hd)
         view_v = flat_v[phys]
+        if quantized:
+            view_k = dequant_paged_view(view_k, phys, k_scale, ps, q.dtype)
+            view_v = dequant_paged_view(view_v, phys, v_scale, ps, q.dtype)
         scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, view_k.astype(q.dtype)
                             ).astype(jnp.float32) / math.sqrt(hd)
         k_pos = jnp.where(ok, jnp.arange(n_rows)[None, :], INACTIVE_POS)
@@ -760,7 +906,10 @@ def attention_prefill_chunk_paged(params, x, dims: AttnDims, pool_k, pool_v,
         probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
         out = jnp.einsum("bkgqs,bskh->bqkgh", probs, view_v.astype(q.dtype)
                          ).reshape(B, C, H * hd)
-    return out @ params["wo"].astype(x.dtype), pool_k, pool_v
+    out = out @ params["wo"].astype(x.dtype)
+    if quantized:
+        return out, pool_k, pool_v, k_scale, v_scale
+    return out, pool_k, pool_v
 
 
 # ---------------------------------------------------------------- MLP

@@ -306,11 +306,14 @@ def extract_cache_slot(cache, slot: int):
     """Batch-1 view of one slot's cache entries (testing/debug helper). For a
     paged cache, pool leaves are gathered through the slot's block table into
     the dense per-slot layout (rows of unallocated pages read as zeros / -1,
-    matching a never-written dense cache)."""
+    matching a never-written dense cache). Int8 pools (an ``<key>_scale``
+    leaf rides alongside) are DEQUANTIZED page-wise, so the view is a
+    directly comparable f32 dense cache; the scale leaves themselves are
+    per-page pool metadata with no dense counterpart and are skipped."""
     bt = cache.get("block_tables")
     out = {}
     for key, leaf in cache.items():
-        if key in ("block_tables", "ring_iota"):
+        if key in ("block_tables", "ring_iota") or key.endswith("_scale"):
             continue
         if key == "pos":
             out[key] = leaf if jnp.ndim(leaf) == 0 else leaf[slot]
@@ -323,6 +326,10 @@ def extract_cache_slot(cache, slot: int):
             phys, ok = paged_row_indices(bt[slot:slot + 1], ps, n_rows)
             flat = leaf.reshape((Lr, P * ps) + leaf.shape[3:])
             view = flat[:, phys[0]]
+            if key + "_scale" in cache:
+                pg = jnp.clip(phys[0] // ps, 0, P - 1)
+                view = (view.astype(jnp.float32)
+                        * cache[key + "_scale"][:, pg][..., None, None])
             fill = -1 if key == "slot_pos" else 0
             mask = ok[0].reshape((1, -1) + (1,) * (view.ndim - 2))
             view = jnp.where(mask, view, fill)

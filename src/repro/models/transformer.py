@@ -152,15 +152,26 @@ def _super_apply_unrolled(cfg: ArchConfig, sp, x, positions, img, attn_impl):
 
 
 def _super_decode_unrolled(cfg: ArchConfig, sp, x, ck, cv, img, pos, positions,
-                           block_tables=None, paged_impl: str = "einsum"):
-    cks, cvs = [], []
+                           block_tables=None, paged_impl: str = "einsum",
+                           kscale=None, vscale=None):
+    quantized = kscale is not None
+    cks, cvs, kss, vss = [], [], [], []
     for i in range(cfg.cross_attn_every):
         lp = jax.tree.map(lambda t: t[i], sp["blocks"])
-        x, c1, c2 = _decode_layer(cfg, lp, x, ck[i], cv[i], pos, positions,
-                                  block_tables, paged_impl)
+        if quantized:
+            x, c1, c2, s1, s2 = _decode_layer(cfg, lp, x, ck[i], cv[i], pos,
+                                              positions, block_tables,
+                                              paged_impl, kscale[i], vscale[i])
+            kss.append(s1)
+            vss.append(s2)
+        else:
+            x, c1, c2 = _decode_layer(cfg, lp, x, ck[i], cv[i], pos, positions,
+                                      block_tables, paged_impl)
         cks.append(c1)
         cvs.append(c2)
     x = _cross_apply(cfg, sp["cross"], x, img, "einsum")
+    if quantized:
+        return x, jnp.stack(cks), jnp.stack(cvs), jnp.stack(kss), jnp.stack(vss)
     return x, jnp.stack(cks), jnp.stack(cvs)
 
 
@@ -258,18 +269,27 @@ def cache_logical(cfg: ArchConfig):
 
 
 def _decode_layer(cfg: ArchConfig, lp, x, ck, cv, pos, positions,
-                  block_tables=None, paged_impl: str = "einsum"):
+                  block_tables=None, paged_impl: str = "einsum",
+                  kscale=None, vscale=None):
     """One decode layer: returns (x, new_ck, new_cv). Exposed for roofline
     probes (launch/probes.py) as well as the decode scan body. When
     ``block_tables`` is given, ck/cv are one layer's (P, ps, KV, hd) page-pool
     slice and attention goes through the paged path (models/layers.py);
     ``paged_impl`` selects the Pallas block-gather kernel or the
-    masked-einsum reference read."""
+    masked-einsum reference read. ``kscale``/``vscale`` are this layer's
+    (P,) per-page dequant scales for int8 pools; when given the return
+    grows to (x, ck, cv, kscale, vscale)."""
+    quantized = kscale is not None
     h = L.apply_norm(x, lp["ln1"], cfg.norm)
     if block_tables is not None:
-        out, ck, cv = L.attention_decode_paged(lp["attn"], h, _attn_dims(cfg),
-                                               ck, cv, block_tables, pos,
-                                               positions, impl=paged_impl)
+        if quantized:
+            out, ck, cv, kscale, vscale = L.attention_decode_paged(
+                lp["attn"], h, _attn_dims(cfg), ck, cv, block_tables, pos,
+                positions, impl=paged_impl, k_scale=kscale, v_scale=vscale)
+        else:
+            out, ck, cv = L.attention_decode_paged(
+                lp["attn"], h, _attn_dims(cfg), ck, cv, block_tables, pos,
+                positions, impl=paged_impl)
     else:
         out, ck, cv = L.attention_decode(lp["attn"], h, _attn_dims(cfg), ck,
                                          cv, pos, positions)
@@ -279,6 +299,8 @@ def _decode_layer(cfg: ArchConfig, lp, x, ck, cv, pos, positions,
         y, _ = L.moe(lp["moe"], h, _moe_dims(cfg))
     else:
         y = L.mlp(lp["mlp"], h)
+    if quantized:
+        return x + y, ck, cv, kscale, vscale
     return x + y, ck, cv
 
 
@@ -388,35 +410,56 @@ def prefill_chunk(params, cfg: ArchConfig, tokens, cache, *, image_embeds=None,
 
 # ------------------------------------------------- paged parallel prefill
 def _prefill_chunk_layer_paged(cfg: ArchConfig, lp, x, pk, pv, bt, positions,
-                               write_floor, impl):
+                               write_floor, impl, kscale=None, vscale=None):
     """One layer over a prompt chunk attending the PAGED pool directly:
     the chunk's K/V rows scatter into the slot's own pages (the incremental
     splice) and attention reads everything — prior chunks, aliased prefix
     pages, the current chunk — through the block table. Same residual
-    structure as ``_prefill_chunk_layer``/``_decode_layer``."""
+    structure as ``_prefill_chunk_layer``/``_decode_layer``. Int8 pools
+    carry per-layer (P,) scales and the return grows accordingly."""
+    quantized = kscale is not None
     h = L.apply_norm(x, lp["ln1"], cfg.norm)
-    out, pk, pv = L.attention_prefill_chunk_paged(
-        lp["attn"], h, _attn_dims(cfg), pk, pv, bt, positions, write_floor,
-        impl=impl)
+    if quantized:
+        out, pk, pv, kscale, vscale = L.attention_prefill_chunk_paged(
+            lp["attn"], h, _attn_dims(cfg), pk, pv, bt, positions,
+            write_floor, impl=impl, k_scale=kscale, v_scale=vscale)
+    else:
+        out, pk, pv = L.attention_prefill_chunk_paged(
+            lp["attn"], h, _attn_dims(cfg), pk, pv, bt, positions,
+            write_floor, impl=impl)
     x = x + out
     h = L.apply_norm(x, lp["ln2"], cfg.norm)
     if cfg.moe:
         y, _ = L.moe(lp["moe"], h, _moe_dims(cfg))
     else:
         y = L.mlp(lp["mlp"], h)
+    if quantized:
+        return x + y, pk, pv, kscale, vscale
     return x + y, pk, pv
 
 
 def _super_prefill_chunk_paged_unrolled(cfg: ArchConfig, sp, x, pk, pv, bt,
-                                        img, positions, write_floor, impl):
-    pks, pvs = [], []
+                                        img, positions, write_floor, impl,
+                                        kscale=None, vscale=None):
+    quantized = kscale is not None
+    pks, pvs, kss, vss = [], [], [], []
     for i in range(cfg.cross_attn_every):
         lp = jax.tree.map(lambda t: t[i], sp["blocks"])
-        x, p1, p2 = _prefill_chunk_layer_paged(cfg, lp, x, pk[i], pv[i], bt,
-                                               positions, write_floor, impl)
+        if quantized:
+            x, p1, p2, s1, s2 = _prefill_chunk_layer_paged(
+                cfg, lp, x, pk[i], pv[i], bt, positions, write_floor, impl,
+                kscale[i], vscale[i])
+            kss.append(s1)
+            vss.append(s2)
+        else:
+            x, p1, p2 = _prefill_chunk_layer_paged(cfg, lp, x, pk[i], pv[i],
+                                                   bt, positions, write_floor,
+                                                   impl)
         pks.append(p1)
         pvs.append(p2)
     x = _cross_apply(cfg, sp["cross"], x, img, "einsum")
+    if quantized:
+        return x, jnp.stack(pks), jnp.stack(pvs), jnp.stack(kss), jnp.stack(vss)
     return x, jnp.stack(pks), jnp.stack(pvs)
 
 
@@ -445,6 +488,11 @@ def prefill_chunk_paged(params, cfg: ArchConfig, tokens, cache, *, bt_rows,
     positions = start + jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32),
                                          (K, C))
     x = L.embed_lookup(params["embed"], tokens, compute_dtype)
+    # an int8-backend cache carries (L, P) per-page scale leaves alongside
+    # the pools; the scales thread through the layer loop exactly like the
+    # pools do. Gated at trace time, so the fp32 jaxpr is unchanged.
+    quantized = "k_scale" in cache
+    scales = {}
 
     if cfg.cross_attn_every:
         assert image_embeds is not None, "VLM prefill needs image_embeds"
@@ -454,21 +502,60 @@ def prefill_chunk_paged(params, cfg: ArchConfig, tokens, cache, *, bt_rows,
         pk0 = cache["k"].reshape(n_super, per, *cache["k"].shape[1:])
         pv0 = cache["v"].reshape(n_super, per, *cache["v"].shape[1:])
 
-        def body(i, carry):
-            x, pk_all, pv_all = carry
-            sp = _index_tree(params["super"], i)
-            pk = jax.lax.dynamic_index_in_dim(pk_all, i, 0, keepdims=False)
-            pv = jax.lax.dynamic_index_in_dim(pv_all, i, 0, keepdims=False)
-            x, pk, pv = _super_prefill_chunk_paged_unrolled(
-                cfg, sp, x, pk, pv, bt_rows, img, positions, write_floor,
-                attn_impl)
-            pk_all = jax.lax.dynamic_update_index_in_dim(pk_all, pk, i, 0)
-            pv_all = jax.lax.dynamic_update_index_in_dim(pv_all, pv, i, 0)
-            return x, pk_all, pv_all
+        if quantized:
+            ks0 = cache["k_scale"].reshape(n_super, per, -1)
+            vs0 = cache["v_scale"].reshape(n_super, per, -1)
 
-        x, pk, pv = jax.lax.fori_loop(0, n_super, body, (x, pk0, pv0))
+            def bodyq(i, carry):
+                x, pk_all, pv_all, ks_all, vs_all = carry
+                sp = _index_tree(params["super"], i)
+                idx = lambda t: jax.lax.dynamic_index_in_dim(
+                    t, i, 0, keepdims=False)
+                x, pk, pv, ks, vs = _super_prefill_chunk_paged_unrolled(
+                    cfg, sp, x, idx(pk_all), idx(pv_all), bt_rows, img,
+                    positions, write_floor, attn_impl, idx(ks_all),
+                    idx(vs_all))
+                upd = jax.lax.dynamic_update_index_in_dim
+                return (x, upd(pk_all, pk, i, 0), upd(pv_all, pv, i, 0),
+                        upd(ks_all, ks, i, 0), upd(vs_all, vs, i, 0))
+
+            x, pk, pv, ks, vs = jax.lax.fori_loop(
+                0, n_super, bodyq, (x, pk0, pv0, ks0, vs0))
+            scales = dict(k_scale=ks.reshape(cache["k_scale"].shape),
+                          v_scale=vs.reshape(cache["v_scale"].shape))
+        else:
+            def body(i, carry):
+                x, pk_all, pv_all = carry
+                sp = _index_tree(params["super"], i)
+                pk = jax.lax.dynamic_index_in_dim(pk_all, i, 0, keepdims=False)
+                pv = jax.lax.dynamic_index_in_dim(pv_all, i, 0, keepdims=False)
+                x, pk, pv = _super_prefill_chunk_paged_unrolled(
+                    cfg, sp, x, pk, pv, bt_rows, img, positions, write_floor,
+                    attn_impl)
+                pk_all = jax.lax.dynamic_update_index_in_dim(pk_all, pk, i, 0)
+                pv_all = jax.lax.dynamic_update_index_in_dim(pv_all, pv, i, 0)
+                return x, pk_all, pv_all
+
+            x, pk, pv = jax.lax.fori_loop(0, n_super, body, (x, pk0, pv0))
         new_k = pk.reshape(cache["k"].shape)
         new_v = pv.reshape(cache["v"].shape)
+    elif quantized:
+        def bodyq(i, carry):
+            x, pk_all, pv_all, ks_all, vs_all = carry
+            lp = _index_tree(params["layers"], i)
+            idx = lambda t: jax.lax.dynamic_index_in_dim(t, i, 0,
+                                                         keepdims=False)
+            x, pk, pv, ks, vs = _prefill_chunk_layer_paged(
+                cfg, lp, x, idx(pk_all), idx(pv_all), bt_rows, positions,
+                write_floor, attn_impl, idx(ks_all), idx(vs_all))
+            upd = jax.lax.dynamic_update_index_in_dim
+            return (x, upd(pk_all, pk, i, 0), upd(pv_all, pv, i, 0),
+                    upd(ks_all, ks, i, 0), upd(vs_all, vs, i, 0))
+
+        x, new_k, new_v, ks, vs = jax.lax.fori_loop(
+            0, cfg.num_layers, bodyq,
+            (x, cache["k"], cache["v"], cache["k_scale"], cache["v_scale"]))
+        scales = dict(k_scale=ks, v_scale=vs)
     else:
         def body(i, carry):
             x, pk_all, pv_all = carry
@@ -488,7 +575,7 @@ def prefill_chunk_paged(params, cfg: ArchConfig, tokens, cache, *, bt_rows,
     x = L.apply_norm(x[:, -1:], params["final_norm"], cfg.norm)
     w_un = params["unembed"]["w"] if not cfg.tie_embeddings else None
     logits = L.lm_logits(params["embed"], x, w_un, vocab=cfg.vocab_size)
-    return logits.astype(jnp.float32), dict(cache, k=new_k, v=new_v)
+    return logits.astype(jnp.float32), dict(cache, k=new_k, v=new_v, **scales)
 
 
 def decode_step(params, cfg: ArchConfig, token, cache, *, image_embeds=None,
@@ -512,6 +599,10 @@ def decode_step(params, cfg: ArchConfig, token, cache, *, image_embeds=None,
     bt = cache.get("block_tables")
     positions = L.decode_positions(pos, B)
     x = L.embed_lookup(params["embed"], token, compute_dtype)
+    # int8-backend caches carry (L, P) per-page scale leaves; see
+    # prefill_chunk_paged — trace-time gate, fp32 jaxpr unchanged
+    quantized = bt is not None and "k_scale" in cache
+    scales = {}
 
     if cfg.cross_attn_every:
         assert image_embeds is not None
@@ -521,20 +612,59 @@ def decode_step(params, cfg: ArchConfig, token, cache, *, image_embeds=None,
         ck0 = cache["k"].reshape(n_super, per, *cache["k"].shape[1:])
         cv0 = cache["v"].reshape(n_super, per, *cache["v"].shape[1:])
 
-        def body(i, carry):
-            x, ck_all, cv_all = carry
-            sp = _index_tree(params["super"], i)
-            ck = jax.lax.dynamic_index_in_dim(ck_all, i, 0, keepdims=False)
-            cv = jax.lax.dynamic_index_in_dim(cv_all, i, 0, keepdims=False)
-            x, ck, cv = _super_decode_unrolled(cfg, sp, x, ck, cv, img, pos,
-                                               positions, bt, paged_attn_impl)
-            ck_all = jax.lax.dynamic_update_index_in_dim(ck_all, ck, i, 0)
-            cv_all = jax.lax.dynamic_update_index_in_dim(cv_all, cv, i, 0)
-            return x, ck_all, cv_all
+        if quantized:
+            ks0 = cache["k_scale"].reshape(n_super, per, -1)
+            vs0 = cache["v_scale"].reshape(n_super, per, -1)
 
-        x, ck, cv = jax.lax.fori_loop(0, n_super, body, (x, ck0, cv0))
+            def bodyq(i, carry):
+                x, ck_all, cv_all, ks_all, vs_all = carry
+                sp = _index_tree(params["super"], i)
+                idx = lambda t: jax.lax.dynamic_index_in_dim(
+                    t, i, 0, keepdims=False)
+                x, ck, cv, ks, vs = _super_decode_unrolled(
+                    cfg, sp, x, idx(ck_all), idx(cv_all), img, pos, positions,
+                    bt, paged_attn_impl, idx(ks_all), idx(vs_all))
+                upd = jax.lax.dynamic_update_index_in_dim
+                return (x, upd(ck_all, ck, i, 0), upd(cv_all, cv, i, 0),
+                        upd(ks_all, ks, i, 0), upd(vs_all, vs, i, 0))
+
+            x, ck, cv, ks, vs = jax.lax.fori_loop(
+                0, n_super, bodyq, (x, ck0, cv0, ks0, vs0))
+            scales = dict(k_scale=ks.reshape(cache["k_scale"].shape),
+                          v_scale=vs.reshape(cache["v_scale"].shape))
+        else:
+            def body(i, carry):
+                x, ck_all, cv_all = carry
+                sp = _index_tree(params["super"], i)
+                ck = jax.lax.dynamic_index_in_dim(ck_all, i, 0, keepdims=False)
+                cv = jax.lax.dynamic_index_in_dim(cv_all, i, 0, keepdims=False)
+                x, ck, cv = _super_decode_unrolled(cfg, sp, x, ck, cv, img,
+                                                   pos, positions, bt,
+                                                   paged_attn_impl)
+                ck_all = jax.lax.dynamic_update_index_in_dim(ck_all, ck, i, 0)
+                cv_all = jax.lax.dynamic_update_index_in_dim(cv_all, cv, i, 0)
+                return x, ck_all, cv_all
+
+            x, ck, cv = jax.lax.fori_loop(0, n_super, body, (x, ck0, cv0))
         new_k = ck.reshape(cache["k"].shape)
         new_v = cv.reshape(cache["v"].shape)
+    elif quantized:
+        def bodyq(i, carry):
+            x, ck_all, cv_all, ks_all, vs_all = carry
+            lp = _index_tree(params["layers"], i)
+            idx = lambda t: jax.lax.dynamic_index_in_dim(t, i, 0,
+                                                         keepdims=False)
+            x, ck, cv, ks, vs = _decode_layer(
+                cfg, lp, x, idx(ck_all), idx(cv_all), pos, positions, bt,
+                paged_attn_impl, idx(ks_all), idx(vs_all))
+            upd = jax.lax.dynamic_update_index_in_dim
+            return (x, upd(ck_all, ck, i, 0), upd(cv_all, cv, i, 0),
+                    upd(ks_all, ks, i, 0), upd(vs_all, vs, i, 0))
+
+        x, new_k, new_v, ks, vs = jax.lax.fori_loop(
+            0, cfg.num_layers, bodyq,
+            (x, cache["k"], cache["v"], cache["k_scale"], cache["v_scale"]))
+        scales = dict(k_scale=ks, v_scale=vs)
     else:
         def body(i, carry):
             x, ck_all, cv_all = carry
@@ -553,5 +683,5 @@ def decode_step(params, cfg: ArchConfig, token, cache, *, image_embeds=None,
     x = L.apply_norm(x, params["final_norm"], cfg.norm)
     w_un = params["unembed"]["w"] if not cfg.tie_embeddings else None
     logits = L.lm_logits(params["embed"], x, w_un, vocab=cfg.vocab_size)
-    new_cache = dict(cache, k=new_k, v=new_v, pos=pos + 1)
+    new_cache = dict(cache, k=new_k, v=new_v, pos=pos + 1, **scales)
     return logits.astype(jnp.float32), new_cache

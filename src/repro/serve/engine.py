@@ -10,10 +10,9 @@ Core invariants (see the package docstring for the request lifecycle):
   prefilled jointly at batch K (the batched-prefill fan-in); a lone request
   runs at batch 1.
 * **Slot isolation.** The batch-K prefill cache is spliced into the resident
-  cache with ``registry.insert_cache_rows`` (dense) or
-  ``registry.insert_cache_rows_paged`` (paged: a scatter into exactly the
-  pages the admitted slots own) — other slots' cache entries and positions
-  are untouched bit-for-bit.
+  cache through the KV backend's ``insert_rows`` (dense: a batch-row
+  scatter; paged: a scatter into exactly the pages the admitted slots own)
+  — other slots' cache entries and positions are untouched bit-for-bit.
 * **Per-slot positions, inactive sentinel.** The resident cache's ``pos`` is
   a (B,) vector, so slots at different sequence depths decode together in
   one tick. A freed (or never-admitted) slot's pos is parked at
@@ -74,6 +73,15 @@ Core invariants (see the package docstring for the request lifecycle):
   ``cancel()`` does the same from every request state, so an errored or
   cancelled mid-prefill job can no longer strand pages until process exit.
 
+* **Pluggable KV-cache backends.** The engine is pure ORCHESTRATION: every
+  representation decision (pool dtype/shape, splice math, COW copy, prefix
+  seed, per-page metadata) lives behind the :class:`~repro.serve.kvcache
+  .KVBackend` seam — ``DenseBackend``, ``PagedFP32Backend`` (the layout
+  above, bit-for-bit), and ``PagedInt8Backend`` (int8 pages + per-page
+  symmetric scales, dequantized inside the paged kernel's gather). Select
+  with ``kv_backend=``; None keeps the historical layout-follows-page_size
+  behaviour.
+
 Multi-host serving is a ROADMAP follow-on.
 """
 from __future__ import annotations
@@ -91,26 +99,17 @@ from repro import configs
 from repro.configs.base import Family
 from repro.launch import steps as steps_mod
 from repro.models.layers import INACTIVE_POS
-from repro.models.registry import (Model, cache_capacity, copy_pool_rows,
-                                   get_model, init_paged_cache,
-                                   insert_cache_rows, insert_cache_rows_paged,
-                                   reduced_config, seed_prefix_cache,
-                                   vectorize_cache_pos)
+from repro.models.registry import Model, get_model, reduced_config
+from repro.serve.kvcache import (PAGED_KERNEL_FAMILIES, PREFIX_CACHE_FAMILIES,
+                                 KVBackend, make_backend)
 from repro.serve.metrics import MetricsRecorder
 from repro.serve.prefix import PrefixIndex, PrefixPlan
 from repro.serve.scheduler import (Request, RequestState, SchedPolicy,
                                    Scheduler)
 
-# families whose transient prefill state is exactly (k, v, pos) — the only
-# ones a page-level prefix can fully reconstruct a mid-prompt state for.
-# Hybrid's mamba carry and ssm/rwkv state at an arbitrary split are not
-# page-resident; encdec's cross-K/V is per-slot, not paged.
-PREFIX_CACHE_FAMILIES = (Family.DENSE, Family.MOE, Family.VLM)
-
-# families whose paged decode goes through layers.attention_decode_paged and
-# can therefore route reads through the Pallas block-gather kernel; hybrid's
-# ring has its own gather and ssm never pages
-PAGED_KERNEL_FAMILIES = (Family.DENSE, Family.MOE, Family.VLM, Family.ENCDEC)
+# PREFIX_CACHE_FAMILIES / PAGED_KERNEL_FAMILIES moved to serve/kvcache.py
+# with the rest of the representation layer; re-imported above so existing
+# callers (`engine.PREFIX_CACHE_FAMILIES`) keep working.
 
 log = logging.getLogger("repro.serve.engine")
 
@@ -202,18 +201,6 @@ class _PrefillJob:
 
 
 @functools.lru_cache(maxsize=64)
-def _jitted_prefix_seed(model: Model, s_max: int, cache_dtype):
-    """Gather shared prefix pages into a fresh transient prefill cache (the
-    prefix-cache hit path's replacement for the first-chunk jit). Retraced
-    per group batch K like the chunk executables; the resident cache is NOT
-    donated — shared pages stay readable by every aliasing slot."""
-    def seed(cache, phys_rows, row_ok, pos):
-        return seed_prefix_cache(model, cache, phys_rows, row_ok, pos,
-                                 s_max, cache_dtype)
-    return jax.jit(seed)
-
-
-@functools.lru_cache(maxsize=64)
 def _jitted_prefill_chunk_paged(model: Model, compute_dtype, attn_impl: str):
     """Incremental paged-prefill chunk executables: ONE callable per model
     (no first/continuation split — every chunk writes into pages and attends
@@ -223,21 +210,6 @@ def _jitted_prefill_chunk_paged(model: Model, compute_dtype, attn_impl: str):
     fn = steps_mod.make_prefill_chunk_paged(model, compute_dtype=compute_dtype,
                                             attn_impl=attn_impl)
     return jax.jit(fn, donate_argnums=(1,))
-
-
-@functools.lru_cache(maxsize=1)
-def _jitted_copy_rows():
-    return jax.jit(copy_pool_rows, donate_argnums=(0,))
-
-
-@functools.lru_cache(maxsize=1)
-def _jitted_insert_rows():
-    return jax.jit(insert_cache_rows, donate_argnums=(0,))
-
-
-@functools.lru_cache(maxsize=1)
-def _jitted_insert_rows_paged():
-    return jax.jit(insert_cache_rows_paged, donate_argnums=(0,))
 
 
 class PageAllocator:
@@ -327,6 +299,7 @@ class ServeEngine:
                  top_k: int = 0, top_p: float = 1.0,
                  page_size: Optional[int] = None,
                  num_pages: Optional[int] = None,
+                 kv_backend=None,
                  prefix_cache: Optional[bool] = None,
                  prefill_mode: str = "parallel",
                  prefill_chunk_tokens: int = 64,
@@ -392,23 +365,25 @@ class ServeEngine:
             if s_max % page_size:
                 raise ValueError(f"s_max {s_max} must be a multiple of "
                                  f"page_size {page_size}")
-            # rows one slot's attention cache can hold (ring width for hybrid)
-            self.capacity = cache_capacity(self.cfg, s_max)
             self.max_pages_per_slot = s_max // page_size
             self.num_pages = (num_pages if num_pages is not None
                               else batch_slots * self.max_pages_per_slot)
+            # the backend owns every REPRESENTATION decision (pool layout,
+            # splice/COW/seed math, per-page metadata); the engine keeps the
+            # orchestration state that follows (allocator, block tables)
+            self.backend: KVBackend = make_backend(
+                kv_backend, family=self.cfg.family, page_size=page_size,
+                num_pages=self.num_pages)
+            # rows one slot's attention cache can hold (ring width for hybrid)
+            self.capacity = self.backend.capacity(self.cfg, s_max)
             self.allocator = PageAllocator(self.num_pages)
             self.slot_pages: List[List[int]] = [[] for _ in range(batch_slots)]
             self._bt_host = np.full((batch_slots, self.max_pages_per_slot),
                                     -1, np.int32)
-            self.cache = init_paged_cache(
-                model, batch_slots, s_max, page_size=page_size,
-                num_pages=self.num_pages, dtype=self.cache_dtype)
-            self._insert_rows_paged = _jitted_insert_rows_paged()
         else:
-            self.cache = vectorize_cache_pos(
-                model.init_cache(batch_slots, s_max, self.cache_dtype),
-                batch_slots, inactive=True)
+            self.backend = make_backend(kv_backend, family=self.cfg.family)
+        self.cache = self.backend.init_cache(model, batch_slots, s_max,
+                                             self.cache_dtype)
 
         # prefix cache: paged + parallel prefill + an attention-pure family
         # only (the tail-only restart needs the full mid-prompt state to be
@@ -441,11 +416,13 @@ class ServeEngine:
                              f"'einsum', got {paged_attn_impl!r}")
         kernel_ok = self.paged and self.cfg.family in PAGED_KERNEL_FAMILIES
         if paged_attn_impl == "auto":
-            # the degenerate one-page-per-slot config (page_size == s_max) is
-            # the dense bit-exactness anchor and has no pages to skip — auto
-            # keeps it on the einsum path so the anchor stays bit-for-bit
-            paged_attn_impl = ("kernel" if kernel_ok
-                               and self.max_pages_per_slot > 1 else "einsum")
+            # the backend's dispatch policy; for paged pools the degenerate
+            # one-page-per-slot config (page_size == s_max) is the dense
+            # bit-exactness anchor and has no pages to skip — auto keeps it
+            # on the einsum path so the anchor stays bit-for-bit
+            paged_attn_impl = (self.backend.resolve_attn_impl(
+                self.cfg.family, self.max_pages_per_slot > 1)
+                if self.paged else "einsum")
         elif paged_attn_impl == "kernel" and not kernel_ok:
             log.warning("paged_attn_impl='kernel' unsupported here (needs a "
                         "paged cache on a dense/MoE/VLM/encdec family; got "
@@ -467,7 +444,6 @@ class ServeEngine:
         self._decode = _jitted_decode(
             model, compute_dtype,
             self.paged_attn_impl if self.paged else None)
-        self._insert_rows = _jitted_insert_rows()
 
         # (head rid, free pages, index version) at the last deferral: admit()
         # short-circuits while nothing that could change the outcome has
@@ -490,6 +466,7 @@ class ServeEngine:
               quantize_int8: bool = False, temperature: float = 0.0,
               top_k: int = 0, top_p: float = 1.0,
               page_size: Optional[int] = None, num_pages: Optional[int] = None,
+              kv_backend=None,
               prefix_cache: Optional[bool] = None,
               prefill_mode: str = "parallel", prefill_chunk_tokens: int = 64,
               prefill_attn_impl: str = "auto",
@@ -510,7 +487,8 @@ class ServeEngine:
         return cls(model, params, batch_slots=batch_slots, s_max=s_max,
                    compute_dtype=compute_dtype, temperature=temperature,
                    top_k=top_k, top_p=top_p, page_size=page_size,
-                   num_pages=num_pages, prefix_cache=prefix_cache,
+                   num_pages=num_pages, kv_backend=kv_backend,
+                   prefix_cache=prefix_cache,
                    prefill_mode=prefill_mode,
                    prefill_chunk_tokens=prefill_chunk_tokens,
                    prefill_attn_impl=prefill_attn_impl,
@@ -981,8 +959,8 @@ class ServeEngine:
         charged to prefill so hit-path rates stay honest."""
         phys, ok = self._prefix_gather_rows(job.prefix_plans, cached_len)
         t0 = self.metrics.now()
-        job.cache = _jitted_prefix_seed(self.model, self.s_max,
-                                        self.cache_dtype)(
+        job.cache = self.backend.seed_prefix(self.model, self.s_max,
+                                             self.cache_dtype)(
             self.cache, jnp.asarray(phys), jnp.asarray(ok),
             jnp.asarray(job.tail_start, jnp.int32))
         jax.block_until_ready(job.cache["k"])
@@ -1000,7 +978,8 @@ class ServeEngine:
         table), but a partial hit's rows ``[write_floor, cached_len)`` live
         in a shared SOURCE page while the block table holds a fresh page in
         that position — copy them across with the same flattened-pool
-        scatter the per-chunk splice uses (``registry.copy_pool_rows``),
+        scatter the per-chunk splice uses (the backend's ``copy_rows``;
+        the int8 backend carries the source page's scale with the payload),
         then drop the admission-time source references. The copy wall is
         charged to prefill like the transient path's gather, so hit-path
         rates stay honest."""
@@ -1020,8 +999,8 @@ class ServeEngine:
                 src[i, :n] = plan.partial[0] * ps + offs[:n]
                 dst[i, :n] = fresh * ps + offs[:n]
             t0 = self.metrics.now()
-            self.cache = _jitted_copy_rows()(self.cache, jnp.asarray(src),
-                                             jnp.asarray(dst))
+            self.cache = self.backend.copy_rows(self.cache, jnp.asarray(src),
+                                                jnp.asarray(dst))
             jax.block_until_ready(self.cache["k"])
             self.metrics.on_prefix_gather(self.metrics.now() - t0)
         for plan in job.prefix_plans:
@@ -1207,11 +1186,11 @@ class ServeEngine:
             plens = jnp.asarray([len(r.prompt) for r in reqs], jnp.int32)
             self.cache["pos"] = self.cache["pos"].at[slots].set(plens)
         elif self.paged:
-            self.cache = self._insert_rows_paged(
+            self.cache = self.backend.insert_rows(
                 self.cache, rcache, slots,
                 jnp.asarray(self._phys_rows(slot_ids, write_floor)))
         else:
-            self.cache = self._insert_rows(self.cache, rcache, slots)
+            self.cache = self.backend.insert_rows(self.cache, rcache, slots)
         if self.prefix_index is not None and prefix_plans is not None:
             for slot, req, plan in zip(slot_ids, reqs, prefix_plans):
                 self.prefix_index.register(plan, self.slot_pages[slot],
@@ -1306,10 +1285,8 @@ class ServeEngine:
         self.slot_pages = [[] for _ in range(self.batch_slots)]
         self._bt_host[:] = -1
         self._defer_state = None
-        self.cache = init_paged_cache(
-            self.model, self.batch_slots, self.s_max,
-            page_size=self.page_size, num_pages=self.num_pages,
-            dtype=self.cache_dtype)
+        self.cache = self.backend.init_cache(
+            self.model, self.batch_slots, self.s_max, self.cache_dtype)
 
     def release_job(self, job: _PrefillJob, error=None,
                     state: RequestState = RequestState.FAILED):
@@ -1401,6 +1378,8 @@ class ServeEngine:
             for pg in idx:
                 assert self.allocator.refcount(pg) >= 1, \
                     f"indexed page {pg} unref'd"
+        # per-page metadata invariants (int8: scale tables well-formed)
+        self.backend.check_page_meta(self.cache, self.num_pages)
 
     @property
     def running(self) -> int:

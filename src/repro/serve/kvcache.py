@@ -1,0 +1,375 @@
+"""Pluggable KV-cache backends: the single seam between the serving engine's
+ORCHESTRATION (scheduling, admission, page accounting) and the cache's
+REPRESENTATION (pool dtype/shape, splice math, scale metadata).
+
+The engine never touches page-layout internals directly — it holds a
+:class:`KVBackend` and calls five representation operations:
+
+    capacity(cfg, s_max)           per-slot row capacity the allocator covers
+    init_cache(model, B, s_max)    build the resident cache pytree
+    insert_rows(cache, rcache,     completion splice of a transient prefill
+                slots, phys_rows)  cache (dense batch scatter / paged pool
+                                   scatter, quantizing on the way in for q8)
+    copy_rows(cache, src, dst)     COW re-materialisation of a partial
+                                   prefix page (q8: the scale rides along)
+    seed_prefix(model, s_max, dt)  gather shared prefix rows into a dense
+                                   transient cache (q8: dequantized)
+
+plus `resolve_attn_impl` (kernel vs einsum dispatch policy) and the
+`page_meta`/`check_page_meta` hooks for per-page metadata invariants.
+Everything a representation owns lives here or below (models/layers.py
+write/read paths, kernels/paged_attention.py); everything the engine owns
+(allocator, block tables, prefix index, job lifecycle) stays in engine.py.
+
+Backends:
+
+* :class:`DenseBackend` — the non-paged (B, s_max) per-slot cache.
+* :class:`PagedFP32Backend` — the vLLM-style shared page pool, extracted
+  behaviour-preservingly from the pre-backend engine (all bit-exact anchors
+  — degenerate page == dense, prefix on == off — hold through this class).
+* :class:`PagedInt8Backend` — pages stored int8 with ONE symmetric f32
+  scale per page (the page is the quantization block, DeepSeek-V3
+  ``act_quant`` style): `k`/`v` pools are int8 and `(L, P)` `k_scale`/
+  `v_scale` leaves ride the cache pytree. Dequant happens inside the paged
+  Pallas kernel's gather (scales are scalar-prefetch operands), so decode's
+  HBM KV traffic is ~4x smaller where it is bandwidth-bound. Prefix
+  aliasing shares a page's scale with its payload; COW re-quantizes the
+  fresh page exactly once (the chunk splice that follows the row copy).
+
+Adding a backend = subclass KVBackend, implement the five operations (and
+the layers-level write/read path if the representation changes attention's
+view), register a name in :func:`make_backend`. The MLA latent-page
+representation lands as just another backend behind this seam.
+"""
+from __future__ import annotations
+
+import functools
+import logging
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, Family
+from repro.core.quantize import page_scale
+from repro.models.registry import (Model, cache_capacity, copy_pool_rows,
+                                   init_paged_cache, insert_cache_rows,
+                                   insert_cache_rows_paged, seed_prefix_cache,
+                                   vectorize_cache_pos)
+
+log = logging.getLogger("repro.serve")
+
+# families whose transient prefill state is exactly (k, v, pos) — the ones
+# page-level prefix caching (and the int8 backend's dequantizing prefix
+# seed) can serve. Hybrid's ring carry and encdec's cross-K/V are not
+# reconstructible from pages.
+PREFIX_CACHE_FAMILIES = (Family.DENSE, Family.MOE, Family.VLM)
+
+# families whose paged decode/prefill can route through the Pallas
+# block-gather kernel (plain causal/windowed attention over the pool; the
+# hybrid ring's modular positions need the einsum path)
+PAGED_KERNEL_FAMILIES = (Family.DENSE, Family.MOE, Family.VLM, Family.ENCDEC)
+
+# families the int8 backend supports: the quantized write paths live in the
+# transformer chunk/decode attention (layers.py); the hybrid ring and
+# encdec/ssm extra state keep fp32 representations
+INT8_KV_FAMILIES = PREFIX_CACHE_FAMILIES
+
+
+# ---------------------------------------------------------- jitted helpers
+# module-level lru_cache'd jit factories (moved from engine.py): one
+# compilation per distinct signature, shared by every engine instance
+@functools.lru_cache(maxsize=1)
+def _jitted_insert_rows():
+    return jax.jit(insert_cache_rows, donate_argnums=(0,))
+
+
+@functools.lru_cache(maxsize=1)
+def _jitted_insert_rows_paged():
+    return jax.jit(insert_cache_rows_paged, donate_argnums=(0,))
+
+
+@functools.lru_cache(maxsize=1)
+def _jitted_copy_rows():
+    return jax.jit(copy_pool_rows, donate_argnums=(0,))
+
+
+@functools.lru_cache(maxsize=64)
+def _jitted_prefix_seed(model: Model, s_max: int, dtype):
+    def seed(cache, phys_rows, row_ok, pos):
+        return seed_prefix_cache(model, cache, phys_rows, row_ok, pos,
+                                 s_max, dtype)
+    return jax.jit(seed)
+
+
+# ------------------------------------------------------------ int8 splices
+def _quantize_pool_rows(req, C: int, ps: int):
+    """Quantize a transient-cache leaf (L, K, >=C, KV, hd) page-block-wise.
+    Returns (q (L,K,C,KV,hd) int8, scale (L,K,C//ps) f32) — one symmetric
+    scale per logical page. The engine's write floor is page-aligned, so a
+    splice drops whole pages at a time and payload/scale stay consistent."""
+    rows = req[:, :, :C].astype(jnp.float32)
+    Lr, K = rows.shape[:2]
+    blocks = rows.reshape(Lr, K, C // ps, ps, *rows.shape[3:])
+    scale = page_scale(jnp.max(jnp.abs(blocks), axis=(3, 4, 5)))
+    q = jnp.clip(jnp.round(blocks / scale[..., None, None, None]),
+                 -127, 127).astype(jnp.int8)
+    return q.reshape(Lr, K, C, *rows.shape[3:]), scale
+
+
+def insert_cache_rows_paged_q8(cache, request_cache, slots, phys_rows):
+    """Int8 completion splice: like ``registry.insert_cache_rows_paged`` but
+    the fp32 transient K/V rows are QUANTIZED page-by-page on the way into
+    the int8 pools, and each written page's scale lands in the (L, P)
+    scale tables. Rows/pages outside the request's reservation (phys >=
+    P * ps — including everything below a page-aligned write floor) are
+    dropped from payload AND scale alike."""
+    slots = jnp.asarray(slots, jnp.int32)
+    phys_rows = jnp.asarray(phys_rows, jnp.int32)
+    out = {}
+    for key, leaf in cache.items():
+        if key == "block_tables" or key.endswith("_scale"):
+            out.setdefault(key, leaf)       # scales overwritten with k/v
+            continue
+        req = request_cache[key]
+        if key in ("k", "v"):
+            Lr, P, ps = leaf.shape[:3]
+            C = phys_rows.shape[1]
+            q, scale = _quantize_pool_rows(req, C, ps)
+            flat = leaf.reshape((Lr, P * ps) + leaf.shape[3:])
+            flat = flat.at[:, phys_rows].set(q, mode="drop")
+            out[key] = flat.reshape(leaf.shape)
+            # every logical page's rows are pool-contiguous, so the page id
+            # is the first covered row's phys // ps (oob rows land on page
+            # P and drop, exactly like their payload)
+            page_idx = phys_rows[:, ::ps] // ps              # (K, C // ps)
+            out[key + "_scale"] = cache[key + "_scale"].at[:, page_idx].set(
+                scale, mode="drop")
+        elif key == "pos":
+            out[key] = leaf.at[slots].set(jnp.asarray(req, leaf.dtype))
+        else:
+            out[key] = leaf.at[:, slots].set(req.astype(leaf.dtype))
+    return out
+
+
+def copy_pool_rows_q8(cache, src_rows, dst_rows):
+    """Int8 COW materialisation: the int8 rows copy verbatim (the gather/
+    scatter in ``registry.copy_pool_rows`` is dtype-agnostic), and the
+    DESTINATION page inherits the SOURCE page's scale — the copied payload
+    only decodes correctly under it. The tail chunk's splice then
+    re-quantizes the fresh page (payload + scale together), so divergence
+    re-quantizes exactly once."""
+    src_rows = jnp.asarray(src_rows, jnp.int32)
+    dst_rows = jnp.asarray(dst_rows, jnp.int32)
+    out = dict(copy_pool_rows(cache, src_rows, dst_rows))
+    for key in ("k", "v"):
+        P, ps = cache[key].shape[1:3]
+        src_pg = jnp.clip(src_rows[:, 0] // ps, 0, P - 1)
+        dst_pg = jnp.where(dst_rows[:, 0] < P * ps, dst_rows[:, 0] // ps, P)
+        sc = out[key + "_scale"]
+        out[key + "_scale"] = sc.at[:, dst_pg].set(sc[:, src_pg], mode="drop")
+    return out
+
+
+def seed_prefix_cache_q8(model: Model, cache, phys_rows, row_ok, pos,
+                         s_max: int, dtype=jnp.float32):
+    """Int8 prefix seed: gather the shared prefix rows like
+    ``registry.seed_prefix_cache`` and DEQUANTIZE them with each row's page
+    scale, so the transient tail-prefill cache is a faithful f32 view of
+    the aliased int8 pages."""
+    K = phys_rows.shape[0]
+    out = model.init_cache(K, s_max, dtype)
+    idx = jnp.where(row_ok, phys_rows, 0)
+    for key in ("k", "v"):
+        pool = cache[key]                   # (L, P, ps, KV, hd) int8
+        Lr, P, ps = pool.shape[:3]
+        flat = pool.reshape((Lr, P * ps) + pool.shape[3:])
+        pg = jnp.clip(idx // ps, 0, P - 1)
+        rows = (flat[:, idx].astype(jnp.float32)
+                * cache[key + "_scale"][:, pg][..., None, None])
+        mask = row_ok.reshape((1,) + row_ok.shape + (1,) * (rows.ndim - 3))
+        out[key] = jnp.where(mask, rows, 0).astype(out[key].dtype)
+    out["pos"] = jnp.asarray(pos, jnp.int32)
+    return out
+
+
+@functools.lru_cache(maxsize=1)
+def _jitted_insert_rows_q8():
+    return jax.jit(insert_cache_rows_paged_q8, donate_argnums=(0,))
+
+
+@functools.lru_cache(maxsize=1)
+def _jitted_copy_rows_q8():
+    return jax.jit(copy_pool_rows_q8, donate_argnums=(0,))
+
+
+@functools.lru_cache(maxsize=64)
+def _jitted_prefix_seed_q8(model: Model, s_max: int, dtype):
+    def seed(cache, phys_rows, row_ok, pos):
+        return seed_prefix_cache_q8(model, cache, phys_rows, row_ok, pos,
+                                    s_max, dtype)
+    return jax.jit(seed)
+
+
+# -------------------------------------------------------------- the seam
+class KVBackend:
+    """Protocol every cache representation implements. Attributes:
+    ``name`` (registry key), ``paged`` (pool + block tables vs per-slot
+    rows), ``quantized`` (carries per-page scale metadata)."""
+
+    name = "abstract"
+    paged = False
+    quantized = False
+
+    @staticmethod
+    def capacity(cfg: ArchConfig, s_max: int) -> int:
+        """Per-slot row capacity the page allocator must cover."""
+        return cache_capacity(cfg, s_max)
+
+    def init_cache(self, model: Model, batch_slots: int, s_max: int, dtype):
+        raise NotImplementedError
+
+    def insert_rows(self, cache, request_cache, slots, phys_rows=None):
+        """Completion splice of a transient batch-K prefill cache into the
+        resident cache (phys_rows: the paged row map, None for dense)."""
+        raise NotImplementedError
+
+    def copy_rows(self, cache, src_rows, dst_rows):
+        """COW re-materialisation (paged only)."""
+        raise NotImplementedError(f"{self.name} backend has no pages")
+
+    def seed_prefix(self, model: Model, s_max: int, dtype):
+        """-> jitted fn(cache, phys_rows, row_ok, pos) building the dense
+        transient cache for a prefix-hit tail prefill (paged only)."""
+        raise NotImplementedError(f"{self.name} backend has no pages")
+
+    def resolve_attn_impl(self, family: Family, multi_page: bool) -> str:
+        """'auto' policy: which paged read path serves this config."""
+        return "einsum"
+
+    def page_meta(self, cache) -> dict:
+        """Per-page metadata leaves this representation adds (name -> (L, P)
+        array); empty for unquantized backends."""
+        return {}
+
+    def check_page_meta(self, cache, num_pages: int) -> None:
+        """Invariant hook for per-page metadata (assert_page_invariants)."""
+
+
+class DenseBackend(KVBackend):
+    """The page_size == None degenerate: per-slot (B, s_max) rows, batch-axis
+    completion splice, no pages/COW/prefix sharing."""
+
+    name = "dense"
+
+    def init_cache(self, model: Model, batch_slots: int, s_max: int, dtype):
+        return vectorize_cache_pos(model.init_cache(batch_slots, s_max, dtype),
+                                   batch_slots, inactive=True)
+
+    def insert_rows(self, cache, request_cache, slots, phys_rows=None):
+        return _jitted_insert_rows()(cache, request_cache, slots)
+
+
+class PagedFP32Backend(KVBackend):
+    """The vLLM-style shared fp32/bf16 page pool (the pre-backend layout,
+    bit-for-bit)."""
+
+    name = "paged"
+    paged = True
+
+    def __init__(self, page_size: int, num_pages: int):
+        self.page_size = page_size
+        self.num_pages = num_pages
+
+    def init_cache(self, model: Model, batch_slots: int, s_max: int, dtype):
+        return init_paged_cache(model, batch_slots, s_max,
+                                page_size=self.page_size,
+                                num_pages=self.num_pages, dtype=dtype)
+
+    def insert_rows(self, cache, request_cache, slots, phys_rows=None):
+        return _jitted_insert_rows_paged()(cache, request_cache, slots,
+                                           phys_rows)
+
+    def copy_rows(self, cache, src_rows, dst_rows):
+        return _jitted_copy_rows()(cache, src_rows, dst_rows)
+
+    def seed_prefix(self, model: Model, s_max: int, dtype):
+        return _jitted_prefix_seed(model, s_max, dtype)
+
+    def resolve_attn_impl(self, family: Family, multi_page: bool) -> str:
+        # the degenerate one-page-per-slot config stays on the einsum path:
+        # it IS the dense bit-exactness anchor
+        if family in PAGED_KERNEL_FAMILIES and multi_page:
+            return "kernel"
+        return "einsum"
+
+
+class PagedInt8Backend(PagedFP32Backend):
+    """Int8 page pools + per-page symmetric scales. Same block tables,
+    allocator contract, and attention dispatch as the fp32 pool — only the
+    representation ops differ (quantizing splice, scale-carrying COW,
+    dequantizing seed/read)."""
+
+    name = "paged_int8"
+    quantized = True
+
+    def init_cache(self, model: Model, batch_slots: int, s_max: int, dtype):
+        base = super().init_cache(model, batch_slots, s_max, dtype)
+        out = dict(base)
+        for key in ("k", "v"):
+            out[key] = jnp.zeros(base[key].shape, jnp.int8)
+            # scale 1.0 everywhere: a never-written page dequants to exact
+            # zeros, same as the fp32 pool's zero init
+            out[key + "_scale"] = jnp.ones(base[key].shape[:2], jnp.float32)
+        return out
+
+    def insert_rows(self, cache, request_cache, slots, phys_rows=None):
+        return _jitted_insert_rows_q8()(cache, request_cache, slots,
+                                        phys_rows)
+
+    def copy_rows(self, cache, src_rows, dst_rows):
+        return _jitted_copy_rows_q8()(cache, src_rows, dst_rows)
+
+    def seed_prefix(self, model: Model, s_max: int, dtype):
+        return _jitted_prefix_seed_q8(model, s_max, dtype)
+
+    def page_meta(self, cache) -> dict:
+        return {"k_scale": cache["k_scale"], "v_scale": cache["v_scale"]}
+
+    def check_page_meta(self, cache, num_pages: int) -> None:
+        import numpy as np
+        for key in ("k_scale", "v_scale"):
+            sc = np.asarray(cache[key])
+            L = cache[key[0]].shape[0]
+            assert sc.shape == (L, num_pages), \
+                f"{key} shape {sc.shape} != {(L, num_pages)}"
+            assert np.isfinite(sc).all() and (sc > 0).all(), \
+                f"{key} has non-finite or non-positive entries"
+
+
+def make_backend(spec, *, family: Family, page_size=None, num_pages=None):
+    """Resolve an engine ``kv_backend`` spec: None (layout follows
+    page_size), a registered name ('dense' | 'paged' | 'paged_fp32' |
+    'paged_int8'), or a ready KVBackend instance. Int8 on an unsupported
+    family degrades to fp32 pages with a warning rather than failing — the
+    caller keeps a correct serving path."""
+    if isinstance(spec, KVBackend):
+        return spec
+    if spec is None:
+        spec = "paged" if page_size is not None else "dense"
+    if spec == "dense":
+        if page_size is not None:
+            raise ValueError("kv_backend='dense' conflicts with page_size="
+                             f"{page_size}; drop one of them")
+        return DenseBackend()
+    if page_size is None:
+        raise ValueError(f"kv_backend={spec!r} needs page_size")
+    if spec in ("paged", "paged_fp32"):
+        return PagedFP32Backend(page_size, num_pages)
+    if spec == "paged_int8":
+        if family not in INT8_KV_FAMILIES:
+            log.warning("paged_int8 KV backend supports %s (got %s); "
+                        "falling back to fp32 pages",
+                        [f.name for f in INT8_KV_FAMILIES], family)
+            return PagedFP32Backend(page_size, num_pages)
+        return PagedInt8Backend(page_size, num_pages)
+    raise ValueError(f"unknown kv_backend {spec!r}")

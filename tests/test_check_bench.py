@@ -35,6 +35,14 @@ BASE = {
                    "kernel_prefill_tokens_per_s": 7000.0}],
         "acceptance": {"speedup": 1.8, "passes_1_5x": True},
     },
+    "kv_quant": {
+        "cells": [{"prompt_len": 32,
+                   "int8_decode_tokens_per_s": 1400.0}],
+        "acceptance": {"resident_bytes_ratio": 0.25,
+                       "greedy_prefix_match_mean": 0.7,
+                       "passes_bytes_ratio": True,
+                       "passes_divergence_bound": True},
+    },
     "goodput": {
         "cells": [{"cell": "burst", "policy_on": True}],
         "acceptance": {"passes_steady_slo": True, "passes_slo_gain": True,
