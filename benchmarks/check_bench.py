@@ -25,6 +25,10 @@ Two classes of checks:
 fresh result is false (the bench's own absolute bars: >=2x engine speedup,
 paged memory drop, >=2x parallel prefill, >=2x prefix-cached prefill).
 
+``--sections a,b`` restricts the gate (rows AND flags) to those bench
+sections — the partner of ``serve_bench --sections``, so a CI leg that
+reran only part of the bench gates exactly what it measured.
+
 Run: python -m benchmarks.check_bench --baseline BENCH_baseline.json \
          --fresh BENCH_serve.json [--threshold 0.2] [--require-acceptance]
 """
@@ -76,7 +80,31 @@ GATED_METRICS = [
     ("goodput.acceptance.passes_slo_gain", True, False, None),
     ("goodput.acceptance.passes_roofline_bound", True, False, None),
     ("goodput.acceptance.goodput_tokens_per_s", True, True, None),
+    # tensor-parallel serving (PR 8): greedy bitwise equality and the exact
+    # global/tp per-shard pool split are BOOLEAN same-run facts (relative-
+    # only safe); the pinned tp=2 bytes ratio is a deterministic function
+    # of config (lower is better, tight default threshold); the tp=2 decode
+    # rate is absolute and machine-class sensitive
+    ("tp.acceptance.passes_greedy_match", True, False, None),
+    ("tp.acceptance.passes_shard_bytes", True, False, None),
+    ("tp.acceptance.per_shard_kv_bytes_ratio", False, False, None),
+    ("tp_cell.decode_tokens_per_s", True, True, None),
+    # replica router (PR 8): the affinity-vs-round-robin speedup is a ratio
+    # of two tier runs in ONE process (same loosened 0.5 collapse threshold
+    # as the other wall-clock speedup rows — its absolute floor is the
+    # passes_affinity_gain flag); the affinity rate row is absolute
+    ("router.acceptance.passes_affinity_gain", True, False, None),
+    ("router.acceptance.affinity_speedup", True, False, 0.5),
+    ("router.affinity_prefill_tokens_per_s", True, True, None),
 ]
+
+# metric-path root -> bench section name, for --sections filtering (the
+# split-bench CI legs gate only the sections they just reran)
+def _section_of(path: str) -> str:
+    root = path.split(".")[0].split("[")[0]
+    if root.endswith("_cell"):
+        root = root[: -len("_cell")]
+    return "core" if root in ("acceptance", "cells") else root
 
 
 def _acceptance_cells(bench: dict) -> dict:
@@ -104,6 +132,10 @@ def _acceptance_cells(bench: dict) -> dict:
         # prompt 32 is the acceptance cell (quick runs record only it)
         if cell.get("prompt_len") == 32:
             out["kv_quant_cell"] = cell
+    for cell in bench.get("tp", {}).get("cells", []):
+        # tp=2 is the pinned acceptance degree (quick AND full runs have it)
+        if cell.get("tp") == 2:
+            out["tp_cell"] = cell
     return out
 
 
@@ -133,12 +165,19 @@ def _pass_flags(tree: dict, prefix: str = "") -> list:
 
 def check(baseline: dict, fresh: dict, threshold: float,
           require_acceptance: bool, abs_threshold: float = 0.5,
-          relative_only: bool = False) -> list:
-    """Returns a list of human-readable failure strings (empty = gate open)."""
+          relative_only: bool = False, sections=None) -> list:
+    """Returns a list of human-readable failure strings (empty = gate open).
+
+    ``sections``: optional set of bench section names — gate only metric
+    rows (and passes_* flags) belonging to those sections. Lets a CI leg
+    that reran ``serve_bench --sections a,b`` gate exactly what it
+    measured without tripping over sections another leg owns."""
     base = _acceptance_cells(baseline)
     new = _acceptance_cells(fresh)
     failures = []
     for path, higher, absolute, override in GATED_METRICS:
+        if sections is not None and _section_of(path) not in sections:
+            continue
         if absolute and relative_only:
             continue
         if absolute:
@@ -178,6 +217,8 @@ def check(baseline: dict, fresh: dict, threshold: float,
                 f"baseline {b:.3f}")
     if require_acceptance:
         for where, val in _pass_flags(fresh):
+            if sections is not None and _section_of(where) not in sections:
+                continue
             if not val:
                 failures.append(f"acceptance flag {where} is false")
     return failures
@@ -200,13 +241,19 @@ def main():
                          "baseline's machine)")
     ap.add_argument("--require-acceptance", action="store_true",
                     help="also fail on any false passes_* flag in fresh")
+    ap.add_argument("--sections", default=None,
+                    help="comma-separated bench section names: gate only "
+                         "rows and flags in those sections (matches "
+                         "serve_bench --sections legs)")
     args = ap.parse_args()
 
+    sections = ({s.strip() for s in args.sections.split(",") if s.strip()}
+                if args.sections else None)
     baseline = json.loads(args.baseline.read_text())
     fresh = json.loads(args.fresh.read_text())
     failures = check(baseline, fresh, args.threshold,
                      args.require_acceptance, args.abs_threshold,
-                     args.relative_only)
+                     args.relative_only, sections)
     if failures:
         print("\nBENCH GATE FAILED:")
         for f in failures:

@@ -132,8 +132,11 @@ def flash_prefill(q, k, v, *, causal: bool = True, window: int = 0,
 _PAGED_MAX_INTERPRET_GRID = 4096
 
 
-def _paged_dispatch(q, pool_k, pool_v, block_tables, start, window: int,
-                    k_scale=None, v_scale=None):
+def _paged_dispatch_local(q, pool_k, pool_v, block_tables, start, window: int,
+                          k_scale=None, v_scale=None):
+    """Single-device paged-attention dispatch (also the per-shard body under
+    the tp shard_map — the interpret-grid guard and oracle fallback then see
+    per-shard H, which is the point of passing this in whole)."""
     B, Sq, H, hd = q.shape
     ps = pool_k.shape[1]
     mps = block_tables.shape[1]
@@ -151,9 +154,26 @@ def _paged_dispatch(q, pool_k, pool_v, block_tables, start, window: int,
                                window=window, interpret=False, **sc)
 
 
-@functools.partial(jax.jit, static_argnames=("window",))
+def _paged_dispatch(q, pool_k, pool_v, block_tables, start, window: int,
+                    k_scale=None, v_scale=None, mesh=None, shard_axis=None):
+    if mesh is not None and shard_axis is not None:
+        return _pa.paged_attention_head_sharded(
+            _paged_dispatch_local, mesh, shard_axis, q, pool_k, pool_v,
+            block_tables, start, window=window,
+            k_scale=k_scale, v_scale=v_scale)
+    return _paged_dispatch_local(q, pool_k, pool_v, block_tables, start,
+                                 window, k_scale=k_scale, v_scale=v_scale)
+
+
+# mesh/shard_axis are STATIC jit args (Mesh is hashable), not read from the
+# sharding contextvar inside the traced body: these wrappers are module-level
+# jits whose trace cache keys on abstract args only, so a contextvar read
+# could silently reuse a non-mesh trace across engines. Callers resolve the
+# head-shard decision at their own trace time (sharding.specs.head_shard_axis)
+# and pass it down explicitly.
+@functools.partial(jax.jit, static_argnames=("window", "mesh", "shard_axis"))
 def paged_decode(q, pool_k, pool_v, block_tables, cache_pos, *,
-                 window: int = 0):
+                 window: int = 0, mesh=None, shard_axis=None):
     """Single-token decode attention against a paged KV cache.
 
     q: (B, 1, H, hd); pool_k/pool_v: (P, page_size, KV, hd) — one layer's
@@ -162,14 +182,15 @@ def paged_decode(q, pool_k, pool_v, block_tables, cache_pos, *,
     must already be WRITTEN at logical row cache_pos[b] — the write stays a
     plain block-table scatter outside the kernel). Gathers K/V blocks
     through the block table inside the kernel and skips fully-masked pages;
-    a freed slot (all--1 table) returns exactly 0."""
+    a freed slot (all--1 table) returns exactly 0. mesh/shard_axis (from
+    specs.head_shard_axis) route through the head-sharded shard_map."""
     return _paged_dispatch(q, pool_k, pool_v, block_tables, cache_pos,
-                           window)
+                           window, mesh=mesh, shard_axis=shard_axis)
 
 
-@functools.partial(jax.jit, static_argnames=("window",))
+@functools.partial(jax.jit, static_argnames=("window", "mesh", "shard_axis"))
 def paged_prefill(q, pool_k, pool_v, block_tables, start, *,
-                  window: int = 0):
+                  window: int = 0, mesh=None, shard_axis=None):
     """Continuation-chunk prefill attention against a paged KV cache.
 
     q: (B, C, H, hd) — C consecutive prompt positions, row i of slot b at
@@ -180,7 +201,8 @@ def paged_prefill(q, pool_k, pool_v, block_tables, start, *,
     ``k_pos <= q_pos`` over the slot's logical rows; pages wholly beyond
     the chunk's causal frontier (or unallocated) are skipped, so mask work
     scales with the slot's LIVE pages instead of O(C x s_max)."""
-    return _paged_dispatch(q, pool_k, pool_v, block_tables, start, window)
+    return _paged_dispatch(q, pool_k, pool_v, block_tables, start, window,
+                           mesh=mesh, shard_axis=shard_axis)
 
 
 @functools.partial(jax.jit, static_argnames=("window",))

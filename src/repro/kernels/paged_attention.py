@@ -226,3 +226,51 @@ def paged_attention(q, pool_k, pool_v, block_tables, start, *,
         out_shape=jax.ShapeDtypeStruct((B, Sq, H, hd), q.dtype),
         interpret=interpret,
     )(*prefetch, q, pool_k, pool_v)
+
+
+def paged_attention_head_sharded(dispatch, mesh, axis, q, pool_k, pool_v,
+                                 block_tables, start, *, window: int = 0,
+                                 k_scale=None, v_scale=None):
+    """Tensor-parallel head-shard dispatch around the paged kernel.
+
+    ``pallas_call`` lowers to a CustomCall that GSPMD cannot partition, so
+    the tp serve path wraps the local dispatch in an explicit ``shard_map``:
+    q and both pools split on their head axes over the ``axis`` mesh axis
+    (the pool leaves are already RESIDENT with exactly this sharding, so no
+    data moves for them); block tables, start positions, and the q8 page
+    scales are replicated — page ids are shard-invariant, and an int8
+    page's symmetric scale spans all its kv heads. Each shard runs the
+    unmodified kernel on its (B, H/tp, pages) sub-grid, and the outputs
+    concatenate back on the head axis. Per-head attention is independent,
+    so every output element is computed by exactly one shard with the same
+    op sequence as tp=1 — the basis of the bitwise tp equivalence anchor.
+
+    ``dispatch`` is the single-device dispatch to run per shard
+    (``ops._paged_dispatch_local`` — passed in so the interpret-grid guard
+    and the einsum oracle fallback see per-shard grid sizes). The caller
+    guarantees the axis size divides both H and KV on whole-GQA-group
+    boundaries (see sharding.specs.head_shard_axis)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as SP
+
+    heads = SP(None, None, axis, None)    # q/out (B,Sq,H,hd); pools (P,ps,KV,hd)
+    repl1 = SP(None)
+    repl2 = SP(None, None)
+
+    if k_scale is not None:
+        def body(q_, pk_, pv_, bt_, st_, ks_, vs_):
+            return dispatch(q_, pk_, pv_, bt_, st_, window,
+                            k_scale=ks_, v_scale=vs_)
+        return shard_map(
+            body, mesh=mesh,
+            in_specs=(heads, heads, heads, repl2, repl1, repl1, repl1),
+            out_specs=heads, check_rep=False,
+        )(q, pool_k, pool_v, block_tables, start, k_scale, v_scale)
+
+    def body(q_, pk_, pv_, bt_, st_):
+        return dispatch(q_, pk_, pv_, bt_, st_, window)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(heads, heads, heads, repl2, repl1),
+        out_specs=heads, check_rep=False,
+    )(q, pool_k, pool_v, block_tables, start)

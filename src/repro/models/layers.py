@@ -781,6 +781,7 @@ def attention_decode_paged(params, x, dims: AttnDims, pool_k, pool_v,
 
     if impl == "kernel":
         from repro.kernels import ops as kops
+        from repro.sharding import specs as _sp
         # freed slots (cache_pos >= n_rows) carry an all--1 table: every
         # page is skipped and the kernel returns 0 rows for them, so no
         # clamping of start is needed for the skip logic to stay sound
@@ -789,8 +790,10 @@ def attention_decode_paged(params, x, dims: AttnDims, pool_k, pool_v,
                                        block_tables, cache_pos,
                                        window=dims.window)
         else:
+            tp_mesh, tp_axis = _sp.head_shard_axis(H, KV)
             out = kops.paged_decode(q, pool_k, pool_v, block_tables,
-                                    cache_pos, window=dims.window)
+                                    cache_pos, window=dims.window,
+                                    mesh=tp_mesh, shard_axis=tp_axis)
         out = out.reshape(B, 1, H * hd)
     else:
         # ---- gather each slot's logical view and attend
@@ -808,6 +811,11 @@ def attention_decode_paged(params, x, dims: AttnDims, pool_k, pool_v,
                                        k_positions, dims.window, hd)
         out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
         out = out.transpose(0, 3, 1, 2, 4).reshape(B, 1, H * hd)
+    # tp serving: all-gather the head-sharded attention output BEFORE the
+    # output projection (NOT a psum of per-shard partial projections — an
+    # un-split wo contraction is what keeps tp>1 bitwise equal to tp=1)
+    from repro.sharding import specs as _sp
+    out = _sp.replicate(out)
     out = out @ params["wo"].astype(x.dtype)
     if quantized:
         return out, pool_k, pool_v, k_scale, v_scale
@@ -878,13 +886,16 @@ def attention_prefill_chunk_paged(params, x, dims: AttnDims, pool_k, pool_v,
 
     if impl == "kernel":
         from repro.kernels import ops as kops
+        from repro.sharding import specs as _sp
         if quantized:
             out = kops.paged_prefill_q8(q, pool_k, pool_v, k_scale, v_scale,
                                         block_tables, positions[:, 0],
                                         window=dims.window)
         else:
+            tp_mesh, tp_axis = _sp.head_shard_axis(H, KV)
             out = kops.paged_prefill(q, pool_k, pool_v, block_tables,
-                                     positions[:, 0], window=dims.window)
+                                     positions[:, 0], window=dims.window,
+                                     mesh=tp_mesh, shard_axis=tp_axis)
         out = out.reshape(B, C, H * hd)
     else:
         G = H // KV
@@ -906,6 +917,9 @@ def attention_prefill_chunk_paged(params, x, dims: AttnDims, pool_k, pool_v,
         probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
         out = jnp.einsum("bkgqs,bskh->bqkgh", probs, view_v.astype(q.dtype)
                          ).reshape(B, C, H * hd)
+    # all-gather head-sharded chunk outputs before wo (see decode path note)
+    from repro.sharding import specs as _sp
+    out = _sp.replicate(out)
     out = out @ params["wo"].astype(x.dtype)
     if quantized:
         return out, pool_k, pool_v, k_scale, v_scale

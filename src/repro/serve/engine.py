@@ -114,36 +114,58 @@ from repro.serve.scheduler import (Request, RequestState, SchedPolicy,
 log = logging.getLogger("repro.serve.engine")
 
 
+def _under_mesh(mesh, fn):
+    """Wrap a step function so it TRACES inside the tensor-parallel serving
+    mesh context: the with-block runs at trace time, so every
+    specs.shard/replicate/head_shard_axis call in model code resolves
+    against this mesh. TP_SERVE_RULES maps every logical axis to None —
+    the whole dataflow stays replicated except the KV pool (committed
+    sharded by the backend) and the attention core's shard_map; that is
+    what keeps tp>1 ticks bitwise equal to tp=1 (see sharding/specs.py)."""
+    if mesh is None:
+        return fn
+    from repro.sharding import specs as _specs
+
+    @functools.wraps(fn)
+    def wrapped(*args, **kwargs):
+        with _specs.use_mesh(mesh, _specs.TP_SERVE_RULES):
+            return fn(*args, **kwargs)
+    return wrapped
+
+
 # Jitted step functions are cached at module level keyed on the (frozen,
 # hashable) Model so several engine instances over the same architecture —
 # e.g. benchmark repetitions — share one compiled executable instead of
 # re-tracing per instance (compile time would otherwise dominate short runs).
+# The (hashable) mesh is part of every key: a mesh trace bakes shard_map
+# calls into the jaxpr, so mesh and no-mesh engines must never share one.
 @functools.lru_cache(maxsize=64)
-def _jitted_decode(model: Model, compute_dtype, paged_impl=None):
-    return jax.jit(steps_mod.make_decode_step(model,
-                                              compute_dtype=compute_dtype,
-                                              paged_attn_impl=paged_impl),
-                   donate_argnums=(1,))
+def _jitted_decode(model: Model, compute_dtype, paged_impl=None, mesh=None):
+    return jax.jit(_under_mesh(mesh, steps_mod.make_decode_step(
+        model, compute_dtype=compute_dtype, paged_attn_impl=paged_impl)),
+        donate_argnums=(1,))
 
 
 @functools.lru_cache(maxsize=64)
-def _jitted_prefill(model: Model, compute_dtype, s_max: int, cache_dtype):
-    return jax.jit(steps_mod.make_prefill(
+def _jitted_prefill(model: Model, compute_dtype, s_max: int, cache_dtype,
+                    mesh=None):
+    return jax.jit(_under_mesh(mesh, steps_mod.make_prefill(
         model, compute_dtype=compute_dtype, return_cache=True, s_max=s_max,
-        cache_dtype=cache_dtype))
+        cache_dtype=cache_dtype)))
 
 
 @functools.lru_cache(maxsize=64)
 def _jitted_prefill_chunk(model: Model, compute_dtype, s_max: int,
-                          cache_dtype, first: bool, attn_impl: str):
+                          cache_dtype, first: bool, attn_impl: str,
+                          mesh=None):
     """Parallel-prefill chunk executables. One jitted callable per
     (model, first) pair; jax retraces it per (batch K, chunk C) SHAPE — the
     engine's bucketed chunk ladder is what keeps that inner cache O(buckets)
     rather than O(distinct prompt lengths), and ``_note_prefill_trace``
     clears these caches if a caller defeats the bucketing."""
-    fn = steps_mod.make_prefill_chunk(
+    fn = _under_mesh(mesh, steps_mod.make_prefill_chunk(
         model, compute_dtype=compute_dtype, s_max=s_max,
-        cache_dtype=cache_dtype, first=first, attn_impl=attn_impl)
+        cache_dtype=cache_dtype, first=first, attn_impl=attn_impl))
     if first:
         return jax.jit(fn)
     return jax.jit(fn, donate_argnums=(1,))     # donate the transient cache
@@ -201,14 +223,15 @@ class _PrefillJob:
 
 
 @functools.lru_cache(maxsize=64)
-def _jitted_prefill_chunk_paged(model: Model, compute_dtype, attn_impl: str):
+def _jitted_prefill_chunk_paged(model: Model, compute_dtype, attn_impl: str,
+                                mesh=None):
     """Incremental paged-prefill chunk executables: ONE callable per model
     (no first/continuation split — every chunk writes into pages and attends
     them through the block table), retraced per (group K, chunk C) shape
     like the transient chunk path. The resident cache is donated: the pools
     update in place each chunk instead of round-tripping a transient copy."""
-    fn = steps_mod.make_prefill_chunk_paged(model, compute_dtype=compute_dtype,
-                                            attn_impl=attn_impl)
+    fn = _under_mesh(mesh, steps_mod.make_prefill_chunk_paged(
+        model, compute_dtype=compute_dtype, attn_impl=attn_impl))
     return jax.jit(fn, donate_argnums=(1,))
 
 
@@ -308,7 +331,8 @@ class ServeEngine:
                  max_prefill_traces: Optional[int] = None,
                  scheduler: Optional[Scheduler] = None,
                  metrics: Optional[MetricsRecorder] = None,
-                 policy: Optional[SchedPolicy] = None):
+                 policy: Optional[SchedPolicy] = None,
+                 mesh=None):
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -344,17 +368,47 @@ class ServeEngine:
         self.prefill_trace_evictions = 0
         self._jobs: List[_PrefillJob] = []
         self.max_prefill_tokens_per_tick = 0   # head-of-line bound witness
+        # SLO-aware scheduling policy: every SchedPolicy default is OFF, so
+        # policy=None keeps greedy token streams bit-identical to the
+        # pre-policy engine (the standing anchor discipline). Resolved
+        # before the scheduler so a default-built Scheduler inherits
+        # policy.edf.
+        self.policy = SchedPolicy() if policy is None else policy
         # explicit None checks: an EMPTY Scheduler is falsy (__bool__ tracks
         # queue depth), so `scheduler or Scheduler()` would silently discard
         # a caller's configured (e.g. prefix-aware) scheduler
-        self.scheduler = Scheduler() if scheduler is None else scheduler
+        self.scheduler = (Scheduler(edf=self.policy.edf)
+                          if scheduler is None else scheduler)
         self.metrics = MetricsRecorder() if metrics is None else metrics
-        # SLO-aware scheduling policy: every SchedPolicy default is OFF, so
-        # policy=None keeps greedy token streams bit-identical to the
-        # pre-policy engine (the standing anchor discipline)
-        self.policy = SchedPolicy() if policy is None else policy
         self._drr_cursor = 0          # rotates the DRR starting job per tick
         self._consec_prefill_ticks = 0  # starvation-guard state
+
+        # tensor-parallel serving mesh: the KV pool leaves commit sharded on
+        # their kv-head axis, params/activations replicate, and the paged
+        # attention core runs under shard_map (see sharding/specs.py for
+        # why that exact split keeps tp>1 bitwise equal to tp=1)
+        self.mesh = mesh
+        if mesh is not None:
+            from repro.sharding import specs as _specs
+            if page_size is None:
+                raise ValueError(
+                    "tensor-parallel serving needs a PAGED cache (pass "
+                    "page_size=): only the page pool has a mesh layout")
+            tp = (mesh.shape[_specs.TP_AXIS]
+                  if _specs.TP_AXIS in mesh.axis_names else 1)
+            if tp > 1 and self.cfg.num_kv_heads % tp:
+                raise ValueError(
+                    f"num_kv_heads={self.cfg.num_kv_heads} is not divisible "
+                    f"by tp={tp}; pick a tp dividing the kv-head count "
+                    "(whole GQA groups must stay shard-local)")
+            # weights replicate onto every mesh device (P() is rank-
+            # agnostic); activations follow via jit. Replicated weights are
+            # the deliberate choice here: splitting a projection's
+            # contraction would psum partial sums in a shard-dependent
+            # order and break the bitwise tp anchor.
+            from jax.sharding import NamedSharding, PartitionSpec
+            self.params = jax.device_put(
+                self.params, NamedSharding(mesh, PartitionSpec()))
 
         if page_size is not None and model.cfg.family == Family.SSM:
             log.warning("ssm/rwkv state is O(1) in s_max — ignoring paging")
@@ -373,7 +427,7 @@ class ServeEngine:
             # orchestration state that follows (allocator, block tables)
             self.backend: KVBackend = make_backend(
                 kv_backend, family=self.cfg.family, page_size=page_size,
-                num_pages=self.num_pages)
+                num_pages=self.num_pages, mesh=mesh)
             # rows one slot's attention cache can hold (ring width for hybrid)
             self.capacity = self.backend.capacity(self.cfg, s_max)
             self.allocator = PageAllocator(self.num_pages)
@@ -381,7 +435,8 @@ class ServeEngine:
             self._bt_host = np.full((batch_slots, self.max_pages_per_slot),
                                     -1, np.int32)
         else:
-            self.backend = make_backend(kv_backend, family=self.cfg.family)
+            self.backend = make_backend(kv_backend, family=self.cfg.family,
+                                        mesh=mesh)
         self.cache = self.backend.init_cache(model, batch_slots, s_max,
                                              self.cache_dtype)
 
@@ -443,7 +498,7 @@ class ServeEngine:
         self._cancel_at_splice: set = set()
         self._decode = _jitted_decode(
             model, compute_dtype,
-            self.paged_attn_impl if self.paged else None)
+            self.paged_attn_impl if self.paged else None, mesh)
 
         # (head rid, free pages, index version) at the last deferral: admit()
         # short-circuits while nothing that could change the outcome has
@@ -472,13 +527,35 @@ class ServeEngine:
               prefill_attn_impl: str = "auto",
               paged_attn_impl: str = "auto",
               policy: Optional[SchedPolicy] = None,
-              compute_dtype=jnp.float32) -> "ServeEngine":
+              compute_dtype=jnp.float32,
+              tp: Optional[int] = None,
+              cfg_overrides: Optional[dict] = None) -> "ServeEngine":
         """Construct model + params from an arch id; the int8 PTQ path is the
         same structural quantize->dequant-on-load as the paper's C5 (the
-        pallas quant_matmul kernel consumes q directly on TPU)."""
+        pallas quant_matmul kernel consumes q directly on TPU).
+
+        ``tp``: tensor-parallel degree — builds a 1-axis serving mesh over
+        the first ``tp`` local devices (tp=1 is a legal 1-device mesh: it
+        exercises the whole mesh code path and is the bit-exactness anchor
+        against mesh=None). ``cfg_overrides``: dataclasses.replace fields
+        applied AFTER reduction — reduced configs can shrink num_kv_heads
+        to 1 (e.g. qwen2.5-32b's 40h/8kv reduces to 4h/1kv), which blocks
+        kv-head sharding; the tp tests/bench override the head counts while
+        keeping everything else reduced."""
         cfg = configs.get_config(arch)
         if reduced:
             cfg = reduced_config(cfg)
+        if cfg_overrides:
+            cfg = dataclasses.replace(cfg, **cfg_overrides)
+        mesh = None
+        if tp is not None:
+            from repro.sharding import specs as _specs
+            ndev = len(jax.devices())
+            if tp < 1 or tp > ndev:
+                raise ValueError(f"tp={tp} needs 1..{ndev} local devices "
+                                 "(CPU tests force 8 via XLA_FLAGS="
+                                 "--xla_force_host_platform_device_count=8)")
+            mesh = jax.make_mesh((tp,), (_specs.TP_AXIS,))
         model = get_model(cfg)
         params = model.init(jax.random.PRNGKey(seed))
         if quantize_int8:
@@ -492,7 +569,8 @@ class ServeEngine:
                    prefill_mode=prefill_mode,
                    prefill_chunk_tokens=prefill_chunk_tokens,
                    prefill_attn_impl=prefill_attn_impl,
-                   paged_attn_impl=paged_attn_impl, policy=policy, seed=seed)
+                   paged_attn_impl=paged_attn_impl, policy=policy, seed=seed,
+                   mesh=mesh)
 
     # ------------------------------------------------------------ extras
     def _decode_extras(self) -> dict:
@@ -507,16 +585,16 @@ class ServeEngine:
 
     def _prefill_fn(self) -> Callable:
         return _jitted_prefill(self.model, self.compute_dtype, self.s_max,
-                               self.cache_dtype)
+                               self.cache_dtype, self.mesh)
 
     def _chunk_fn(self, first: bool) -> Callable:
         return _jitted_prefill_chunk(self.model, self.compute_dtype,
                                      self.s_max, self.cache_dtype, first,
-                                     self.prefill_attn_impl)
+                                     self.prefill_attn_impl, self.mesh)
 
     def _chunk_paged_fn(self) -> Callable:
         return _jitted_prefill_chunk_paged(self.model, self.compute_dtype,
-                                           self.paged_attn_impl)
+                                           self.paged_attn_impl, self.mesh)
 
     @property
     def prefill_trace_count(self) -> int:
@@ -645,17 +723,38 @@ class ServeEngine:
 
     def resident_cache_bytes(self) -> int:
         """Device bytes held by the resident serving cache (the paged pool
-        plus per-slot leaves; for dense, the full slots x s_max block)."""
+        plus per-slot leaves; for dense, the full slots x s_max block).
+        GLOBAL logical bytes — under a tp mesh the pool is spread over the
+        shards; see per_shard_kv_bytes for the per-device footprint."""
         return int(sum(l.size * l.dtype.itemsize
                        for l in jax.tree.leaves(self.cache)))
+
+    def per_shard_kv_bytes(self) -> int:
+        """PER-DEVICE resident bytes of the K/V pool leaves (plus their
+        per-page scale metadata), via each leaf's committed sharding — the
+        number the tp bench gates at ~1/tp of the global pool. Works
+        unmeshed too (single-device sharding: per-shard == global)."""
+        total = 0
+        for key in ("k", "v", "k_scale", "v_scale"):
+            leaf = self.cache.get(key) if isinstance(self.cache, dict) else None
+            if leaf is None:
+                continue
+            shard_shape = leaf.sharding.shard_shape(leaf.shape)
+            total += int(np.prod(shard_shape)) * leaf.dtype.itemsize
+        return total
 
     @property
     def free_pages(self) -> int:
         return self.allocator.free if self.paged else 0
 
     # ------------------------------------------------------------ lifecycle
-    def submit(self, prompt, gen_len: int, priority: int = 0) -> Request:
+    def submit(self, prompt, gen_len: int, priority: int = 0,
+               deadline: Optional[float] = None) -> Request:
         """Enqueue a request; admission happens on the next step()/run().
+
+        ``deadline``: optional absolute completion deadline (caller's
+        clock). Consumed by an EDF scheduler (SchedPolicy.edf) to order
+        same-priority admissions earliest-deadline-first; inert otherwise.
 
         Rejects up front anything that can never be served, so admission is
         infallible and a bad request cannot strand already-popped good ones:
@@ -690,6 +789,8 @@ class ServeEngine:
         self._next_rid += 1
         req = Request(rid=rid, prompt=prompt,
                       gen_len=int(gen_len), priority=priority)
+        if deadline is not None:
+            req.deadline = float(deadline)
         if (self.prefix_index is not None
                 and getattr(self.scheduler, "prefix_aware", False)):
             # advisory ordering hint for a prefix-aware scheduler; does not

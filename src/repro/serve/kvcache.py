@@ -269,21 +269,57 @@ class DenseBackend(KVBackend):
         return _jitted_insert_rows()(cache, request_cache, slots)
 
 
+def _tp_degree(mesh) -> int:
+    """Size of the serving mesh's tensor-parallel axis (1 if no mesh)."""
+    if mesh is None:
+        return 1
+    from repro.sharding import specs as _sp
+    if _sp.TP_AXIS not in mesh.axis_names:
+        return 1
+    return mesh.shape[_sp.TP_AXIS]
+
+
 class PagedFP32Backend(KVBackend):
     """The vLLM-style shared fp32/bf16 page pool (the pre-backend layout,
-    bit-for-bit)."""
+    bit-for-bit).
+
+    ``mesh``: optional serving mesh. When set, ``init_cache`` COMMITS the
+    K/V pool leaves sharded on their kv-head axis over the mesh's tp axis
+    (each device then holds a ``(L, P, ps, KV/tp, hd)`` resident slice) and
+    every other leaf replicated — page ids are shard-invariant, so block
+    tables, positions, and the host-side allocator/prefix index never learn
+    the mesh exists. The splice/COW/seed jits below need no shard_map: they
+    are elementwise scatters/gathers over replicated row indices, which
+    GSPMD partitions along the already-sharded kv-head axis without
+    introducing any cross-shard reduction (bitwise-safe)."""
 
     name = "paged"
     paged = True
 
-    def __init__(self, page_size: int, num_pages: int):
+    def __init__(self, page_size: int, num_pages: int, mesh=None):
         self.page_size = page_size
         self.num_pages = num_pages
+        self.mesh = mesh
 
     def init_cache(self, model: Model, batch_slots: int, s_max: int, dtype):
-        return init_paged_cache(model, batch_slots, s_max,
-                                page_size=self.page_size,
-                                num_pages=self.num_pages, dtype=dtype)
+        cache = init_paged_cache(model, batch_slots, s_max,
+                                 page_size=self.page_size,
+                                 num_pages=self.num_pages, dtype=dtype)
+        return self._place(cache)
+
+    def _place(self, cache):
+        if self.mesh is None:
+            return cache
+        from repro.sharding import specs as _sp
+        shardings = {}
+        with _sp.use_mesh(self.mesh, _sp.TP_POOL_RULES):
+            for key, leaf in cache.items():
+                if key in ("k", "v") and leaf.ndim == len(_sp.KV_POOL_AXES):
+                    axes = _sp.KV_POOL_AXES
+                else:
+                    axes = (None,) * leaf.ndim
+                shardings[key] = _sp.sharding_for(leaf.shape, axes)
+        return jax.device_put(cache, shardings)
 
     def insert_rows(self, cache, request_cache, slots, phys_rows=None):
         return _jitted_insert_rows_paged()(cache, request_cache, slots,
@@ -312,6 +348,19 @@ class PagedInt8Backend(PagedFP32Backend):
     name = "paged_int8"
     quantized = True
 
+    def __init__(self, page_size: int, num_pages: int, mesh=None):
+        if _tp_degree(mesh) > 1:
+            # the write paths recompute each touched page's symmetric scale
+            # as an amax over (page_size, KV, hd) — a CROSS-SHARD max once
+            # kv heads shard. (The q8 READ path would work as-is: scales
+            # are per-page, replicated.) Follow-on: shard-local amax +
+            # a tiny all-reduce-max on the touched-page set.
+            raise ValueError(
+                "paged_int8 KV backend does not support tensor-parallel "
+                "serving yet (per-page requant needs a cross-shard amax); "
+                "use kv_backend='paged' with tp>1")
+        super().__init__(page_size, num_pages, mesh)
+
     def init_cache(self, model: Model, batch_slots: int, s_max: int, dtype):
         base = super().init_cache(model, batch_slots, s_max, dtype)
         out = dict(base)
@@ -320,7 +369,7 @@ class PagedInt8Backend(PagedFP32Backend):
             # scale 1.0 everywhere: a never-written page dequants to exact
             # zeros, same as the fp32 pool's zero init
             out[key + "_scale"] = jnp.ones(base[key].shape[:2], jnp.float32)
-        return out
+        return self._place(out)
 
     def insert_rows(self, cache, request_cache, slots, phys_rows=None):
         return _jitted_insert_rows_q8()(cache, request_cache, slots,
@@ -346,13 +395,19 @@ class PagedInt8Backend(PagedFP32Backend):
                 f"{key} has non-finite or non-positive entries"
 
 
-def make_backend(spec, *, family: Family, page_size=None, num_pages=None):
+def make_backend(spec, *, family: Family, page_size=None, num_pages=None,
+                 mesh=None):
     """Resolve an engine ``kv_backend`` spec: None (layout follows
     page_size), a registered name ('dense' | 'paged' | 'paged_fp32' |
     'paged_int8'), or a ready KVBackend instance. Int8 on an unsupported
     family degrades to fp32 pages with a warning rather than failing — the
-    caller keeps a correct serving path."""
+    caller keeps a correct serving path. ``mesh``: optional serving mesh the
+    paged backends commit their pool onto (kv-head-sharded; see
+    PagedFP32Backend)."""
     if isinstance(spec, KVBackend):
+        if mesh is not None and getattr(spec, "mesh", None) is not mesh:
+            raise ValueError("a ready KVBackend instance must be built with "
+                             "the engine's mesh (pass mesh= to its ctor)")
         return spec
     if spec is None:
         spec = "paged" if page_size is not None else "dense"
@@ -360,16 +415,20 @@ def make_backend(spec, *, family: Family, page_size=None, num_pages=None):
         if page_size is not None:
             raise ValueError("kv_backend='dense' conflicts with page_size="
                              f"{page_size}; drop one of them")
+        if _tp_degree(mesh) > 1:
+            raise ValueError("tensor-parallel serving shards the PAGED pool "
+                             "(page indices are shard-invariant); the dense "
+                             "backend has no mesh layout — pass page_size=")
         return DenseBackend()
     if page_size is None:
         raise ValueError(f"kv_backend={spec!r} needs page_size")
     if spec in ("paged", "paged_fp32"):
-        return PagedFP32Backend(page_size, num_pages)
+        return PagedFP32Backend(page_size, num_pages, mesh=mesh)
     if spec == "paged_int8":
         if family not in INT8_KV_FAMILIES:
             log.warning("paged_int8 KV backend supports %s (got %s); "
                         "falling back to fp32 pages",
                         [f.name for f in INT8_KV_FAMILIES], family)
-            return PagedFP32Backend(page_size, num_pages)
-        return PagedInt8Backend(page_size, num_pages)
+            return PagedFP32Backend(page_size, num_pages, mesh=mesh)
+        return PagedInt8Backend(page_size, num_pages, mesh=mesh)
     raise ValueError(f"unknown kv_backend {spec!r}")

@@ -8,6 +8,7 @@ import dataclasses
 import enum
 import heapq
 import itertools
+import math
 from typing import List, Optional
 
 import numpy as np
@@ -49,6 +50,10 @@ class Request:
     # preemption; a later preemption folds only ``tokens[folded:]`` so a
     # twice-preempted request never duplicates context
     folded: int = 0
+    # absolute completion deadline (same clock the caller schedules on;
+    # the scheduler only compares values). inf = no deadline — sorts after
+    # every dated request under EDF and leaves pure-FIFO streams unchanged.
+    deadline: float = math.inf
 
     @property
     def remaining(self) -> int:
@@ -95,17 +100,26 @@ class SchedPolicy:
     admission_low_water: float = 0.0
     admission_shed_priority: Optional[int] = None
     admission_shed: bool = True
+    # SLO-aware admission ordering: earliest-deadline-first WITHIN a
+    # priority level (priority still dominates; undated requests keep FIFO
+    # among themselves behind every dated one). Off = pure FIFO, the
+    # bit-exact anchor.
+    edf: bool = False
 
 
 class Scheduler:
     """Priority + FIFO admission queue, optionally prefix-aware.
 
     ``submit`` pushes; ``next_request`` pops the lowest (priority, hint
-    rank, seq) tuple. A monotone sequence number breaks ties so
-    equal-priority requests leave in arrival order and the heap never
+    rank, deadline key, seq) tuple. A monotone sequence number breaks ties
+    so equal-priority requests leave in arrival order and the heap never
     compares Request objects directly. The sequence number is assigned once
     per request and survives re-queues (preemption), so a paused request
-    keeps its arrival position.
+    keeps its arrival position. ``edf=True`` (SchedPolicy.edf) makes the
+    deadline key ``Request.deadline`` — earliest-deadline-first within a
+    (priority, hint-rank) class, with undated (inf) requests in FIFO order
+    behind the dated ones; off, the key is constant and ordering is the
+    exact pre-EDF FIFO.
 
     Lazily-cancelled requests (``cancel()`` flips a QUEUED request to
     CANCELLED without touching the heap) are pruned here, at the single
@@ -131,11 +145,12 @@ class Scheduler:
     """
 
     def __init__(self, prefix_aware: bool = False,
-                 hint_max_bypasses: int = 4):
+                 hint_max_bypasses: int = 4, edf: bool = False):
         self._heap: list = []
         self._seq = itertools.count()
         self.prefix_aware = prefix_aware
         self.hint_max_bypasses = hint_max_bypasses
+        self.edf = edf
         self._bypasses = 0            # consecutive hinted-over-unhinted pops
 
     def _rank(self, req: Request) -> int:
@@ -143,13 +158,22 @@ class Scheduler:
             return 0
         return 0 if req.prefix_hint > 0 else 1
 
+    def _dkey(self, req: Request) -> float:
+        """EDF sort key between (priority, hint-rank) and arrival seq: the
+        request deadline when EDF is on, a constant otherwise (ordering then
+        falls through to seq — exact FIFO, the anchor behavior). Undated
+        requests carry deadline=inf, so among themselves they stay FIFO and
+        every dated request overtakes them within the priority level."""
+        return req.deadline if self.edf else 0.0
+
     def submit(self, req: Request) -> Request:
         if req.state != RequestState.QUEUED:
             raise ValueError(f"request {req.rid} is {req.state}, not QUEUED")
         if req.seq is None:
             req.seq = next(self._seq)
         heapq.heappush(self._heap,
-                       (req.priority, self._rank(req), req.seq, req))
+                       (req.priority, self._rank(req), self._dkey(req),
+                        req.seq, req))
         return req
 
     def _prune(self):
@@ -168,7 +192,7 @@ class Scheduler:
         if popped_rank != 0:              # an unhinted request was served:
             self._bypasses = 0            # the stream is not starving anyone
             return
-        victims = [i for i, (p, rank, seq, r) in enumerate(self._heap)
+        victims = [i for i, (p, rank, dk, seq, r) in enumerate(self._heap)
                    if p == popped_prio and rank == 1 and seq < popped_seq
                    and r.state is not RequestState.CANCELLED]
         if not victims:
@@ -177,9 +201,9 @@ class Scheduler:
         self._bypasses += 1
         if self._bypasses < self.hint_max_bypasses:
             return
-        oldest = min(victims, key=lambda i: self._heap[i][2])
-        prio, _, seq, req = self._heap[oldest]
-        self._heap[oldest] = (prio, 0, seq, req)
+        oldest = min(victims, key=lambda i: self._heap[i][3])
+        prio, _, dk, seq, req = self._heap[oldest]
+        self._heap[oldest] = (prio, 0, dk, seq, req)
         heapq.heapify(self._heap)
         self._bypasses = 0
 
@@ -187,7 +211,7 @@ class Scheduler:
         self._prune()
         if not self._heap:
             return None
-        prio, rank, seq, req = heapq.heappop(self._heap)
+        prio, rank, dk, seq, req = heapq.heappop(self._heap)
         self._age_hint(prio, rank, seq)
         return req
 

@@ -51,6 +51,32 @@ SERVE_RULES: Tuple[Tuple[str, Logical], ...] = tuple(
     (k, None) if k == "fsdp" else (k, v) for k, v in DEFAULT_RULES
 )
 
+# Tensor-parallel SERVING rules (the serve engine's mesh trace context):
+# every logical axis resolves to None, so each existing with_sharding_
+# constraint in model code becomes a replicate — the entire decode/prefill
+# dataflow outside the head-sharded attention core stays replicated. That is
+# deliberate, not a placeholder: replicated projections + per-head-
+# independent attention + an all-gather of head outputs before the output
+# projection make a tp>1 tick BITWISE identical to tp=1 (no float sum is
+# ever split across shards), which is the anchor the tp equivalence tests
+# gate on. The KV pool is the one sharded resident — its placement goes
+# through TP_POOL_RULES below, and the kernel's head slicing through
+# shard_map (see kernels/paged_attention.py::paged_attention_head_sharded).
+TP_SERVE_RULES: Tuple[Tuple[str, Logical], ...] = tuple(
+    (k, None) for k, _ in DEFAULT_RULES
+)
+
+# Rules used ONLY to place the paged KV pool: the kv-head axis shards over
+# 'model'; page geometry (page ids, page rows) is shard-invariant so block
+# tables and the host-side allocator/prefix index stay replicated.
+TP_POOL_RULES: Tuple[Tuple[str, Logical], ...] = (("kv_heads", "model"),)
+
+# Logical axes of one paged K/V pool leaf (L, num_pages, page_size, KV, hd):
+# only the kv-head axis is shardable — every page holds all of a shard's
+# kv-head slice for its rows, so page indices mean the same thing on every
+# shard and the block tables replicate untouched.
+KV_POOL_AXES: Tuple[Logical, ...] = (None, None, None, "kv_heads", None)
+
 
 class _Ctx:
     def __init__(self, mesh: Optional[Mesh], rules):
@@ -148,6 +174,55 @@ def shard(x, *logical_axes: Logical):
         )
     fitted = _fit_axes(x.shape, logical_axes)
     return jax.lax.with_sharding_constraint(x, named_sharding(*fitted))
+
+
+def sharding_for(shape, logical_axes) -> Optional[NamedSharding]:
+    """Shape-aware ``named_sharding`` for ONE array: logical axes whose mesh
+    size does not divide the dim are dropped (replicated). None if no mesh."""
+    mesh = active_mesh()
+    if mesh is None:
+        return None
+    return named_sharding(*_fit_axes(shape, logical_axes))
+
+
+def replicate(x):
+    """Constrain x fully replicated under the active mesh (identity if none).
+
+    The tensor-parallel serve path calls this on the head-sharded attention
+    output right BEFORE the output projection: it is the one all-gather of
+    the tp decode tick, and putting it before (not after, as a psum of
+    partial projections) keeps the wo contraction un-split and the tick
+    bitwise equal to tp=1."""
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*([None] * x.ndim))))
+
+
+# Mesh axis the serve engine uses for tensor parallelism. Checked directly
+# against mesh.axis_names (not through the rules table) because the tp serve
+# trace context deliberately maps every logical axis to None — the kernel's
+# head slicing happens inside shard_map, not via GSPMD constraints.
+TP_AXIS = "model"
+
+
+def head_shard_axis(num_heads: int, num_kv_heads: int):
+    """Resolve the head-sharding decision for a paged-attention call site.
+
+    Returns ``(mesh, axis_name)`` when the active mesh has a >1-sized
+    ``TP_AXIS`` that divides BOTH head counts (each shard then owns whole
+    GQA groups: kv head ``k`` and its query heads ``k*G..k*G+G-1`` land on
+    the same shard, so the kernel's ``h // G`` pool indexing stays local).
+    Returns ``(None, None)`` otherwise — callers fall back to the exact
+    single-device dispatch, keeping non-divisible configs correct."""
+    mesh = active_mesh()
+    if mesh is None or TP_AXIS not in mesh.axis_names:
+        return None, None
+    tp = mesh.shape[TP_AXIS]
+    if tp <= 1 or num_kv_heads % tp or num_heads % tp:
+        return None, None
+    return mesh, TP_AXIS
 
 
 def _is_logical_leaf(v):

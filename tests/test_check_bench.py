@@ -49,6 +49,20 @@ BASE = {
                        "passes_roofline_bound": True,
                        "goodput_tokens_per_s": 120.0},
     },
+    "tp": {
+        "cells": [{"tp": 2, "decode_tokens_per_s": 300.0,
+                   "per_shard_kv_bytes": 65536,
+                   "kv_bytes_ratio_vs_tp1": 0.5}],
+        "acceptance": {"passes_greedy_match": True,
+                       "passes_shard_bytes": True,
+                       "per_shard_kv_bytes_ratio": 0.5},
+    },
+    "router": {
+        "affinity_prefill_tokens_per_s": 9000.0,
+        "round_robin_prefill_tokens_per_s": 5000.0,
+        "acceptance": {"affinity_speedup": 1.8,
+                       "passes_affinity_gain": True},
+    },
 }
 
 
@@ -150,6 +164,23 @@ def test_boolean_flag_rows_gate_true_to_false_flips():
     base = copy.deepcopy(BASE)
     base["goodput"]["acceptance"]["passes_slo_gain"] = False
     assert check(base, copy.deepcopy(BASE), 0.2, False) == []
+
+
+def test_sections_filter_scopes_rows_and_flags():
+    """--sections gates only the named sections: a failing row/flag outside
+    the scope is invisible to that leg, inside it still fails."""
+    fresh = copy.deepcopy(BASE)
+    fresh["router"]["acceptance"]["passes_affinity_gain"] = False
+    fresh["tp"]["acceptance"]["per_shard_kv_bytes_ratio"] = 1.0   # worse
+    fails = check(copy.deepcopy(BASE), fresh, 0.2, True)
+    assert any("passes_affinity_gain" in f for f in fails)
+    assert any("per_shard_kv_bytes_ratio" in f for f in fails)
+    assert check(copy.deepcopy(BASE), fresh, 0.2, True,
+                 sections={"goodput"}) == []
+    fails = check(copy.deepcopy(BASE), fresh, 0.2, True,
+                  sections={"tp", "router"})
+    assert any("passes_affinity_gain" in f for f in fails)
+    assert any("per_shard_kv_bytes_ratio" in f for f in fails)
 
 
 def test_every_gated_metric_resolvable_in_reference_shape():

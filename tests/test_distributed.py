@@ -25,6 +25,87 @@ def test_rule_filtering():
         assert p[1] is None
 
 
+def test_shard_rank_mismatch_raises():
+    """Under an active mesh, shard() validates rank BEFORE fitting axes —
+    a wrong-arity call is a bug at the call site, not a layout decision."""
+    import jax
+    import jax.numpy as jnp
+    import pytest
+    mesh = jax.make_mesh((1,), ("model",))
+    x = jnp.ones((4, 4))
+    with specs.use_mesh(mesh):
+        with pytest.raises(ValueError, match="rank mismatch"):
+            specs.shard(x, "batch", None, "heads")
+    # no mesh: identity, rank never checked (models run untouched)
+    assert specs.shard(x, "batch", None, "heads") is x
+
+
+def test_use_mesh_nesting_restores_outer():
+    """Nested use_mesh contexts stack: the inner mesh/rules win inside,
+    the outer (or the no-mesh default) is restored on exit."""
+    import jax
+    outer = jax.make_mesh((1,), ("data",))
+    inner = jax.make_mesh((1,), ("model",))
+    assert specs.active_mesh() is None
+    with specs.use_mesh(outer, specs.DEFAULT_RULES):
+        assert specs.active_mesh() is outer
+        with specs.use_mesh(inner, specs.TP_SERVE_RULES):
+            assert specs.active_mesh() is inner
+            # TP serve rules: every logical axis resolves replicated
+            assert specs.resolve("heads", "d_ff") == jax.sharding.PartitionSpec(
+                None, None)
+        assert specs.active_mesh() is outer
+        # DEFAULT_RULES restored: batch maps through ('pod','data') -> data
+        assert specs.resolve("batch")[0] == "data"
+    assert specs.active_mesh() is None
+
+
+def test_spec_helpers_on_real_axes(multidevice):
+    """axis_size / resolve / _fit_axes divisibility fallback / sharding_for
+    against a mesh whose axes actually have size > 1 (subprocess: the parent
+    test process is single-device)."""
+    out = multidevice("""
+        import jax
+        from jax.sharding import PartitionSpec as P
+        from repro.sharding import specs
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        with specs.use_mesh(mesh):
+            assert specs.axis_size("heads") == 4          # heads -> model
+            assert specs.axis_size("batch") == 2          # (pod,data) -> data
+            assert specs.axis_size("kv_seq") == 1         # unmapped
+            assert specs.resolve("batch", "heads") == P("data", "model")
+
+            # _fit_axes: axes whose size does not divide the dim DROP
+            assert specs._fit_axes((8, 12), ("batch", "heads")) == \\
+                ("batch", "heads")
+            assert specs._fit_axes((8, 10), ("batch", "heads")) == \\
+                ("batch", None)                            # 10 % 4 != 0
+            assert specs._fit_axes((3, 12), ("batch", "heads")) == \\
+                (None, "heads")                            # 3 % 2 != 0
+
+            # sharding_for is the one-array, shape-aware named_sharding
+            sh = specs.sharding_for((2, 8, 16, 4, 8), specs.KV_POOL_AXES)
+            assert sh.spec == P(None, None, None, "model", None)
+            sh = specs.sharding_for((2, 8, 16, 5, 8), specs.KV_POOL_AXES)
+            assert sh.spec == P(None, None, None, None, None)  # 5 % 4
+
+        with specs.use_mesh(mesh, specs.TP_POOL_RULES):
+            assert specs.axis_size("kv_heads") == 4
+            assert specs.axis_size("heads") == 1          # not in pool rules
+
+        # head_shard_axis: resolves only when tp divides BOTH head counts
+        tp_mesh = jax.make_mesh((4,), ("model",))
+        with specs.use_mesh(tp_mesh, specs.TP_SERVE_RULES):
+            assert specs.head_shard_axis(8, 4) == (tp_mesh, "model")
+            assert specs.head_shard_axis(8, 2) == (None, None)   # 2 % 4
+            assert specs.head_shard_axis(6, 4) == (None, None)   # 6 % 4
+        assert specs.head_shard_axis(8, 4) == (None, None)       # no mesh
+        print("OK")
+    """)
+    assert "OK" in out
+
+
 # ------------------------------------------------------------- multi-device
 def test_sharded_training_matches_single_device(multidevice):
     out = multidevice("""

@@ -1,0 +1,146 @@
+"""Prefix-affinity replica router (serve/router.py).
+
+Host-only logic over real reduced engines (single device — the router
+never touches the mesh): affinity keying, rendezvous stability, least-
+loaded fallback, spill/shed back-pressure, and end-to-end integrity of a
+routed stream (every submission either completes on exactly one replica or
+is counted shed at the door).
+"""
+import numpy as np
+import pytest
+
+from repro.serve.engine import ServeEngine
+from repro.serve.router import ReplicaRouter
+
+PS = 16
+
+
+def _engine(**kw):
+    kw.setdefault("batch_slots", 2)
+    kw.setdefault("s_max", 64)
+    kw.setdefault("page_size", PS)
+    return ServeEngine.build("qwen2.5-32b", **kw)
+
+
+def _tier(n=2, **kw):
+    return [_engine(**kw) for _ in range(n)]
+
+
+def _prompt(header_token: int, tail_len: int, tail_token: int = 7):
+    header = np.full(2 * PS, header_token, np.int32)    # 2 full pages
+    return np.concatenate([header, np.full(tail_len, tail_token, np.int32)])
+
+
+class TestKeying:
+    def test_equal_headers_one_replica(self):
+        router = ReplicaRouter(_tier(4))
+        picks = {router.pick(_prompt(3, tail)) for tail in (1, 5, 9, 13)}
+        assert len(picks) == 1, "same page-aligned header must colocate"
+
+    def test_tail_inside_header_page_changes_key(self):
+        router = ReplicaRouter(_tier(4), header_pages=4)
+        a = router.header_key(_prompt(3, 1))
+        b = np.concatenate([np.full(2 * PS, 3, np.int32),
+                            np.full(PS, 9, np.int32)])   # 3rd FULL page differs
+        assert router.header_key(b) != a
+
+    def test_headerless_goes_least_loaded(self):
+        engines = _tier(2)
+        router = ReplicaRouter(engines)
+        short = np.arange(1, PS, dtype=np.int32)         # < one page
+        assert router.header_key(short) is None
+        # load replica 0 so least-loaded must answer 1
+        engines[0].submit(_prompt(5, 3), 4)
+        assert router.pick(short) == 1
+        router.submit(short, 1)
+        assert router.headerless == 1
+
+    def test_affinity_needs_uniform_paged_tier(self):
+        mixed = [_engine(), _engine(page_size=32)]
+        with pytest.raises(ValueError, match="page_size"):
+            ReplicaRouter(mixed)
+        ReplicaRouter(mixed, affinity=False)             # least-loaded is fine
+
+
+class TestBackpressure:
+    def test_spill_to_least_loaded(self):
+        engines = _tier(2)
+        router = ReplicaRouter(engines, queue_limit=2)
+        p = _prompt(3, 5)
+        want = router.pick(p)
+        # saturate the affinity target's queue without ticking
+        for _ in range(2):
+            engines[want].submit(_prompt(3, 5), 4)
+        res = router.submit(p, 4)
+        assert res is not None
+        _, target = res
+        assert target != want
+        assert router.spills == 1
+
+    def test_shed_when_tier_saturated(self):
+        engines = _tier(2)
+        router = ReplicaRouter(engines, queue_limit=1)
+        for e in engines:
+            e.submit(_prompt(3, 5), 4)
+        assert router.submit(_prompt(3, 5), 4) is None
+        assert sum(router.sheds) == 1
+
+    def test_no_limit_never_sheds(self):
+        router = ReplicaRouter(_tier(2))
+        for i in range(8):
+            assert router.submit(_prompt(i, 3), 2) is not None
+        assert sum(router.sheds) == 0 and router.spills == 0
+
+
+class TestEndToEnd:
+    def test_routed_stream_completes_everywhere(self):
+        router = ReplicaRouter(_tier(2))
+        reqs = [router.submit(_prompt(i % 3, 3 + i), 4)[0] for i in range(6)]
+        router.drain()
+        assert all(r.done and r.error is None for r in reqs)
+        assert sum(router.routed) == 6
+        # three header groups over rendezvous: tokens generated on whichever
+        # replica must match a single-engine run of the same prompt
+        solo = _engine()
+        r = solo.submit(_prompt(0, 3), 4)
+        solo.run()
+        match = [q for q in reqs if len(q.prompt) == 2 * PS + 3
+                 and q.prompt[0] == 0]
+        assert match and match[0].tokens == r.tokens
+
+    def test_round_robin_mode_spreads(self):
+        router = ReplicaRouter(_tier(2), affinity=False)
+        for i in range(6):
+            router.submit(_prompt(3, 5), 2)   # identical headers on purpose
+        assert router.routed == [3, 3]
+
+    def test_affinity_partitions_headers(self):
+        router = ReplicaRouter(_tier(2))
+        for g in range(6):
+            for _ in range(3):
+                router.submit(_prompt(g, 4), 2)
+        # every header group lands wholly on one replica
+        assert router.affine == 18
+        per_group = {}
+        for g in range(6):
+            per_group[g] = router.pick(_prompt(g, 9))
+        router.drain()
+        counts = router.routed
+        assert sum(counts) == 18
+        expected = [3 * sum(1 for g, i in per_group.items() if i == 0),
+                    3 * sum(1 for g, i in per_group.items() if i == 1)]
+        assert counts == expected
+
+    def test_replay_accounts_for_everything(self):
+        from repro.serve.workload import ArrivalEvent
+        rng = np.random.default_rng(1)
+        events = [ArrivalEvent(t=i * 1e-4,
+                               prompt=_prompt(int(rng.integers(0, 3)), 3),
+                               gen_len=2, priority=0)
+                  for i in range(8)]
+        router = ReplicaRouter(_tier(2))
+        out = router.replay(events)
+        assert out["shed_at_router"] == 0
+        assert sum(out["router"]["routed"]) == 8
+        done = sum(s["completed"] for s in out["replicas"])
+        assert done == 8

@@ -164,6 +164,62 @@ def test_preempted_request_keeps_arrival_seq():
     assert s.next_request() is r1         # still ahead of r2
 
 
+# --------------------------------------------- EDF admission ordering (PR 8)
+def test_edf_urgent_deadline_overtakes_earlier_arrival():
+    """SchedPolicy.edf: within a priority level an urgent-deadline request
+    admits before an EARLIER same-priority arrival; priorities still
+    dominate deadlines, and undated requests queue FIFO behind dated ones."""
+    s = Scheduler(edf=True)
+    early = _req(1)                       # arrives first, no deadline (inf)
+    s.submit(early)
+    urgent = _req(2)
+    urgent.deadline = 5.0                 # arrives later, tight deadline
+    s.submit(urgent)
+    relaxed = _req(3)
+    relaxed.deadline = 50.0
+    s.submit(relaxed)
+    undated = _req(4)                     # second undated arrival
+    s.submit(undated)
+    assert [s.next_request().rid for _ in range(4)] == [2, 3, 1, 4]
+
+    # priority dominates: a priority-1 request never beats priority-0,
+    # however urgent its deadline
+    s2 = Scheduler(edf=True)
+    lo = _req(10, priority=1)
+    lo.deadline = 1.0
+    hi = _req(11, priority=0)             # undated but higher priority
+    s2.submit(lo)
+    s2.submit(hi)
+    assert [s2.next_request().rid for _ in range(2)] == [11, 10]
+
+
+def test_edf_off_is_exact_fifo():
+    """The default (edf off) ignores deadlines entirely — arrival order is
+    preserved even when later requests carry tighter deadlines (the
+    bit-exact anchor: the deadline key is constant, ordering falls through
+    to seq exactly as before the field existed)."""
+    s = Scheduler()
+    rs = [_req(i) for i in range(4)]
+    rs[2].deadline = 0.001                # would win under EDF
+    for r in rs:
+        s.submit(r)
+    assert [s.next_request().rid for _ in range(4)] == [0, 1, 2, 3]
+
+
+def test_edf_engine_wiring():
+    """ServeEngine wires policy.edf into its default Scheduler and
+    submit(deadline=) lands on the request; defaults stay FIFO."""
+    eng = ServeEngine.build("qwen2.5-32b", batch_slots=1, s_max=32,
+                            policy=SchedPolicy(edf=True))
+    assert eng.scheduler.edf
+    a = eng.submit(np.arange(1, 4, dtype=np.int32), 1)
+    b = eng.submit(np.arange(1, 4, dtype=np.int32), 1, deadline=2.5)
+    assert a.deadline == float("inf") and b.deadline == 2.5
+    assert eng.scheduler.peek() is b      # dated overtakes undated peer
+    assert not ServeEngine.build("qwen2.5-32b", batch_slots=1,
+                                 s_max=32).scheduler.edf
+
+
 # --------------------------------------------------- policy: bit-exactness
 def test_default_policy_is_bit_exact_anchor(qwen_mp):
     """SchedPolicy() is all-off: an engine built with it emits the same

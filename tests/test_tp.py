@@ -1,0 +1,161 @@
+"""Tensor-parallel serving equivalence (PR 8).
+
+The tp mesh engine's contract is BITWISE: only the KV pool and the paged
+attention core shard (heads partition cleanly over the kernel's (B, H,
+pages) grid, all-gather before the output projection); weights and every
+other activation replicate, so no float reduction is ever split across
+shards. That makes the anchors exact token equality, not allclose:
+
+* tp=1 mesh engine == plain (mesh-free) engine, bit-for-bit;
+* tp=2 / tp=4 == tp=1, bit-for-bit, for dense, MoE, and VLM families,
+  on both the kernel read path and the degenerate einsum anchor
+  (page_size == s_max);
+* per-shard resident KV pool bytes == global / tp, exactly.
+
+Multi-device cases run in subprocesses with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 (the conftest
+run_multidevice pattern — the parent process stays single-device).
+Build-time validation (tp too large, non-divisible kv heads, int8 + tp,
+dense + mesh) runs in-process.
+"""
+import numpy as np
+import pytest
+
+# reduced_config can collapse num_kv_heads to 1 (qwen2.5-32b 40h/8kv -> 4h/1kv,
+# llama-vision 32h/8kv -> 4h/1kv), which leaves nothing to shard — the tp
+# engines override the head counts (keeping GQA G=2 for dense) while staying
+# reduced everywhere else.
+_CASES = {
+    "dense": ("qwen2.5-32b", dict(num_heads=8, num_kv_heads=4)),
+    "moe": ("moonshot-v1-16b-a3b", None),          # reduced keeps kv=4
+    "vlm": ("llama-3.2-vision-11b", dict(num_heads=8, num_kv_heads=4)),
+}
+
+
+def _equivalence_code(arch: str, overrides, page_size: int = 16,
+                      s_max: int = 64, tps=(1, 2, 4)) -> str:
+    return f"""
+        import numpy as np
+        from repro.serve.engine import ServeEngine
+
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(1, 400, n).astype(np.int32)
+                   for n in (19, 35, 7)]
+
+        def run(tp):
+            eng = ServeEngine.build({arch!r}, batch_slots=2, s_max={s_max},
+                                    page_size={page_size},
+                                    cfg_overrides={overrides!r}, tp=tp)
+            rs = [eng.submit(p, 8) for p in prompts]
+            eng.run()
+            assert all(r.error is None for r in rs), [r.error for r in rs]
+            return eng, [r.tokens for r in rs]
+
+        _, base = run(None)           # mesh-free engine: today's anchor
+        e1, t1 = run(1)
+        assert t1 == base, "tp=1 mesh engine is not bit-exact vs plain"
+        b1 = e1.per_shard_kv_bytes()
+        for tp in {tuple(tps)!r}:
+            if tp == 1:
+                continue
+            e, t = run(tp)
+            assert t == base, f"tp={{tp}} diverged from tp=1: {{t}} != {{base}}"
+            b = e.per_shard_kv_bytes()
+            assert b * tp == b1, (tp, b, b1)
+        print("TOKENS", base)
+        print("OK")
+    """
+
+
+@pytest.mark.parametrize("family", sorted(_CASES))
+def test_tp_greedy_bitwise_equal(multidevice, family):
+    """tp=1 == plain engine and tp>1 == tp=1, exact greedy tokens, with
+    per-shard pool bytes at exactly global/tp — per family, kernel path."""
+    arch, overrides = _CASES[family]
+    out = multidevice(_equivalence_code(arch, overrides))
+    assert "OK" in out
+
+
+def test_tp_degenerate_einsum_anchor(multidevice):
+    """page_size == s_max forces the masked-einsum read path (the dense
+    bit-exactness anchor). Under tp the pool is still kv-head-sharded but
+    attention runs via GSPMD, not shard_map — tokens must STILL be exact
+    (no contraction dim is sharded, so partitioning cannot reassociate)."""
+    arch, overrides = _CASES["dense"]
+    out = multidevice(_equivalence_code(arch, overrides, page_size=64,
+                                        s_max=64, tps=(1, 2)))
+    assert "OK" in out
+
+
+def test_tp_prefix_cache_and_cow(multidevice):
+    """Prefix aliasing + COW against a SHARDED pool: two requests sharing a
+    page-aligned header alias its pages, then diverge mid-stream; greedy
+    tokens must match the mesh-free engine exactly for both."""
+    arch, overrides = _CASES["dense"]
+    out = multidevice(f"""
+        import numpy as np
+        from repro.serve.engine import ServeEngine
+
+        header = np.arange(1, 33, dtype=np.int32)          # 2 full pages
+        prompts = [np.concatenate([header, np.full(5, 7, np.int32)]),
+                   np.concatenate([header, np.full(9, 11, np.int32)])]
+
+        def run(tp):
+            eng = ServeEngine.build({arch!r}, batch_slots=2, s_max=64,
+                                    page_size=16, cfg_overrides={overrides!r},
+                                    tp=tp, prefix_cache=True)
+            out = []
+            for p in prompts:                 # sequential: second hits index
+                r = eng.submit(p, 8)
+                eng.run()
+                out.append(r.tokens)
+            assert eng.prefix_index is not None and eng.prefix_index.pages
+            return out
+
+        base = run(None)
+        assert run(2) == base
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_tp_build_validation():
+    """Mesh/tp misconfiguration fails loudly at build, in-process (single
+    device, so any tp>1 must be rejected before touching the mesh)."""
+    from repro.serve.engine import ServeEngine
+    import jax
+
+    ndev = len(jax.devices())
+    with pytest.raises(ValueError, match="local devices"):
+        ServeEngine.build("qwen2.5-32b", page_size=16, tp=ndev + 1)
+    with pytest.raises(ValueError, match="local devices"):
+        ServeEngine.build("qwen2.5-32b", page_size=16, tp=0)
+
+
+def test_tp_requires_paged_and_divisible_heads(multidevice):
+    """tp>1 demands a paged cache, a kv-head count the axis divides, and a
+    non-quantized pool (per-page requant needs a cross-shard amax)."""
+    out = multidevice("""
+        import numpy as np
+        from repro.serve.engine import ServeEngine
+
+        def expect(fn, frag):
+            try:
+                fn()
+            except ValueError as e:
+                assert frag in str(e), (frag, str(e))
+            else:
+                raise AssertionError(f"no error containing {frag!r}")
+
+        # dense cache has no mesh layout
+        expect(lambda: ServeEngine.build("qwen2.5-32b", tp=2), "PAGED")
+        # reduced qwen kv-heads = 1: nothing to shard at tp=2
+        expect(lambda: ServeEngine.build("qwen2.5-32b", page_size=16, tp=2),
+               "divisible")
+        # int8 pages: per-page scale requant is cross-shard
+        expect(lambda: ServeEngine.build(
+            "qwen2.5-32b", page_size=16, tp=2, kv_backend="paged_int8",
+            cfg_overrides=dict(num_heads=8, num_kv_heads=4)), "paged_int8")
+        print("OK")
+    """)
+    assert "OK" in out
