@@ -71,6 +71,13 @@ GATED_METRICS = [
     ("kv_quant.acceptance.resident_bytes_ratio", False, False, None),
     ("kv_quant.acceptance.greedy_prefix_match_mean", True, False, None),
     ("kv_quant_cell.int8_decode_tokens_per_s", True, True, None),
+    # mla (PR 9): the latent-vs-fp32 bytes ratio is a deterministic function
+    # of config (lower is better, tight default threshold) and the greedy
+    # prefix-match mean vs the dense MLA engine is same-run/same-seed; the
+    # latent decode rate row is absolute and machine-class sensitive
+    ("mla.acceptance.resident_bytes_ratio", False, False, None),
+    ("mla.acceptance.greedy_prefix_match_mean", True, False, None),
+    ("mla_cell.latent_decode_tokens_per_s", True, True, None),
     # goodput SLO flags (PR 6): BOOLEAN rows, compared as 0/1 — a
     # True -> False flip under higher_is_better regresses at any threshold.
     # They are machine-independent (relative-only safe): the SLOs are
@@ -132,6 +139,10 @@ def _acceptance_cells(bench: dict) -> dict:
         # prompt 32 is the acceptance cell (quick runs record only it)
         if cell.get("prompt_len") == 32:
             out["kv_quant_cell"] = cell
+    for cell in bench.get("mla", {}).get("cells", []):
+        # prompt 32 is the acceptance cell (quick runs record only it)
+        if cell.get("prompt_len") == 32:
+            out["mla_cell"] = cell
     for cell in bench.get("tp", {}).get("cells", []):
         # tp=2 is the pinned acceptance degree (quick AND full runs have it)
         if cell.get("tp") == 2:

@@ -8,13 +8,13 @@ from repro.configs.base import (ALL_SHAPES, SHAPES_BY_NAME, ArchConfig, Family,
 
 from repro.configs import (moonshot_v1_16b_a3b, dbrx_132b, whisper_large_v3,
                            minicpm_2b, command_r_35b, codeqwen1_5_7b,
-                           qwen2_5_32b, hymba_1_5b, rwkv6_7b,
+                           qwen2_5_32b, qwen2_5_32b_mla, hymba_1_5b, rwkv6_7b,
                            llama_3_2_vision_11b, resnet20_cifar)
 
 _ARCHS = {}
 for _m in (moonshot_v1_16b_a3b, dbrx_132b, whisper_large_v3, minicpm_2b,
-           command_r_35b, codeqwen1_5_7b, qwen2_5_32b, hymba_1_5b, rwkv6_7b,
-           llama_3_2_vision_11b):
+           command_r_35b, codeqwen1_5_7b, qwen2_5_32b, qwen2_5_32b_mla,
+           hymba_1_5b, rwkv6_7b, llama_3_2_vision_11b):
     _ARCHS[_m.CONFIG.name] = _m.CONFIG
 
 RESNET20 = resnet20_cifar.CONFIG

@@ -79,6 +79,11 @@ class ArchConfig:
     norm: str = "rmsnorm"   # rmsnorm | layernorm
     rope_theta: float = 10000.0
     moe: Optional[MoEConfig] = None
+    # MLA (multi-head latent attention): >0 => cache a per-token
+    # kv_lora_rank-dim latent + a qk_rope_head_dim decoupled RoPE head
+    # instead of per-head K/V; head_dim doubles as qk_nope/v head width
+    kv_lora_rank: int = 0
+    qk_rope_head_dim: int = 0
     # hybrid / ssm
     ssm_state: int = 0
     window: int = 0              # sliding-window size for attention heads (0 = full)
@@ -107,6 +112,13 @@ class ArchConfig:
         if self.num_heads == 0:
             return 0
         hd = self.head_dim
+        if self.kv_lora_rank:
+            c, r = self.kv_lora_rank, self.qk_rope_head_dim
+            q = self.d_model * self.num_heads * (hd + r)
+            kv_a = self.d_model * (c + r) + c  # wkv_a + latent rmsnorm
+            kv_b = c * self.num_heads * 2 * hd
+            o = self.num_heads * hd * self.d_model
+            return q + kv_a + kv_b + o
         q = self.d_model * self.num_heads * hd
         kv = 2 * self.d_model * self.num_kv_heads * hd
         o = self.num_heads * hd * self.d_model

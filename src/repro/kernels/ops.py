@@ -223,6 +223,56 @@ def paged_prefill_q8(q, pool_k, pool_v, k_scale, v_scale, block_tables,
                            window, k_scale=k_scale, v_scale=v_scale)
 
 
+def _paged_dispatch_latent(q, pool_c, block_tables, start, scale_dim: int,
+                           d_v: int):
+    """MLA latent-page dispatch: same guard ladder as the per-head paged
+    dispatch, but over the single shared latent pool."""
+    B, Sq, H, L = q.shape
+    ps = pool_c.shape[1]
+    mps = block_tables.shape[1]
+    if _interpret():
+        if B * H * mps > _PAGED_MAX_INTERPRET_GRID:
+            return _ref.paged_attention_latent(q, pool_c, block_tables,
+                                               start, scale_dim=scale_dim,
+                                               d_v=d_v)
+        return _pa.paged_attention_latent(q, pool_c, block_tables, start,
+                                          scale_dim=scale_dim, d_v=d_v,
+                                          interpret=True)
+    if L % 128 or d_v % 128 or ps % 8:
+        return _ref.paged_attention_latent(q, pool_c, block_tables, start,
+                                           scale_dim=scale_dim, d_v=d_v)
+    return _pa.paged_attention_latent(q, pool_c, block_tables, start,
+                                      scale_dim=scale_dim, d_v=d_v,
+                                      interpret=False)
+
+
+@functools.partial(jax.jit, static_argnames=("scale_dim", "d_v"))
+def paged_decode_latent(q, pool_c, block_tables, cache_pos, *,
+                        scale_dim: int, d_v: int):
+    """Single-token decode attention over MLA latent pages.
+
+    q: (B, 1, H, c+r) ABSORBED queries; pool_c: (P, page_size, 1, c+r) —
+    one shared latent row per token, gathered once per page for both the
+    score contraction and (its leading ``d_v`` columns) the value
+    accumulation. ``scale_dim`` is the logical head width the softmax
+    divides by. Returns (B, 1, H, d_v) in latent space — the caller owns
+    the wkv_b value-half and ``wo`` projections. Latent pools are never
+    head-sharded (there is no head axis to shard), so there is no
+    mesh/shard_axis routing here; the latent backend rejects tp > 1."""
+    return _paged_dispatch_latent(q, pool_c, block_tables, cache_pos,
+                                  scale_dim, d_v)
+
+
+@functools.partial(jax.jit, static_argnames=("scale_dim", "d_v"))
+def paged_prefill_latent(q, pool_c, block_tables, start, *,
+                         scale_dim: int, d_v: int):
+    """Continuation-chunk prefill attention over MLA latent pages (see
+    paged_decode_latent). q: (B, C, H, c+r); the chunk's latent rows must
+    already be spliced into the slot's pages."""
+    return _paged_dispatch_latent(q, pool_c, block_tables, start,
+                                  scale_dim, d_v)
+
+
 @functools.partial(jax.jit, static_argnames=("chunk",))
 def wkv6(r, k, v, w, u, s0, *, chunk: int = 32):
     T = r.shape[1]

@@ -165,6 +165,103 @@ def _kernel_q8(bt_ref, start_ref, ks_ref, vs_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0, :, 0, :] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
 
 
+def _kernel_latent(bt_ref, start_ref, q_ref, k_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, scale: float,
+                   block_q: int, page_size: int, d_v: int):
+    """MLA latent-page variant: each gathered block is ``(page_size,
+    c_kv + r)`` — one compressed latent row per token, shared by ALL query
+    heads (the absorb path pushed the per-head projections into the query
+    and output einsums). Scores contract the FULL latent row; the value
+    contribution reuses the leading ``d_v`` (= c_kv) columns of the SAME
+    rows, so each page is DMA'd exactly once for both roles — the
+    bandwidth shape MLA exists to buy."""
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    nj = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    page = bt_ref[b, j]
+    start = start_ref[b]
+    k_start = j * page_size
+
+    def visit():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)              # (bq, c+r)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)              # (ps, c+r)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        q_pos = start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, page_size), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, page_size), 1)
+        ok = k_pos <= q_pos
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.where(ok, jnp.exp(s - m_new[:, None]), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.dot(
+            p, k[:, :d_v], preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    # MLA is full-causal only (no sliding window): skip unallocated pages
+    # and pages wholly beyond the last query row's causal frontier
+    relevant = (page >= 0) & (k_start <= start + block_q - 1)
+    pl.when(relevant)(visit)
+
+    @pl.when(j == nj - 1)
+    def _():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def paged_attention_latent(q, pool_c, block_tables, start, *,
+                           scale_dim: int, d_v: int, interpret: bool = False):
+    """Paged attention over MLA latent pages.
+
+    q: (B, Sq, H, c+r) ABSORBED queries (q_nope pushed through wkv_b's key
+    half, concat decoupled RoPE head); pool_c: (P, page_size, 1, c+r) — one
+    latent row per token, no per-head K/V; block_tables/start as in
+    :func:`paged_attention`. ``scale_dim`` is the logical attention width
+    (qk_nope_head_dim + qk_rope_head_dim) the softmax is scaled by — NOT
+    the latent width the dot products contract over. Values are the leading
+    ``d_v`` (= kv_lora_rank) columns of the same latent rows; output is
+    (B, Sq, H, d_v), still in latent space (the caller applies wkv_b's
+    value half and wo)."""
+    B, Sq, H, L = q.shape
+    P, ps, KV, _ = pool_c.shape
+    assert KV == 1, "latent pool carries one shared row per token"
+    mps = block_tables.shape[1]
+    scale = 1.0 / math.sqrt(scale_dim)
+    kernel = functools.partial(_kernel_latent, scale=scale,
+                               block_q=Sq, page_size=ps, d_v=d_v)
+    # one shared latent block per (slot, page) step — every query head h
+    # reads kv head 0 of the page named by the prefetched block table
+    kv_map = lambda b, h, j, bt, st: (jnp.maximum(bt[b, j], 0), 0, 0, 0)
+    q_map = lambda b, h, j, bt, st: (b, 0, h, 0)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, H, mps),
+        in_specs=[pl.BlockSpec((1, Sq, 1, L), q_map),
+                  pl.BlockSpec((1, ps, 1, L), kv_map)],
+        out_specs=pl.BlockSpec((1, Sq, 1, d_v), q_map),
+        scratch_shapes=[pltpu.VMEM((Sq,), jnp.float32),
+                        pltpu.VMEM((Sq,), jnp.float32),
+                        pltpu.VMEM((Sq, d_v), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Sq, H, d_v), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(block_tables, jnp.int32), jnp.asarray(start, jnp.int32),
+      q, pool_c)
+
+
 def paged_attention(q, pool_k, pool_v, block_tables, start, *,
                     window: int = 0, interpret: bool = False,
                     k_scale=None, v_scale=None):

@@ -90,6 +90,71 @@ def paged_attention(q, pool_k, pool_v, block_tables, start, *, window=0,
     return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd).astype(q.dtype)
 
 
+def paged_attention_latent(q, pool_c, block_tables, start, *, scale_dim,
+                           d_v):
+    """Oracle for the MLA latent-page kernel: gather each slot's latent
+    rows through its block table and run a masked partial softmax directly
+    in latent space.
+
+    q: (B, Sq, H, c+r) absorbed queries; pool_c: (P, ps, 1, c+r) — ONE
+    shared latent row per token (no per-head K/V, no separate value pool:
+    values are the leading ``d_v`` columns of the same rows). ``scale_dim``
+    is the logical head width (qk_nope + qk_rope) the scores divide by.
+    Masked probabilities are zeroed so a freed slot (all--1 block table)
+    returns exactly 0, matching the kernel's l == 0 guard. Returns
+    (B, Sq, H, d_v) — still latent-space; callers apply wkv_b's value half."""
+    B, Sq, H, L = q.shape
+    P, ps = pool_c.shape[:2]
+    mps = block_tables.shape[1]
+    n_rows = mps * ps
+    j = jnp.arange(n_rows)
+    page = jnp.take_along_axis(
+        block_tables, jnp.broadcast_to(j // ps, (B, n_rows)), axis=1)
+    ok = page >= 0
+    phys = jnp.where(ok, page * ps + j % ps, 0)
+    view = pool_c.reshape(P * ps, L)[phys]                 # (B, n_rows, c+r)
+    q_pos = start[:, None] + jnp.arange(Sq)[None, :]       # (B, Sq)
+    valid = ok[:, None, :] & (j[None, None, :] <= q_pos[:, :, None])
+    s = jnp.einsum("bqhl,bsl->bhqs", q, view.astype(q.dtype)
+                   ).astype(jnp.float32) / math.sqrt(scale_dim)
+    vm = valid[:, None, :, :]
+    s = jnp.where(vm, s, mask_value(s.dtype))
+    m = s.max(axis=-1)
+    p = jnp.where(vm, jnp.exp(s - m[..., None]), 0.0)
+    l = p.sum(axis=-1)
+    acc = jnp.einsum("bhqs,bsl->bhql", p.astype(q.dtype),
+                     view[..., :d_v].astype(q.dtype)).astype(jnp.float32)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]           # (B, H, Sq, d_v)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def mla_attention_naive(q_nope, q_pe, latent, wb_k, wb_v, q_positions,
+                        k_positions):
+    """Naive-expansion MLA oracle: materialize per-head K/V from the latent
+    rows and attend conventionally. The absorb path (wkv_b folded into the
+    query/output einsums, attention run directly over latents) must stay
+    allclose to this — same math, reassociated contractions.
+
+    q_nope: (B, Sq, H, hd) pre-absorption content queries; q_pe:
+    (B, Sq, H, r) RoPE'd decoupled queries; latent: (B, Sk, c + r) cached
+    rows (normalized latent ++ RoPE'd shared key head); wb_k: (H, hd, c),
+    wb_v: (H, c, hd) — the split halves of wkv_b. Returns (B, Sq, H, hd)
+    pre-``wo`` per-head attention output."""
+    hd = q_nope.shape[-1]
+    r = q_pe.shape[-1]
+    c = latent.shape[-1] - r
+    ck, k_pe = latent[..., :c], latent[..., c:]
+    k_nope = jnp.einsum("bsc,hdc->bshd", ck, wb_k)         # expand keys
+    v = jnp.einsum("bsc,hcd->bshd", ck, wb_v)              # expand values
+    s = (jnp.einsum("bqhd,bshd->bhqs", q_nope, k_nope)
+         + jnp.einsum("bqhr,bsr->bhqs", q_pe, k_pe)        # shared RoPE key
+         ).astype(jnp.float32) / math.sqrt(hd + r)
+    diff = (q_positions[:, None, :, None] - k_positions[:, None, None, :])
+    s = jnp.where(diff >= 0, s, mask_value(s.dtype))
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqs,bshd->bqhd", p, v)
+
+
 def flash_attention(q, k, v, *, causal=True, window=0, q_positions=None,
                     k_positions=None):
     """q: (B,Sq,H,hd); k,v: (B,Sk,KV,hd) -> (B,Sq,H,hd). GQA by head grouping."""

@@ -31,6 +31,7 @@ import numpy as np
 
 from repro import configs
 from repro.models.registry import get_model, reduced_config
+from repro.serve.config import ServeConfig as EngineConfig
 from repro.serve.engine import ServeEngine
 
 log = logging.getLogger("repro.serve")
@@ -38,6 +39,10 @@ log = logging.getLogger("repro.serve")
 
 @dataclasses.dataclass
 class ServeConfig:
+    """CLI run description: the engine build knobs (mapped onto
+    :class:`repro.serve.config.ServeConfig` by :func:`build_engine`) plus
+    the synthetic-traffic shape (``requests``/``prompt_len``/``gen_len``)
+    this driver generates."""
     arch: str = "hymba-1.5b"
     reduced: bool = True
     batch_slots: int = 4
@@ -52,6 +57,8 @@ class ServeConfig:
     top_p: float = 1.0        # 1.0 = off; <1 nucleus sampling
     page_size: int = 0        # 0 = dense cache; >0 enables paged KV
     num_pages: int = 0        # 0 = dense-equivalent pool (slots x s_max/ps)
+    kv_backend: str = ""      # "" = layout follows page_size; else a
+    #                           kvcache.BACKENDS name (e.g. paged_latent)
     prefill_mode: str = "parallel"   # 'parallel' (chunked) | 'scan' (anchor)
     prefill_chunk: int = 64   # max prompt tokens ingested between decode ticks
     # True = auto (page-level prefix caching whenever the config supports it:
@@ -60,14 +67,15 @@ class ServeConfig:
 
 
 def build_engine(sc: ServeConfig) -> ServeEngine:
-    return ServeEngine.build(
-        sc.arch, reduced=sc.reduced, batch_slots=sc.batch_slots,
+    return ServeEngine.build(sc.arch, config=EngineConfig(
+        reduced=sc.reduced, batch_slots=sc.batch_slots,
         s_max=sc.s_max, seed=sc.seed, quantize_int8=sc.quantize_int8,
         temperature=sc.temperature, top_k=sc.top_k, top_p=sc.top_p,
         page_size=sc.page_size or None, num_pages=sc.num_pages or None,
+        kv_backend=sc.kv_backend or None,
         prefix_cache=None if sc.prefix_cache else False,
         prefill_mode=sc.prefill_mode,
-        prefill_chunk_tokens=sc.prefill_chunk)
+        prefill_chunk_tokens=sc.prefill_chunk))
 
 
 class Server:

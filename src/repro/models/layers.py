@@ -926,6 +926,249 @@ def attention_prefill_chunk_paged(params, x, dims: AttnDims, pool_k, pool_v,
     return out, pool_k, pool_v
 
 
+# ------------------------------------------------- MLA (latent attention)
+# Multi-head latent attention (DeepSeek-V3 style). The cache stores, per
+# token, ONE row of ``kv_lora_rank + qk_rope_head_dim`` floats: a compressed
+# KV latent (wkv_a output, rms-normed) concatenated with a small decoupled
+# RoPE key head shared by all query heads. Decode runs the ABSORB path:
+# wkv_b's key half is folded into the query projection (q_nope -> latent
+# space) and its value half into the output projection, so attention's
+# score/value contractions run directly over the latent rows — per-head K/V
+# never materialize. Every dense/paged variant below shares the same
+# absorbed operation order, which is what makes the dense-MLA path and the
+# degenerate-page latent path bit-exact (the house anchor rule).
+@dataclasses.dataclass(frozen=True)
+class MLADims:
+    d_model: int
+    num_heads: int
+    kv_lora_rank: int        # c_kv: compressed KV latent width
+    qk_rope_head_dim: int    # r: decoupled RoPE key head width
+    head_dim: int            # qk_nope width == value head width
+    rope_theta: float = 10000.0
+
+    @property
+    def latent_dim(self) -> int:
+        """Cached floats per token: c_kv + r (one latent page row)."""
+        return self.kv_lora_rank + self.qk_rope_head_dim
+
+    @property
+    def scale_dim(self) -> int:
+        """Softmax scale denominator: the EFFECTIVE per-head query width
+        (qk_nope + rope), not the latent width the absorbed dot runs over."""
+        return self.head_dim + self.qk_rope_head_dim
+
+
+def mla_init(key, dims: MLADims):
+    ks = jax.random.split(key, 4)
+    D, H = dims.d_model, dims.num_heads
+    c, r, hd = dims.kv_lora_rank, dims.qk_rope_head_dim, dims.head_dim
+    return {
+        "wq": _dense(ks[0], (D, H * (hd + r))),
+        "wkv_a": _dense(ks[1], (D, c + r)),
+        "kv_norm": jnp.zeros((c,), jnp.float32),
+        "wkv_b": _dense(ks[2], (c, H * 2 * hd), scale_dim=c),
+        "wo": _dense(ks[3], (H * hd, D), scale_dim=H * hd),
+    }
+
+
+def mla_logical(dims: MLADims):
+    return {
+        "wq": ("fsdp", "heads"),
+        "wkv_a": ("fsdp", None),
+        "kv_norm": (None,),
+        "wkv_b": (None, "heads"),
+        "wo": ("heads", "fsdp"),
+    }
+
+
+def _mla_wkv_b(params, dims: MLADims, dtype):
+    """Split wkv_b into its absorbable halves:
+    (wb_k (H, hd, c) — folds q_nope into latent space,
+     wb_v (H, c, hd) — expands latent attention output to value heads)."""
+    c, H, hd = dims.kv_lora_rank, dims.num_heads, dims.head_dim
+    wb = params["wkv_b"].astype(dtype).reshape(c, H, 2 * hd)
+    wb_k = wb[:, :, :hd].transpose(1, 2, 0)      # (H, hd, c)
+    wb_v = wb[:, :, hd:].transpose(1, 0, 2)      # (H, c, hd)
+    return wb_k, wb_v
+
+
+def mla_absorbed_queries(params, x, dims: MLADims, positions):
+    """Project x to ABSORBED queries (B, S, H, c_kv + r): the nope half is
+    pushed through wb_k into latent space, the rope half gets RoPE; their
+    concatenation dots directly against cached latent rows."""
+    B, S, _ = x.shape
+    H, hd, r = dims.num_heads, dims.head_dim, dims.qk_rope_head_dim
+    q = (x @ params["wq"].astype(x.dtype)).reshape(B, S, H, hd + r)
+    q_nope, q_pe = q[..., :hd], q[..., hd:]
+    q_pe = apply_rope(q_pe, positions, dims.rope_theta)
+    wb_k, _ = _mla_wkv_b(params, dims, x.dtype)
+    q_abs = jnp.einsum("bshd,hdc->bshc", q_nope, wb_k)
+    return jnp.concatenate([q_abs, q_pe], axis=-1)
+
+
+def mla_latent_rows(params, x, dims: MLADims, positions):
+    """Per-token latent cache rows (B, S, 1, c_kv + r): rms-normed compressed
+    KV latent ++ RoPE'd decoupled key head (a single shared 'kv head')."""
+    c = dims.kv_lora_rank
+    kv = x @ params["wkv_a"].astype(x.dtype)     # (B, S, c + r)
+    ckv = rmsnorm(kv[..., :c], params["kv_norm"])
+    k_pe = apply_rope(kv[..., None, c:], positions, dims.rope_theta)
+    return jnp.concatenate([ckv[:, :, None, :], k_pe], axis=-1)
+
+
+def _mla_out(params, attn, dims: MLADims, x):
+    """Absorbed output projection: latent attention output (B, S, H, c_kv)
+    -> value heads via wb_v -> wo."""
+    B, S, H, _ = attn.shape
+    _, wb_v = _mla_wkv_b(params, dims, x.dtype)
+    out = jnp.einsum("bshc,hcd->bshd", attn, wb_v)
+    return out.reshape(B, S, H * dims.head_dim) @ params["wo"].astype(x.dtype)
+
+
+def mla_attention_decode(params, x, dims: MLADims, cache_c, cache_pos,
+                         positions):
+    """Single-token MLA decode against a DENSE latent cache — the reference
+    path. x: (B,1,D); cache_c: (B, S_max, 1, c_kv + r). Same scalar/vector
+    ``cache_pos`` contract as ``attention_decode``. Returns (out, new_cache).
+
+    Scores and values both read the latent rows (values = the leading c_kv
+    columns); shares ``_decode_sdpa_local`` with the standard path so the
+    dense and degenerate-page gathers stay bit-identical."""
+    B = x.shape[0]
+    H, c = dims.num_heads, dims.kv_lora_rank
+    q = mla_absorbed_queries(params, x, dims, positions)     # (B,1,H,c+r)
+    rows = mla_latent_rows(params, x, dims, positions)       # (B,1,1,c+r)
+    if jnp.ndim(cache_pos) == 1:
+        b_idx = jnp.arange(B)
+        cache_c = cache_c.at[b_idx, cache_pos].set(
+            rows[:, 0].astype(cache_c.dtype), mode="drop")
+        mask_pos = cache_pos[:, None]
+    else:
+        cache_c = jax.lax.dynamic_update_slice_in_dim(
+            cache_c, rows.astype(cache_c.dtype), cache_pos, axis=1)
+        mask_pos = cache_pos
+    qg = q.reshape(B, 1, 1, H, dims.latent_dim)              # KV=1, G=H
+    k_positions = jnp.arange(cache_c.shape[1])
+    m, l, acc = _decode_sdpa_local(qg, cache_c, cache_c[..., :c], mask_pos,
+                                   k_positions, 0, dims.scale_dim)
+    out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+    attn = out.transpose(0, 3, 1, 2, 4).reshape(B, 1, H, c)
+    return _mla_out(params, attn, dims, x), cache_c
+
+
+def mla_attention_prefill_chunk(params, x, dims: MLADims, cache_c, start,
+                                positions):
+    """Multi-token MLA prefill chunk against a dense latent cache — the
+    absorb-path counterpart of ``attention_prefill_chunk`` (einsum branch).
+    Returns (out (B,C,D), new_cache)."""
+    c = dims.kv_lora_rank
+    q = mla_absorbed_queries(params, x, dims, positions)     # (B,C,H,c+r)
+    rows = mla_latent_rows(params, x, dims, positions)       # (B,C,1,c+r)
+    cache_c = jax.lax.dynamic_update_slice_in_dim(
+        cache_c, rows.astype(cache_c.dtype), start, axis=1)
+    B, C, H, _ = q.shape
+    S_max = cache_c.shape[1]
+    qg = q.reshape(B, C, 1, H, dims.latent_dim)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, cache_c.astype(q.dtype)
+                        ).astype(jnp.float32) / math.sqrt(dims.scale_dim)
+    k_pos = jnp.arange(S_max)
+    valid = k_pos[None, None, :] <= positions[:, :, None]    # (B,C,S)
+    scores = jnp.where(valid[:, None, None, :, :], scores,
+                       mask_value(scores.dtype))
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    attn = jnp.einsum("bkgqs,bskh->bqkgh", probs,
+                      cache_c[..., :c].astype(q.dtype)).reshape(B, C, H, c)
+    return _mla_out(params, attn, dims, x), cache_c
+
+
+def mla_attention_decode_paged(params, x, dims: MLADims, pool_c,
+                               block_tables, cache_pos, positions,
+                               impl: str = "einsum"):
+    """Single-token MLA decode against a LATENT page pool.
+
+    pool_c: one layer's (P, page_size, 1, c_kv + r) latent pool slice — a
+    page row is the whole per-token cache. Write/gather indirection is the
+    standard block-table machinery (same helpers as the K/V path); the read
+    is the absorbed dot over latent rows, values = the leading c_kv columns
+    of the SAME gathered block. ``impl='kernel'`` routes through the
+    latent-page Pallas kernel (``ops.paged_decode_latent``); 'einsum' is the
+    masked-gather reference, bit-exact with ``mla_attention_decode`` at
+    page_size == s_max. Returns (out, new_pool)."""
+    H, c = dims.num_heads, dims.kv_lora_rank
+    q = mla_absorbed_queries(params, x, dims, positions)     # (B,1,H,c+r)
+    rows = mla_latent_rows(params, x, dims, positions)       # (B,1,1,c+r)
+    P, ps = pool_c.shape[:2]
+    B = q.shape[0]
+    n_rows = block_tables.shape[1] * ps
+    safe_pos = jnp.clip(cache_pos, 0, n_rows - 1)
+    w_row, page_ok = paged_write_target(block_tables, safe_pos, ps)
+    w_ok = (cache_pos >= 0) & (cache_pos < n_rows) & page_ok
+    pool_c = paged_write_rows(pool_c, rows[:, 0], w_row, w_ok)
+
+    if impl == "kernel":
+        from repro.kernels import ops as kops
+        attn = kops.paged_decode_latent(q, pool_c, block_tables, cache_pos,
+                                        scale_dim=dims.scale_dim, d_v=c)
+    else:
+        qg = q.reshape(B, 1, 1, H, dims.latent_dim)
+        phys, ok = paged_row_indices(block_tables, ps, n_rows)
+        view = pool_c.reshape(P * ps, 1, dims.latent_dim)[phys]
+        k_positions = jnp.where(ok, jnp.arange(n_rows)[None, :], INACTIVE_POS)
+        m, l, acc = _decode_sdpa_local(qg, view, view[..., :c],
+                                       cache_pos[:, None], k_positions, 0,
+                                       dims.scale_dim)
+        out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        attn = out.transpose(0, 3, 1, 2, 4).reshape(B, 1, H, c)
+    return _mla_out(params, attn, dims, x), pool_c
+
+
+def mla_attention_prefill_chunk_paged(params, x, dims: MLADims, pool_c,
+                                      block_tables, positions, write_floor,
+                                      impl: str = "kernel"):
+    """Multi-token MLA prefill chunk splicing latent rows DIRECTLY into the
+    page pool (incremental splice) and attending through the block table —
+    the latent twin of ``attention_prefill_chunk_paged``. Rows below
+    ``write_floor`` (aliased prefix pages) are dropped, exactly as in the
+    K/V path: COW materialisation copies latent rows, never per-head K/V.
+    Returns (out (B,C,D), new_pool)."""
+    H, c = dims.num_heads, dims.kv_lora_rank
+    q = mla_absorbed_queries(params, x, dims, positions)     # (B,C,H,c+r)
+    rows = mla_latent_rows(params, x, dims, positions)       # (B,C,1,c+r)
+    B, C = positions.shape
+    P, ps = pool_c.shape[:2]
+    mps = block_tables.shape[1]
+    n_rows = mps * ps
+
+    page = jnp.take_along_axis(
+        block_tables, jnp.clip(positions // ps, 0, mps - 1), axis=1)
+    w_ok = ((page >= 0) & (positions >= write_floor)
+            & (positions >= 0) & (positions < n_rows))
+    w_rows = jnp.where(w_ok, page * ps + positions % ps, P * ps)  # drop
+    flat = pool_c.reshape(P * ps, 1, dims.latent_dim)
+    flat = flat.at[w_rows].set(rows.astype(flat.dtype), mode="drop")
+    pool_c = flat.reshape(pool_c.shape)
+
+    if impl == "kernel":
+        from repro.kernels import ops as kops
+        attn = kops.paged_prefill_latent(q, pool_c, block_tables,
+                                         positions[:, 0],
+                                         scale_dim=dims.scale_dim, d_v=c)
+    else:
+        qg = q.reshape(B, C, 1, H, dims.latent_dim)
+        phys, ok = paged_row_indices(block_tables, ps, n_rows)
+        view = flat[phys]                        # (B, n_rows, 1, c+r)
+        scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, view.astype(q.dtype)
+                            ).astype(jnp.float32) / math.sqrt(dims.scale_dim)
+        k_pos = jnp.where(ok, jnp.arange(n_rows)[None, :], INACTIVE_POS)
+        valid = k_pos[:, None, :] <= positions[:, :, None]   # (B,C,S)
+        scores = jnp.where(valid[:, None, None, :, :], scores,
+                           mask_value(scores.dtype))
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        attn = jnp.einsum("bkgqs,bskh->bqkgh", probs,
+                          view[..., :c].astype(q.dtype)).reshape(B, C, H, c)
+    return _mla_out(params, attn, dims, x), pool_c
+
+
 # ---------------------------------------------------------------- MLP
 def mlp_init(key, d_model: int, d_ff: int, gated: bool = True, bias: bool = False):
     ks = jax.random.split(key, 3)

@@ -261,6 +261,8 @@ def copy_pool_rows(cache, src_rows, dst_rows):
     dst_rows = jnp.asarray(dst_rows, jnp.int32)
     out = dict(cache)
     for key in ("k", "v"):
+        if key not in cache:                # MLA latent pool: "k" only
+            continue
         pool = cache[key]                   # (L, P, ps, KV, hd)
         Lr, P, ps = pool.shape[:3]
         flat = pool.reshape((Lr, P * ps) + pool.shape[3:])
@@ -292,6 +294,8 @@ def seed_prefix_cache(model: Model, cache, phys_rows, row_ok, pos,
     out = model.init_cache(K, s_max, dtype)
     idx = jnp.where(row_ok, phys_rows, 0)
     for key in ("k", "v"):
+        if key not in out:                  # MLA latent cache: "k" only
+            continue
         pool = cache[key]                   # (L, P, ps, KV, hd)
         Lr, P, ps = pool.shape[:3]
         flat = pool.reshape((Lr, P * ps) + pool.shape[3:])
@@ -352,6 +356,8 @@ def reduced_config(cfg: ArchConfig, **overrides) -> ArchConfig:
         num_image_tokens=8 if cfg.cross_attn_every else 0,
         window=8 if cfg.window else 0,
         ssm_state=cfg.ssm_state and 4,
+        kv_lora_rank=8 if cfg.kv_lora_rank else 0,
+        qk_rope_head_dim=2 if cfg.qk_rope_head_dim else 0,
     )
     if cfg.moe:
         from repro.configs.base import MoEConfig

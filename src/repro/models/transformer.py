@@ -30,6 +30,25 @@ def _attn_dims(cfg: ArchConfig, causal: bool = True) -> L.AttnDims:
         rope_theta=cfg.rope_theta, causal=causal)
 
 
+def _mla_dims(cfg: ArchConfig) -> L.MLADims:
+    return L.MLADims(
+        d_model=cfg.d_model, num_heads=cfg.num_heads,
+        kv_lora_rank=cfg.kv_lora_rank, qk_rope_head_dim=cfg.qk_rope_head_dim,
+        head_dim=cfg.head_dim, rope_theta=cfg.rope_theta)
+
+
+def _is_mla(cfg: ArchConfig) -> bool:
+    """Static (trace-time) MLA gate. MLA replaces per-head K/V with a latent
+    cache; it is defined for plain causal decoder stacks only (no sliding
+    window, no interleaved cross-attention)."""
+    if not cfg.kv_lora_rank:
+        return False
+    if cfg.window or cfg.cross_attn_every:
+        raise ValueError("MLA (kv_lora_rank > 0) supports only full-causal "
+                         "decoder stacks (no window / cross-attn)")
+    return True
+
+
 def _cross_dims(cfg: ArchConfig) -> L.AttnDims:
     d = _attn_dims(cfg, causal=False)
     return L.AttnDims(**{**d.__dict__, "causal": False, "window": 0, "rope_theta": 0.0})
@@ -60,7 +79,8 @@ def _layer_init(key, cfg: ArchConfig):
     ks = jax.random.split(key, 4)
     p = {
         "ln1": L.norm_init(cfg.d_model, cfg.norm),
-        "attn": L.attn_init(ks[0], _attn_dims(cfg)),
+        "attn": (L.mla_init(ks[0], _mla_dims(cfg)) if _is_mla(cfg)
+                 else L.attn_init(ks[0], _attn_dims(cfg))),
         "ln2": L.norm_init(cfg.d_model, cfg.norm),
     }
     if cfg.moe:
@@ -74,7 +94,8 @@ def _layer_init(key, cfg: ArchConfig):
 def _layer_logical(cfg: ArchConfig):
     p = {
         "ln1": L.norm_logical(cfg.norm),
-        "attn": L.attn_logical(_attn_dims(cfg)),
+        "attn": (L.mla_logical(_mla_dims(cfg)) if _is_mla(cfg)
+                 else L.attn_logical(_attn_dims(cfg))),
         "ln2": L.norm_logical(cfg.norm),
     }
     if cfg.moe:
@@ -176,10 +197,26 @@ def _super_decode_unrolled(cfg: ArchConfig, sp, x, ck, cv, img, pos, positions,
 
 
 # ------------------------------------------------------------------ forward
+def _mla_full_attention(cfg: ArchConfig, lp_attn, h, positions):
+    """Full-sequence MLA attention for the train/forward path: one prefill
+    chunk spanning the whole sequence against a transient latent cache —
+    the same absorbed op order every serving path uses."""
+    dims = _mla_dims(cfg)
+    B, S, _ = h.shape
+    cache_c = jnp.zeros((B, S, 1, dims.latent_dim), h.dtype)
+    out, _ = L.mla_attention_prefill_chunk(lp_attn, h, dims, cache_c,
+                                           jnp.zeros((), jnp.int32), positions)
+    return out
+
+
 def _layer_apply(cfg: ArchConfig, lp, x, positions, attn_impl):
     from jax.ad_checkpoint import checkpoint_name
     h = L.apply_norm(x, lp["ln1"], cfg.norm)
-    a = L.attention(lp["attn"], h, _attn_dims(cfg), positions, impl=attn_impl)
+    if _is_mla(cfg):
+        a = _mla_full_attention(cfg, lp["attn"], h, positions)
+    else:
+        a = L.attention(lp["attn"], h, _attn_dims(cfg), positions,
+                        impl=attn_impl)
     # named saves: under the 'save_outs' remat policy the backward pass reuses
     # these post-collective tensors instead of re-running attention/MLP (and
     # their all-to-all / all-reduce resharding) — hillclimb B iteration 2
@@ -251,6 +288,14 @@ def forward(params, cfg: ArchConfig, tokens, *, image_embeds=None,
 
 # ------------------------------------------------------------------ decode
 def init_cache(cfg: ArchConfig, batch: int, s_max: int, dtype=jnp.bfloat16):
+    if _is_mla(cfg):
+        # latent cache: ONE (c_kv + r)-wide row per token under the "k" key
+        # (shaped like a single-kv-head cache so every generic splice/page
+        # path applies unchanged); there is no "v" leaf — values are the
+        # leading c_kv columns of the same rows, read via the absorb path.
+        d = _mla_dims(cfg)
+        shape = (cfg.num_layers, batch, s_max, 1, d.latent_dim)
+        return {"k": jnp.zeros(shape, dtype), "pos": jnp.zeros((), jnp.int32)}
     kv, hd = cfg.num_kv_heads, cfg.head_dim
     shape = (cfg.num_layers, batch, s_max, kv, hd)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
@@ -261,6 +306,9 @@ def cache_logical(cfg: ArchConfig):
     """Adaptive: shard kv heads when they divide the model axis, else shard
     the cache sequence dim (context-parallel decode)."""
     from repro.sharding import specs as _sp
+    if _is_mla(cfg):
+        # the latent axis is shared by all heads — nothing head-like to shard
+        return {"k": (None, "batch", None, None, None), "pos": ()}
     if cfg.num_kv_heads % max(_sp.axis_size("kv_heads"), 1) == 0:
         kv = (None, "batch", None, "kv_heads", None)
     else:
@@ -307,6 +355,62 @@ def _decode_layer(cfg: ArchConfig, lp, x, ck, cv, pos, positions,
 def _index_tree(tree, i):
     return jax.tree.map(
         lambda t: jax.lax.dynamic_index_in_dim(t, i, 0, keepdims=False), tree)
+
+
+# ------------------------------------------------------------- MLA layers
+# The latent-cache twins of _decode_layer / _prefill_chunk_layer(_paged):
+# one "k" latent carry instead of (ck, cv), same residual structure. Kept as
+# separate bodies (and separate fori_loop drivers below) because the carry
+# pytree differs — a dummy "v" leaf would defeat the whole representation.
+def _decode_layer_mla(cfg: ArchConfig, lp, x, ck, pos, positions,
+                      block_tables=None, paged_impl: str = "einsum"):
+    h = L.apply_norm(x, lp["ln1"], cfg.norm)
+    if block_tables is not None:
+        out, ck = L.mla_attention_decode_paged(
+            lp["attn"], h, _mla_dims(cfg), ck, block_tables, pos, positions,
+            impl=paged_impl)
+    else:
+        out, ck = L.mla_attention_decode(lp["attn"], h, _mla_dims(cfg), ck,
+                                         pos, positions)
+    x = x + out
+    h = L.apply_norm(x, lp["ln2"], cfg.norm)
+    y = L.moe(lp["moe"], h, _moe_dims(cfg))[0] if cfg.moe else L.mlp(lp["mlp"], h)
+    return x + y, ck
+
+
+def _prefill_chunk_layer_mla(cfg: ArchConfig, lp, x, ck, start, positions):
+    h = L.apply_norm(x, lp["ln1"], cfg.norm)
+    out, ck = L.mla_attention_prefill_chunk(lp["attn"], h, _mla_dims(cfg),
+                                            ck, start, positions)
+    x = x + out
+    h = L.apply_norm(x, lp["ln2"], cfg.norm)
+    y = L.moe(lp["moe"], h, _moe_dims(cfg))[0] if cfg.moe else L.mlp(lp["mlp"], h)
+    return x + y, ck
+
+
+def _prefill_chunk_layer_paged_mla(cfg: ArchConfig, lp, x, pk, bt, positions,
+                                   write_floor, impl):
+    h = L.apply_norm(x, lp["ln1"], cfg.norm)
+    out, pk = L.mla_attention_prefill_chunk_paged(
+        lp["attn"], h, _mla_dims(cfg), pk, bt, positions, write_floor,
+        impl=impl)
+    x = x + out
+    h = L.apply_norm(x, lp["ln2"], cfg.norm)
+    y = L.moe(lp["moe"], h, _moe_dims(cfg))[0] if cfg.moe else L.mlp(lp["mlp"], h)
+    return x + y, pk
+
+
+def _mla_layer_loop(params, cfg: ArchConfig, x, ck0, layer_fn):
+    """fori_loop over layers carrying (x, latent cache) — the MLA driver
+    shared by decode/prefill/paged-prefill (see decode_step's docstring for
+    why fori_loop-with-DUS beats scan here)."""
+    def body(i, carry):
+        x, ck_all = carry
+        lp = _index_tree(params["layers"], i)
+        ck = jax.lax.dynamic_index_in_dim(ck_all, i, 0, keepdims=False)
+        x, ck = layer_fn(lp, x, ck)
+        return x, jax.lax.dynamic_update_index_in_dim(ck_all, ck, i, 0)
+    return jax.lax.fori_loop(0, cfg.num_layers, body, (x, ck0))
 
 
 # ------------------------------------------------------- parallel prefill
@@ -363,6 +467,16 @@ def prefill_chunk(params, cfg: ArchConfig, tokens, cache, *, image_embeds=None,
     positions = start + jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32), (B, C))
     use_kernel = first and attn_impl == "pallas"
     x = L.embed_lookup(params["embed"], tokens, compute_dtype)
+
+    if _is_mla(cfg):
+        x, new_k = _mla_layer_loop(
+            params, cfg, x, cache["k"],
+            lambda lp, x, ck: _prefill_chunk_layer_mla(cfg, lp, x, ck, start,
+                                                       positions))
+        x = L.apply_norm(x[:, -1:], params["final_norm"], cfg.norm)
+        w_un = params["unembed"]["w"] if not cfg.tie_embeddings else None
+        logits = L.lm_logits(params["embed"], x, w_un, vocab=cfg.vocab_size)
+        return logits.astype(jnp.float32), dict(cache, k=new_k, pos=start + C)
 
     if cfg.cross_attn_every:
         assert image_embeds is not None, "VLM prefill needs image_embeds"
@@ -494,6 +608,16 @@ def prefill_chunk_paged(params, cfg: ArchConfig, tokens, cache, *, bt_rows,
     quantized = "k_scale" in cache
     scales = {}
 
+    if _is_mla(cfg):
+        x, new_k = _mla_layer_loop(
+            params, cfg, x, cache["k"],
+            lambda lp, x, pk: _prefill_chunk_layer_paged_mla(
+                cfg, lp, x, pk, bt_rows, positions, write_floor, attn_impl))
+        x = L.apply_norm(x[:, -1:], params["final_norm"], cfg.norm)
+        w_un = params["unembed"]["w"] if not cfg.tie_embeddings else None
+        logits = L.lm_logits(params["embed"], x, w_un, vocab=cfg.vocab_size)
+        return logits.astype(jnp.float32), dict(cache, k=new_k)
+
     if cfg.cross_attn_every:
         assert image_embeds is not None, "VLM prefill needs image_embeds"
         img = image_embeds.astype(compute_dtype)
@@ -603,6 +727,17 @@ def decode_step(params, cfg: ArchConfig, token, cache, *, image_embeds=None,
     # prefill_chunk_paged — trace-time gate, fp32 jaxpr unchanged
     quantized = bt is not None and "k_scale" in cache
     scales = {}
+
+    if _is_mla(cfg):
+        x, new_k = _mla_layer_loop(
+            params, cfg, x, cache["k"],
+            lambda lp, x, ck: _decode_layer_mla(cfg, lp, x, ck, pos,
+                                                positions, bt,
+                                                paged_attn_impl))
+        x = L.apply_norm(x, params["final_norm"], cfg.norm)
+        w_un = params["unembed"]["w"] if not cfg.tie_embeddings else None
+        logits = L.lm_logits(params["embed"], x, w_un, vocab=cfg.vocab_size)
+        return logits.astype(jnp.float32), dict(cache, k=new_k, pos=pos + 1)
 
     if cfg.cross_attn_every:
         assert image_embeds is not None

@@ -85,14 +85,26 @@ Request lifecycle
 
 ``launch/serve.py`` remains a thin CLI shim over this package.
 """
+from repro.serve.config import ServeConfig
 from repro.serve.engine import PageAllocator, ServeEngine
-from repro.serve.metrics import SLO, MetricsRecorder
+from repro.serve.kvcache import (BACKENDS, DenseBackend, KVBackend,
+                                 PagedFP32Backend, PagedInt8Backend,
+                                 PagedLatentBackend, make_backend,
+                                 register_backend)
+from repro.serve.metrics import (SLO, MetricsRecorder, ReplaySummary,
+                                 merged_summary)
 from repro.serve.prefix import PrefixIndex, PrefixPlan
+from repro.serve.router import ReplicaRouter
 from repro.serve.scheduler import (Request, RequestState, SchedPolicy,
                                    Scheduler)
 from repro.serve.workload import ArrivalEvent, WorkloadSpec, generate, replay
 
-__all__ = ["ServeEngine", "PageAllocator", "MetricsRecorder", "SLO",
-           "PrefixIndex", "PrefixPlan", "Request", "RequestState",
+__all__ = ["ServeEngine", "ServeConfig", "PageAllocator",
+           "MetricsRecorder", "SLO", "ReplaySummary", "merged_summary",
+           "KVBackend", "BACKENDS", "register_backend", "make_backend",
+           "DenseBackend", "PagedFP32Backend", "PagedInt8Backend",
+           "PagedLatentBackend",
+           "PrefixIndex", "PrefixPlan", "ReplicaRouter",
+           "Request", "RequestState",
            "SchedPolicy", "Scheduler", "ArrivalEvent", "WorkloadSpec",
            "generate", "replay"]

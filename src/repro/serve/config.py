@@ -1,0 +1,177 @@
+"""Validated serving build configuration: :class:`ServeConfig`.
+
+``ServeEngine.build`` grew one keyword at a time across the serving PRs
+(sampling knobs, paging, backends, prefill modes, scheduling policy, tensor
+parallelism) until call sites carried a dozen positional-by-name arguments
+with the invariants between them enforced late — some only inside
+``ServeEngine.__init__`` after params were already initialised, some only
+inside a backend constructor. ServeConfig collapses that surface into one
+dataclass:
+
+    engine = ServeEngine.build("qwen2.5-32b-mla", config=ServeConfig(
+        page_size=16, kv_backend="paged_latent"))
+
+``validate()`` checks every cross-field invariant up front (paged-required-
+for-tp, int8/latent x tp rejection, page alignment, backend-name resolution
+against the :data:`kvcache.BACKENDS` registry), so a bad combination fails
+before any model weights are built. The old ``build(**kwargs)`` spelling
+still works through a shim that emits a ``DeprecationWarning`` and maps the
+kwargs onto a ServeConfig — behaviour is identical by construction, because
+the shim produces the same dataclass the config path consumes.
+
+The engine's ``__init__`` keeps its own guards: direct construction with a
+hand-built model bypasses build() entirely, and defense there is what the
+existing error-message tests pin.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax.numpy as jnp
+
+from repro.serve.kvcache import BACKENDS, KVBackend
+
+# backends that refuse tensor-parallel serving (see each class's ctor for
+# the representation-level reason); validate() mirrors the rejection so it
+# fires before params are initialised
+_TP_INCOMPATIBLE_BACKENDS = ("paged_int8", "paged_latent")
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    """Everything ``ServeEngine.build`` needs beyond the arch id.
+
+    Field groups:
+
+    * model: ``reduced`` (CI-size config), ``cfg_overrides`` (post-reduction
+      ``dataclasses.replace`` fields), ``quantize_int8`` (weight PTQ),
+      ``compute_dtype``, ``seed``;
+    * capacity: ``batch_slots``, ``s_max``;
+    * sampling: ``temperature``, ``top_k``, ``top_p``;
+    * cache representation: ``page_size``/``num_pages`` (None = dense),
+      ``kv_backend`` (a :data:`kvcache.BACKENDS` name, a ready
+      :class:`KVBackend`, or None = layout follows page_size),
+      ``prefix_cache`` (None = auto);
+    * prefill/decode paths: ``prefill_mode``, ``prefill_chunk_tokens``,
+      ``prefill_attn_impl``, ``paged_attn_impl``;
+    * scheduling: ``policy`` (SchedPolicy; None = all-off defaults);
+    * parallelism: ``tp`` (1-axis serving mesh degree; None = no mesh).
+    """
+
+    reduced: bool = True
+    batch_slots: int = 4
+    s_max: int = 64
+    seed: int = 0
+    quantize_int8: bool = False
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    page_size: Optional[int] = None
+    num_pages: Optional[int] = None
+    kv_backend: Any = None
+    prefix_cache: Optional[bool] = None
+    prefill_mode: str = "parallel"
+    prefill_chunk_tokens: int = 64
+    prefill_attn_impl: str = "auto"
+    paged_attn_impl: str = "auto"
+    policy: Any = None
+    compute_dtype: Any = jnp.float32
+    tp: Optional[int] = None
+    cfg_overrides: Optional[dict] = None
+
+    def _backend_name(self) -> Optional[str]:
+        """The registry name the kv_backend field resolves to (None when the
+        layout just follows page_size)."""
+        if isinstance(self.kv_backend, KVBackend):
+            return self.kv_backend.name
+        return self.kv_backend
+
+    def validate(self, cfg=None) -> "ServeConfig":
+        """Raise ValueError on any inconsistent field combination; returns
+        self so call sites can chain ``ServeConfig(...).validate()``.
+
+        ``cfg``: optional resolved ArchConfig for the arch-dependent checks
+        (kv-head divisibility under tp, MLA requirement of the latent
+        backend). Without it only arch-independent invariants run."""
+        if self.batch_slots < 1:
+            raise ValueError(f"batch_slots must be >= 1, got "
+                             f"{self.batch_slots}")
+        if self.s_max < 1:
+            raise ValueError(f"s_max must be >= 1, got {self.s_max}")
+        if int(self.top_k) < 0:
+            raise ValueError(f"top_k must be >= 0 (0 = off), got "
+                             f"{self.top_k}")
+        if not 0.0 < float(self.top_p) <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+        if self.prefill_mode not in ("parallel", "scan"):
+            raise ValueError(f"prefill_mode must be 'parallel' or 'scan', "
+                             f"got {self.prefill_mode!r}")
+        if self.paged_attn_impl not in ("auto", "kernel", "einsum"):
+            raise ValueError(f"paged_attn_impl must be 'auto', 'kernel' or "
+                             f"'einsum', got {self.paged_attn_impl!r}")
+        if self.prefill_chunk_tokens < 1:
+            raise ValueError(f"prefill_chunk_tokens must be >= 1, got "
+                             f"{self.prefill_chunk_tokens}")
+
+        name = self._backend_name()
+        if isinstance(self.kv_backend, KVBackend):
+            paged_backend = self.kv_backend.paged
+        elif isinstance(name, str):
+            if name not in BACKENDS:
+                raise ValueError(f"unknown kv_backend {name!r}; available: "
+                                 f"{sorted(BACKENDS)}")
+            paged_backend = BACKENDS[name].paged
+        else:
+            paged_backend = None
+        if self.page_size is not None:
+            if self.page_size < 1:
+                raise ValueError(f"page_size must be >= 1, got "
+                                 f"{self.page_size}")
+            if self.s_max % self.page_size:
+                raise ValueError(f"s_max {self.s_max} must be a multiple of "
+                                 f"page_size {self.page_size}")
+            if paged_backend is False:
+                raise ValueError(f"kv_backend={name!r} conflicts with "
+                                 f"page_size={self.page_size}; drop one of "
+                                 f"them")
+        elif paged_backend:
+            raise ValueError(f"kv_backend={name!r} needs page_size")
+
+        tp = self.tp or 1
+        if tp > 1:
+            if self.page_size is None:
+                raise ValueError(
+                    "tensor-parallel serving needs a PAGED cache (pass "
+                    "page_size=): only the page pool has a mesh layout")
+            if name in _TP_INCOMPATIBLE_BACKENDS:
+                raise ValueError(
+                    f"kv_backend={name!r} does not support tensor-parallel "
+                    f"serving; use kv_backend='paged' with tp>1")
+            if cfg is not None and cfg.num_kv_heads % tp:
+                raise ValueError(
+                    f"num_kv_heads={cfg.num_kv_heads} is not divisible by "
+                    f"tp={tp}; pick a tp dividing the kv-head count "
+                    "(whole GQA groups must stay shard-local)")
+        if (cfg is not None and name == "paged_latent"
+                and getattr(cfg, "kv_lora_rank", 0) <= 0):
+            raise ValueError(
+                f"kv_backend='paged_latent' needs an MLA arch "
+                f"(kv_lora_rank > 0); {cfg.name!r} caches per-head K/V — "
+                f"use kv_backend='paged'")
+        return self
+
+    def engine_kwargs(self) -> dict:
+        """The ``ServeEngine.__init__`` keyword subset (build() resolves
+        the model/mesh fields — reduced, quantize_int8, tp, cfg_overrides —
+        itself)."""
+        return dict(
+            batch_slots=self.batch_slots, s_max=self.s_max,
+            compute_dtype=self.compute_dtype, temperature=self.temperature,
+            top_k=self.top_k, top_p=self.top_p, page_size=self.page_size,
+            num_pages=self.num_pages, kv_backend=self.kv_backend,
+            prefix_cache=self.prefix_cache, prefill_mode=self.prefill_mode,
+            prefill_chunk_tokens=self.prefill_chunk_tokens,
+            prefill_attn_impl=self.prefill_attn_impl,
+            paged_attn_impl=self.paged_attn_impl, policy=self.policy,
+            seed=self.seed)

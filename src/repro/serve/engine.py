@@ -89,6 +89,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import logging
+import warnings
 from typing import Callable, Dict, List, Optional
 
 import jax
@@ -516,61 +517,79 @@ class ServeEngine:
 
     # ------------------------------------------------------------ factory
     @classmethod
-    def build(cls, arch: str = "hymba-1.5b", *, reduced: bool = True,
-              batch_slots: int = 4, s_max: int = 64, seed: int = 0,
-              quantize_int8: bool = False, temperature: float = 0.0,
-              top_k: int = 0, top_p: float = 1.0,
-              page_size: Optional[int] = None, num_pages: Optional[int] = None,
-              kv_backend=None,
-              prefix_cache: Optional[bool] = None,
-              prefill_mode: str = "parallel", prefill_chunk_tokens: int = 64,
-              prefill_attn_impl: str = "auto",
-              paged_attn_impl: str = "auto",
-              policy: Optional[SchedPolicy] = None,
-              compute_dtype=jnp.float32,
-              tp: Optional[int] = None,
-              cfg_overrides: Optional[dict] = None) -> "ServeEngine":
-        """Construct model + params from an arch id; the int8 PTQ path is the
-        same structural quantize->dequant-on-load as the paper's C5 (the
-        pallas quant_matmul kernel consumes q directly on TPU).
+    def build(cls, arch: str = "hymba-1.5b", *, config=None,
+              **legacy) -> "ServeEngine":
+        """Construct model + params from an arch id and a
+        :class:`~repro.serve.config.ServeConfig`:
 
-        ``tp``: tensor-parallel degree — builds a 1-axis serving mesh over
-        the first ``tp`` local devices (tp=1 is a legal 1-device mesh: it
-        exercises the whole mesh code path and is the bit-exactness anchor
-        against mesh=None). ``cfg_overrides``: dataclasses.replace fields
+            ServeEngine.build("qwen2.5-32b-mla", config=ServeConfig(
+                page_size=16, kv_backend="paged_latent"))
+
+        ``config.validate(cfg)`` runs against the resolved arch BEFORE any
+        weights are built, so cross-field mistakes (dense + tp, int8/latent
+        x tp, unknown backend name, page misalignment) fail fast. The int8
+        PTQ path is the same structural quantize->dequant-on-load as the
+        paper's C5 (the pallas quant_matmul kernel consumes q directly on
+        TPU). ``config.tp`` builds a 1-axis serving mesh over the first
+        ``tp`` local devices (tp=1 is a legal 1-device mesh: it exercises
+        the whole mesh code path and is the bit-exactness anchor against
+        mesh=None). ``config.cfg_overrides``: dataclasses.replace fields
         applied AFTER reduction — reduced configs can shrink num_kv_heads
-        to 1 (e.g. qwen2.5-32b's 40h/8kv reduces to 4h/1kv), which blocks
-        kv-head sharding; the tp tests/bench override the head counts while
-        keeping everything else reduced."""
+        to 1, which blocks kv-head sharding; the tp tests/bench override
+        the head counts while keeping everything else reduced.
+
+        DEPRECATED spelling: ``build(arch, page_size=..., s_max=...)`` —
+        the pre-ServeConfig kwarg surface. Still accepted (each kwarg maps
+        onto the ServeConfig field of the same name, so behaviour is
+        identical by construction) but emits a DeprecationWarning; passing
+        both ``config`` and legacy kwargs is an error."""
+        from repro.serve.config import ServeConfig
+        if legacy:
+            if config is not None:
+                raise ValueError(
+                    "pass either config=ServeConfig(...) or the legacy "
+                    "keyword arguments, not both; the legacy kwargs are "
+                    f"deprecated (got {sorted(legacy)})")
+            known = {f.name for f in dataclasses.fields(ServeConfig)}
+            unknown = sorted(set(legacy) - known)
+            if unknown:
+                raise TypeError(f"unknown ServeEngine.build arguments "
+                                f"{unknown}; ServeConfig fields: "
+                                f"{sorted(known)}")
+            warnings.warn(
+                "ServeEngine.build(**kwargs) is deprecated; pass "
+                "config=ServeConfig(...) instead (same field names)",
+                DeprecationWarning, stacklevel=2)
+            config = ServeConfig(**legacy)
+        elif config is None:
+            config = ServeConfig()
         cfg = configs.get_config(arch)
-        if reduced:
+        if config.reduced:
             cfg = reduced_config(cfg)
-        if cfg_overrides:
-            cfg = dataclasses.replace(cfg, **cfg_overrides)
+        if config.cfg_overrides:
+            cfg = dataclasses.replace(cfg, **config.cfg_overrides)
+        # the device-count guard outranks validate(): "you don't have the
+        # devices" is the actionable error on a 1-device host even when the
+        # reduced config's kv-head count would also reject the tp degree
         mesh = None
-        if tp is not None:
-            from repro.sharding import specs as _specs
+        if config.tp is not None:
+            tp = config.tp
             ndev = len(jax.devices())
             if tp < 1 or tp > ndev:
                 raise ValueError(f"tp={tp} needs 1..{ndev} local devices "
                                  "(CPU tests force 8 via XLA_FLAGS="
                                  "--xla_force_host_platform_device_count=8)")
-            mesh = jax.make_mesh((tp,), (_specs.TP_AXIS,))
+        config.validate(cfg)
+        if config.tp is not None:
+            from repro.sharding import specs as _specs
+            mesh = jax.make_mesh((config.tp,), (_specs.TP_AXIS,))
         model = get_model(cfg)
-        params = model.init(jax.random.PRNGKey(seed))
-        if quantize_int8:
+        params = model.init(jax.random.PRNGKey(config.seed))
+        if config.quantize_int8:
             from repro.core.quantize import dequantize_params, quantize_params
-            params = dequantize_params(quantize_params(params), compute_dtype)
-        return cls(model, params, batch_slots=batch_slots, s_max=s_max,
-                   compute_dtype=compute_dtype, temperature=temperature,
-                   top_k=top_k, top_p=top_p, page_size=page_size,
-                   num_pages=num_pages, kv_backend=kv_backend,
-                   prefix_cache=prefix_cache,
-                   prefill_mode=prefill_mode,
-                   prefill_chunk_tokens=prefill_chunk_tokens,
-                   prefill_attn_impl=prefill_attn_impl,
-                   paged_attn_impl=paged_attn_impl, policy=policy, seed=seed,
-                   mesh=mesh)
+            params = dequantize_params(quantize_params(params),
+                                       config.compute_dtype)
+        return cls(model, params, mesh=mesh, **config.engine_kwargs())
 
     # ------------------------------------------------------------ extras
     def _decode_extras(self) -> dict:

@@ -36,10 +36,17 @@ Backends:
   aliasing shares a page's scale with its payload; COW re-quantizes the
   fresh page exactly once (the chunk splice that follows the row copy).
 
+* :class:`PagedLatentBackend` — MLA latent pages: each pool row is ONE
+  per-token ``(kv_lora_rank + qk_rope_head_dim)``-dim compressed latent
+  (shared by every query head via the absorb path) instead of per-head
+  K/V. Same allocator/block-table/COW contract as the fp32 pool — COW
+  copies a latent row, never per-head K/V — with resident KV per token
+  shrunk from ``2 * KV * hd`` to ``c + r`` floats.
+
 Adding a backend = subclass KVBackend, implement the five operations (and
 the layers-level write/read path if the representation changes attention's
-view), register a name in :func:`make_backend`. The MLA latent-page
-representation lands as just another backend behind this seam.
+view), and register it under a string key with :func:`register_backend`;
+:func:`make_backend` resolves names through that :data:`BACKENDS` registry.
 """
 from __future__ import annotations
 
@@ -211,6 +218,29 @@ def _jitted_prefix_seed_q8(model: Model, s_max: int, dtype):
 
 
 # -------------------------------------------------------------- the seam
+# string-keyed backend registry: name -> KVBackend subclass. Populated by
+# the @register_backend decorations below; external representations can
+# register their own class under a fresh key and every engine entry point
+# (ServeConfig.kv_backend, make_backend) resolves it by name.
+BACKENDS: dict = {}
+
+
+def register_backend(cls=None, *, aliases=()):
+    """Class decorator registering a :class:`KVBackend` subclass in
+    :data:`BACKENDS` under its ``name`` attribute (plus any ``aliases``).
+    Re-registering an existing key raises — a silent overwrite would let a
+    typo'd plugin shadow a built-in representation."""
+    def _register(cls):
+        for key in (cls.name, *aliases):
+            if key in BACKENDS:
+                raise ValueError(
+                    f"KV backend name {key!r} already registered "
+                    f"(by {BACKENDS[key].__name__}); pick a fresh key")
+            BACKENDS[key] = cls
+        return cls
+    return _register(cls) if cls is not None else _register
+
+
 class KVBackend:
     """Protocol every cache representation implements. Attributes:
     ``name`` (registry key), ``paged`` (pool + block tables vs per-slot
@@ -255,6 +285,7 @@ class KVBackend:
         """Invariant hook for per-page metadata (assert_page_invariants)."""
 
 
+@register_backend
 class DenseBackend(KVBackend):
     """The page_size == None degenerate: per-slot (B, s_max) rows, batch-axis
     completion splice, no pages/COW/prefix sharing."""
@@ -279,6 +310,7 @@ def _tp_degree(mesh) -> int:
     return mesh.shape[_sp.TP_AXIS]
 
 
+@register_backend(aliases=("paged_fp32",))
 class PagedFP32Backend(KVBackend):
     """The vLLM-style shared fp32/bf16 page pool (the pre-backend layout,
     bit-for-bit).
@@ -339,6 +371,7 @@ class PagedFP32Backend(KVBackend):
         return "einsum"
 
 
+@register_backend
 class PagedInt8Backend(PagedFP32Backend):
     """Int8 page pools + per-page symmetric scales. Same block tables,
     allocator contract, and attention dispatch as the fp32 pool — only the
@@ -395,15 +428,51 @@ class PagedInt8Backend(PagedFP32Backend):
                 f"{key} has non-finite or non-positive entries"
 
 
+@register_backend
+class PagedLatentBackend(PagedFP32Backend):
+    """MLA latent pages: each pool row is one per-token ``(kv_lora_rank +
+    qk_rope_head_dim)``-dim compressed latent shared by EVERY query head
+    (the absorb path folds ``wkv_b`` into the query/output einsums, so
+    attention reads the latent directly — values are the leading
+    ``kv_lora_rank`` columns of the same rows). The cache therefore has a
+    single ``k`` pool of shape (L, P, page_size, 1, c + r) and NO ``v``
+    leaf; the generic splice/COW/seed machinery is key-generic, so this
+    backend inherits every representation op from the fp32 pool — COW
+    copies a latent row, never per-head K/V. Block tables, the allocator,
+    and the prefix index are untouched: a page is a page."""
+
+    name = "paged_latent"
+
+    def __init__(self, page_size: int, num_pages: int, mesh=None):
+        if _tp_degree(mesh) > 1:
+            # a latent row has no kv-head axis to shard (KV == 1 and every
+            # query head reads the same row); head-sharding the absorbed
+            # queries while replicating the pool is a follow-on
+            raise ValueError(
+                "paged_latent KV backend does not support tensor-parallel "
+                "serving (latent rows have no kv-head axis to shard); "
+                "use kv_backend='paged' with tp>1")
+        super().__init__(page_size, num_pages, mesh)
+
+    def init_cache(self, model: Model, batch_slots: int, s_max: int, dtype):
+        if getattr(model.cfg, "kv_lora_rank", 0) <= 0:
+            raise ValueError(
+                f"kv_backend='paged_latent' needs an MLA arch "
+                f"(kv_lora_rank > 0); {model.cfg.name!r} caches per-head "
+                f"K/V — use kv_backend='paged' (its pages would hold the "
+                f"same rows anyway)")
+        return super().init_cache(model, batch_slots, s_max, dtype)
+
+
 def make_backend(spec, *, family: Family, page_size=None, num_pages=None,
                  mesh=None):
     """Resolve an engine ``kv_backend`` spec: None (layout follows
-    page_size), a registered name ('dense' | 'paged' | 'paged_fp32' |
-    'paged_int8'), or a ready KVBackend instance. Int8 on an unsupported
-    family degrades to fp32 pages with a warning rather than failing — the
-    caller keeps a correct serving path. ``mesh``: optional serving mesh the
-    paged backends commit their pool onto (kv-head-sharded; see
-    PagedFP32Backend)."""
+    page_size), a name registered in :data:`BACKENDS` ('dense' | 'paged' |
+    'paged_fp32' | 'paged_int8' | 'paged_latent'), or a ready KVBackend
+    instance. Int8 on an unsupported family degrades to fp32 pages with a
+    warning rather than failing — the caller keeps a correct serving path.
+    ``mesh``: optional serving mesh the paged backends commit their pool
+    onto (kv-head-sharded; see PagedFP32Backend)."""
     if isinstance(spec, KVBackend):
         if mesh is not None and getattr(spec, "mesh", None) is not mesh:
             raise ValueError("a ready KVBackend instance must be built with "
@@ -411,24 +480,24 @@ def make_backend(spec, *, family: Family, page_size=None, num_pages=None,
         return spec
     if spec is None:
         spec = "paged" if page_size is not None else "dense"
-    if spec == "dense":
+    cls = BACKENDS.get(spec)
+    if cls is None:
+        raise ValueError(f"unknown kv_backend {spec!r}; available: "
+                         f"{sorted(BACKENDS)}")
+    if not cls.paged:
         if page_size is not None:
-            raise ValueError("kv_backend='dense' conflicts with page_size="
+            raise ValueError(f"kv_backend={spec!r} conflicts with page_size="
                              f"{page_size}; drop one of them")
         if _tp_degree(mesh) > 1:
             raise ValueError("tensor-parallel serving shards the PAGED pool "
                              "(page indices are shard-invariant); the dense "
                              "backend has no mesh layout — pass page_size=")
-        return DenseBackend()
+        return cls()
     if page_size is None:
         raise ValueError(f"kv_backend={spec!r} needs page_size")
-    if spec in ("paged", "paged_fp32"):
-        return PagedFP32Backend(page_size, num_pages, mesh=mesh)
-    if spec == "paged_int8":
-        if family not in INT8_KV_FAMILIES:
-            log.warning("paged_int8 KV backend supports %s (got %s); "
-                        "falling back to fp32 pages",
-                        [f.name for f in INT8_KV_FAMILIES], family)
-            return PagedFP32Backend(page_size, num_pages, mesh=mesh)
-        return PagedInt8Backend(page_size, num_pages, mesh=mesh)
-    raise ValueError(f"unknown kv_backend {spec!r}")
+    if cls is PagedInt8Backend and family not in INT8_KV_FAMILIES:
+        log.warning("paged_int8 KV backend supports %s (got %s); "
+                    "falling back to fp32 pages",
+                    [f.name for f in INT8_KV_FAMILIES], family)
+        cls = PagedFP32Backend
+    return cls(page_size, num_pages, mesh=mesh)

@@ -106,6 +106,121 @@ class SLO:
         return itl is None or itl <= self.itl_p95_s
 
 
+@dataclasses.dataclass
+class ReplaySummary:
+    """Unified result of a traffic replay — the one shape BOTH drivers
+    return: ``workload.replay`` (single engine) and ``router.replay``
+    (replica tier, with the per-replica breakdown attached).
+
+    ``metrics`` is the engine-level summary dict
+    (:meth:`MetricsRecorder.summary`) — for a tier it is the POOLED
+    summary over every replica's request records (real pooled percentiles,
+    not averages of averages; see :func:`merged_summary`). Dict-style
+    access (``summary["goodput"]``, ``summary["replicas"][0]["prefix"]``)
+    forwards into ``metrics`` and, on tier results, the
+    replicas/router/shed_at_router fields — every pre-ReplaySummary
+    consumer keeps indexing exactly as before."""
+
+    metrics: dict
+    replicas: Optional[List["ReplaySummary"]] = None   # tier results only
+    router: Optional[dict] = None                      # routing/shed counters
+    shed_at_router: int = 0
+
+    _TIER_KEYS = ("replicas", "router", "shed_at_router")
+
+    # ------------------------------------------------- dict compatibility
+    def __getitem__(self, key):
+        if self.replicas is not None and key in self._TIER_KEYS:
+            return getattr(self, key)
+        return self.metrics[key]
+
+    def get(self, key, default=None):
+        try:
+            return self[key]
+        except KeyError:
+            return default
+
+    def keys(self):
+        ks = list(self.metrics.keys())
+        if self.replicas is not None:
+            ks.extend(self._TIER_KEYS)
+        return ks
+
+    def __contains__(self, key) -> bool:
+        return key in self.keys()
+
+    def to_dict(self) -> dict:
+        """Plain-dict view (JSON-dumpable; replicas recurse)."""
+        out = dict(self.metrics)
+        if self.replicas is not None:
+            out["replicas"] = [r.to_dict() if isinstance(r, ReplaySummary)
+                               else r for r in self.replicas]
+            out["router"] = self.router
+            out["shed_at_router"] = self.shed_at_router
+        return out
+
+    # ------------------------------------------------- named conveniences
+    @property
+    def goodput(self) -> Optional[dict]:
+        """The goodput/attainment section (None when replayed without an
+        SLO)."""
+        return self.metrics.get("goodput")
+
+    @property
+    def attainment_by_priority(self) -> dict:
+        """priority (str) -> attainment section; empty without an SLO."""
+        g = self.goodput or {}
+        return g.get("by_priority", {})
+
+    @property
+    def ttft_p95_s(self) -> float:
+        return self.metrics["ttft_s"]["p95"]
+
+    @property
+    def itl_p95_s(self) -> float:
+        return self.metrics["itl_s"]["p95"]
+
+    @property
+    def throughput_tokens_per_s(self) -> float:
+        return self.metrics["throughput_tokens_per_s"]
+
+
+# engine counters pooled by merged_summary: every scalar counter a recorder
+# accumulates, except prefill_chunk_max_tokens which merges by max
+_SUMMED_COUNTERS = (
+    "decode_steps", "prefills", "prefill_tokens", "prefill_chunks",
+    "prefill_chunk_tokens", "prefill_wall_s", "prefix_lookups",
+    "prefix_hits", "prefix_hit_tokens", "prefix_pages_shared",
+    "prefix_cow_copies", "prefix_evictions", "preemptions",
+    "shed_requests", "starvation_guard_skips")
+
+
+def merged_summary(recorders: List["MetricsRecorder"],
+                   slo: Optional[SLO] = None) -> dict:
+    """Pool several recorders (one per replica) into ONE summary dict: all
+    request records land in a single scratch recorder so the percentile /
+    goodput / attainment math runs over the pooled population (replica
+    averages of percentiles are not percentiles), counters sum, and the
+    wall clock spans the earliest start to the latest stop. Recorders
+    share the default monotonic clock, so cross-replica timestamps are
+    directly comparable."""
+    agg = MetricsRecorder()
+    i = 0
+    for m in recorders:
+        for rec in m.requests.values():
+            agg.requests[i] = rec
+            i += 1
+        for name in _SUMMED_COUNTERS:
+            setattr(agg, name, getattr(agg, name) + getattr(m, name))
+        agg.prefill_chunk_max_tokens = max(agg.prefill_chunk_max_tokens,
+                                           m.prefill_chunk_max_tokens)
+    starts = [m._t_start for m in recorders if m._t_start is not None]
+    stops = [m._t_stop for m in recorders if m._t_stop is not None]
+    agg._t_start = min(starts) if starts else None
+    agg._t_stop = max(stops) if stops else None
+    return agg.summary(slo)
+
+
 class MetricsRecorder:
     """Collects request lifecycle timestamps and engine counters."""
 

@@ -37,7 +37,7 @@ from typing import List, Optional
 
 import numpy as np
 
-from repro.serve.metrics import SLO
+from repro.serve.metrics import ReplaySummary, SLO, merged_summary
 from repro.serve.prefix import _SEED, chain_hash
 from repro.serve.workload import ArrivalEvent
 
@@ -181,12 +181,17 @@ class ReplicaRouter:
                 raise RuntimeError(f"router drain exceeded {max_ticks} ticks")
 
     def replay(self, events: List[ArrivalEvent],
-               slo: Optional[SLO] = None) -> dict:
+               slo: Optional[SLO] = None) -> ReplaySummary:
         """Open-loop replay of a workload stream across the tier (the
         multi-replica twin of ``workload.replay``): events submit at their
         arrival offsets against a real clock, every busy replica ticks in
-        between, shed events are dropped at the door. Returns per-replica
-        ``metrics.summary`` plus the router's routing/shedding counters."""
+        between, shed events are dropped at the door. Returns a
+        :class:`ReplaySummary` whose top level is the POOLED tier summary
+        (percentiles/goodput over every replica's records — the same shape
+        the single-engine replay returns) with the per-replica breakdown,
+        router counters, and router-shed count attached; the historical
+        ``result["replicas"][i]`` / ``result["router"]`` /
+        ``result["shed_at_router"]`` indexing still works."""
         ev = sorted(events, key=lambda e: e.t)
         for e in self.engines:
             e.metrics.on_start()
@@ -205,11 +210,13 @@ class ReplicaRouter:
                                                           - t0))))
         for e in self.engines:
             e.metrics.on_stop()
-        return {
-            "replicas": [e.metrics.summary(slo) for e in self.engines],
-            "router": self.stats(),
-            "shed_at_router": shed,
-        }
+        return ReplaySummary(
+            metrics=merged_summary([e.metrics for e in self.engines], slo),
+            replicas=[ReplaySummary(metrics=e.metrics.summary(slo))
+                      for e in self.engines],
+            router=self.stats(),
+            shed_at_router=shed,
+        )
 
     def stats(self) -> dict:
         return {

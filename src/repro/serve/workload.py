@@ -22,7 +22,7 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
-from repro.serve.metrics import SLO
+from repro.serve.metrics import ReplaySummary, SLO
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,12 +104,15 @@ def generate(spec: WorkloadSpec, vocab_size: int) -> List[ArrivalEvent]:
 
 
 def replay(engine, events: List[ArrivalEvent],
-           slo: Optional[SLO] = None) -> dict:
+           slo: Optional[SLO] = None) -> ReplaySummary:
     """Open-loop replay on a real clock: each event is submitted at its
     arrival offset WHETHER OR NOT the engine has caught up (queueing under
     overload is exactly what the harness measures), with engine ticks in
-    between; returns ``engine.metrics.summary(slo)`` — including the
-    ``goodput`` section when an SLO is given."""
+    between; returns a :class:`ReplaySummary` wrapping
+    ``engine.metrics.summary(slo)`` — including the ``goodput`` section
+    when an SLO is given. Dict-style indexing keeps working
+    (``summary["requests"]``), same as the multi-replica
+    ``router.replay``."""
     ev = sorted(events, key=lambda e: e.t)
     m = engine.metrics
     m.on_start()
@@ -128,7 +131,7 @@ def replay(engine, events: List[ArrivalEvent],
             # capped so the loop stays responsive to the clock
             time.sleep(min(0.010, max(0.0, ev[i].t - (m.now() - t0))))
     m.on_stop()
-    return m.summary(slo)
+    return ReplaySummary(metrics=m.summary(slo))
 
 
 def _main(argv=None) -> int:
@@ -142,6 +145,7 @@ def _main(argv=None) -> int:
     import argparse
     import json
 
+    from repro.serve.config import ServeConfig
     from repro.serve.engine import ServeEngine
     from repro.serve.scheduler import SchedPolicy
 
@@ -160,8 +164,8 @@ def _main(argv=None) -> int:
     policy = None if args.fifo else SchedPolicy(
         drr=True, max_consecutive_prefill_ticks=2, preemption=True,
         admission_low_water=0.15, admission_shed_priority=2)
-    eng = ServeEngine.build(args.arch, reduced=True, batch_slots=2,
-                            s_max=96, page_size=16, policy=policy)
+    eng = ServeEngine.build(args.arch, config=ServeConfig(
+        reduced=True, batch_slots=2, s_max=96, page_size=16, policy=policy))
     spec = WorkloadSpec(
         n_requests=args.n, rate_rps=args.rate, seed=args.seed,
         prompt_len_median=16, prompt_len_max=64,
@@ -172,7 +176,7 @@ def _main(argv=None) -> int:
     events = generate(spec, eng.cfg.vocab_size)
     summary = replay(eng, events,
                      slo=SLO(ttft_s=args.slo_ttft, itl_p95_s=args.slo_itl))
-    print(json.dumps(summary, indent=2, default=float))
+    print(json.dumps(summary.to_dict(), indent=2, default=float))
     ok = (summary["requests"] == args.n
           and summary["completed"] + summary["aborted"] == args.n
           and summary["goodput"]["submitted"] == args.n)

@@ -43,6 +43,14 @@ BASE = {
                        "passes_bytes_ratio": True,
                        "passes_divergence_bound": True},
     },
+    "mla": {
+        "cells": [{"prompt_len": 32,
+                   "latent_decode_tokens_per_s": 1500.0}],
+        "acceptance": {"resident_bytes_ratio": 0.31,
+                       "greedy_prefix_match_mean": 1.0,
+                       "passes_bytes_ratio": True,
+                       "passes_divergence_bound": True},
+    },
     "goodput": {
         "cells": [{"cell": "burst", "policy_on": True}],
         "acceptance": {"passes_steady_slo": True, "passes_slo_gain": True,

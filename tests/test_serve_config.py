@@ -1,0 +1,176 @@
+"""The redesigned serve build API: ServeConfig + the legacy-kwarg shim +
+the string-keyed backend registry + the package API surface.
+
+* **Shim equivalence.** ``ServeEngine.build(arch, **kwargs)`` still works —
+  each kwarg maps onto the ServeConfig field of the same name, so the
+  greedy streams are identical by construction — but emits a
+  DeprecationWarning; mixing ``config=`` with legacy kwargs is an error,
+  and an unknown kwarg raises TypeError naming the valid fields.
+* **validate().** Every cross-field invariant fails fast with a pinned
+  message BEFORE any weights are built: capacity/sampling bounds, page
+  alignment, dense-vs-page_size conflicts, paged-backend-needs-page_size,
+  unknown backend names (listing the registry), tp-needs-paged, and the
+  tp-incompatible backends.
+* **Registry.** ``kvcache.BACKENDS`` is the single name->class table:
+  duplicate registration raises, a freshly registered class resolves
+  through ``make_backend`` and validates through ServeConfig, and a ready
+  KVBackend INSTANCE passes validate() whether or not its name is
+  registered (custom backends plug in without touching the table).
+* **API surface.** ``repro.serve.__all__`` is snapshot-pinned so an
+  accidental export removal (or an unexported new seam) fails loudly.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import repro.serve as serve
+from repro.serve.config import ServeConfig
+from repro.serve.engine import ServeEngine
+from repro.serve.kvcache import (BACKENDS, KVBackend, PagedFP32Backend,
+                                 make_backend, register_backend)
+
+ARCH = "qwen2.5-32b"
+S_MAX = 32
+PS = 8
+
+
+def _streams(engine):
+    rng = np.random.default_rng(11)
+    reqs = [engine.submit(rng.integers(0, engine.cfg.vocab_size, 8), g)
+            for g in (6, 4, 8, 5)]
+    engine.run()
+    return [r.tokens for r in reqs]
+
+
+# -------------------------------------------------------------------- shim
+def test_legacy_kwargs_equivalent_and_deprecated():
+    with pytest.warns(DeprecationWarning, match="ServeConfig"):
+        legacy = ServeEngine.build(ARCH, batch_slots=2, s_max=S_MAX,
+                                   page_size=PS, seed=0)
+    config = ServeEngine.build(ARCH, config=ServeConfig(
+        batch_slots=2, s_max=S_MAX, page_size=PS, seed=0))
+    assert _streams(legacy) == _streams(config)
+
+
+def test_config_plus_legacy_kwargs_rejected():
+    with pytest.raises(ValueError, match="not both"):
+        ServeEngine.build(ARCH, config=ServeConfig(), batch_slots=2)
+
+
+def test_unknown_legacy_kwarg_raises_typeerror():
+    with pytest.raises(TypeError, match="batch_slotz"):
+        ServeEngine.build(ARCH, batch_slotz=2)
+
+
+def test_config_path_emits_no_warning(recwarn):
+    ServeEngine.build(ARCH, config=ServeConfig(batch_slots=2, s_max=S_MAX))
+    assert not [w for w in recwarn.list
+                if issubclass(w.category, DeprecationWarning)]
+
+
+# --------------------------------------------------------------- validate()
+@pytest.mark.parametrize("fields,msg", [
+    (dict(batch_slots=0), "batch_slots"),
+    (dict(s_max=0), "s_max"),
+    (dict(top_k=-1), "top_k"),
+    (dict(top_p=0.0), "top_p"),
+    (dict(top_p=1.5), "top_p"),
+    (dict(prefill_mode="chunked"), "prefill_mode"),
+    (dict(paged_attn_impl="pallas"), "paged_attn_impl"),
+    (dict(prefill_chunk_tokens=0), "prefill_chunk_tokens"),
+    (dict(page_size=0), "page_size must be"),
+    (dict(page_size=24), "multiple of"),
+    (dict(kv_backend="dense", page_size=8), "conflicts"),
+    (dict(kv_backend="paged_int8"), "needs page_size"),
+    (dict(kv_backend="paged_latent"), "needs page_size"),
+    (dict(kv_backend="latent_mla", page_size=8), "unknown kv_backend"),
+    (dict(tp=2), "PAGED"),
+    (dict(tp=2, page_size=8, kv_backend="paged_int8"), "tensor-parallel"),
+    (dict(tp=2, page_size=8, kv_backend="paged_latent"), "tensor-parallel"),
+])
+def test_validate_rejects(fields, msg):
+    with pytest.raises(ValueError, match=msg):
+        ServeConfig(**{"s_max": 64, **fields}).validate()
+
+
+def test_validate_returns_self_and_accepts_good_configs():
+    good = ServeConfig(page_size=8, s_max=64, kv_backend="paged_fp32")
+    assert good.validate() is good
+    ServeConfig().validate()
+    ServeConfig(tp=2, page_size=8, s_max=64).validate()
+
+
+def test_unknown_backend_error_lists_registry():
+    with pytest.raises(ValueError) as e:
+        ServeConfig(kv_backend="nope", page_size=8, s_max=64).validate()
+    for name in sorted(BACKENDS):
+        assert name in str(e.value)
+
+
+def test_engine_kwargs_cover_init_surface():
+    """Every engine_kwargs() key must be a real ServeEngine.__init__
+    parameter — the seam that keeps the two surfaces from drifting."""
+    import inspect
+    params = set(inspect.signature(ServeEngine.__init__).parameters)
+    kw = set(ServeConfig().engine_kwargs())
+    missing = kw - params
+    assert not missing, f"engine_kwargs not accepted by __init__: {missing}"
+
+
+# ---------------------------------------------------------------- registry
+def test_registry_names():
+    assert {"dense", "paged", "paged_fp32", "paged_int8",
+            "paged_latent"} <= set(BACKENDS)
+
+
+def test_duplicate_registration_raises():
+    with pytest.raises(ValueError, match="already registered"):
+        @register_backend
+        class Clash(PagedFP32Backend):
+            name = "paged"
+
+
+def test_custom_backend_registers_resolves_and_validates():
+    @register_backend
+    class Custom(PagedFP32Backend):
+        name = "test_custom_fp32"
+    try:
+        assert BACKENDS["test_custom_fp32"] is Custom
+        be = make_backend("test_custom_fp32", family="dense", page_size=PS,
+                          num_pages=4)
+        assert type(be) is Custom
+        ServeConfig(kv_backend="test_custom_fp32", page_size=8,
+                    s_max=64).validate()
+        # a ready INSTANCE passes validate even if its name left the table
+        del BACKENDS["test_custom_fp32"]
+        ServeConfig(kv_backend=be, page_size=8, s_max=64).validate()
+        assert isinstance(be, KVBackend)
+    finally:
+        BACKENDS.pop("test_custom_fp32", None)
+
+
+# ------------------------------------------------------------- API surface
+def test_serve_api_surface_snapshot():
+    assert sorted(serve.__all__) == sorted([
+        "ServeEngine", "ServeConfig", "PageAllocator",
+        "MetricsRecorder", "SLO", "ReplaySummary", "merged_summary",
+        "KVBackend", "BACKENDS", "register_backend", "make_backend",
+        "DenseBackend", "PagedFP32Backend", "PagedInt8Backend",
+        "PagedLatentBackend",
+        "PrefixIndex", "PrefixPlan", "ReplicaRouter",
+        "Request", "RequestState", "SchedPolicy", "Scheduler",
+        "ArrivalEvent", "WorkloadSpec", "generate", "replay"])
+    for name in serve.__all__:
+        assert hasattr(serve, name), name
+
+
+def test_serve_config_fields_are_build_surface():
+    """The shim maps legacy kwargs 1:1 onto ServeConfig fields; pin the
+    field list so an added knob must consciously extend the config."""
+    assert sorted(f.name for f in dataclasses.fields(ServeConfig)) == sorted([
+        "reduced", "batch_slots", "s_max", "seed", "quantize_int8",
+        "temperature", "top_k", "top_p", "page_size", "num_pages",
+        "kv_backend", "prefix_cache", "prefill_mode",
+        "prefill_chunk_tokens", "prefill_attn_impl", "paged_attn_impl",
+        "policy", "compute_dtype", "tp", "cfg_overrides"])
