@@ -96,6 +96,16 @@ GATED_METRICS = [
     ("tp.acceptance.passes_shard_bytes", True, False, None),
     ("tp.acceptance.per_shard_kv_bytes_ratio", False, False, None),
     ("tp_cell.decode_tokens_per_s", True, True, None),
+    # backend x tp rows (sharding-aware KV seam): int8 pages under tp gate
+    # the mean greedy prefix match vs tp=1 (per-shard scale groups round
+    # differently — bitwise is not the contract) and the just-above-1/2
+    # per-shard bytes ratio; the latent row gates bitwise equality and the
+    # exactly-1.0 replicated-pool ratio. All same-run facts, relative-safe.
+    ("tp.tp_int8.passes_greedy_match", True, False, None),
+    ("tp.tp_int8.greedy_prefix_match_mean", True, False, None),
+    ("tp.tp_int8.per_shard_kv_bytes_ratio", False, False, None),
+    ("tp.tp_mla.passes_greedy_match", True, False, None),
+    ("tp.tp_mla.per_shard_kv_bytes_ratio", False, False, None),
     # replica router (PR 8): the affinity-vs-round-robin speedup is a ratio
     # of two tier runs in ONE process (same loosened 0.5 collapse threshold
     # as the other wall-clock speedup rows — its absolute floor is the

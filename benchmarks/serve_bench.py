@@ -808,8 +808,27 @@ def _tp_probe(spec: dict) -> None:
         best["tokens"] = first["tokens"]          # deterministic anyway
         return best
 
+    # int8/mla companion rows (sharding-aware backend seam): one run per
+    # (backend, tp) — these rows gate representation facts (prefix match,
+    # per-shard bytes), not throughput, so no best-of reps
+    def run_backend(arch, backend, overrides, tp):
+        eng = ServeEngine.build(arch, reduced=True, batch_slots=TP_SLOTS,
+                                s_max=TP_S_MAX, page_size=TP_PAGE,
+                                kv_backend=backend, cfg_overrides=overrides,
+                                tp=tp, seed=0)
+        rs = [eng.submit(p, gen_len) for p in prompts]
+        eng.run()
+        assert all(r.error is None for r in rs), [r.error for r in rs]
+        return {"tokens": [r.tokens for r in rs],
+                "per_shard_kv_bytes": eng.per_shard_kv_bytes()}
+
     out = {"plain": best_of(None),
-           "runs": {str(tp): best_of(tp) for tp in spec["tps"]}}
+           "runs": {str(tp): best_of(tp) for tp in spec["tps"]},
+           "int8": {str(tp): run_backend(PAGED_ARCH, "paged_int8",
+                                         TP_OVERRIDES, tp)
+                    for tp in (1, 2)},
+           "mla": {str(tp): run_backend(MLA_ARCH, "paged_latent", None, tp)
+                   for tp in (1, 2)}}
     print("TP_PROBE_RESULT " + json.dumps(out))
 
 
@@ -856,6 +875,48 @@ def bench_tp_cell(tps, *, requests: int) -> dict:
         print(f"tp={tp} [tp]: decode {r['decode_tokens_per_s']:8.1f} tok/s | "
               f"per-shard KV {r['per_shard_kv_bytes']:>9d} B "
               f"({ratio:.3f}x tp=1)")
+    # int8 row: per-page per-SHARD scale groups mean tp=2 is NOT bitwise vs
+    # tp=1 (finer amax granularity rounds differently) — gate the mean
+    # greedy prefix match instead; per-shard bytes land just above 1/2
+    # (the int8 pool halves exactly, each shard keeps its own (L, P, 1)
+    # scale column)
+    def _match_frac(a, b):
+        n = 0
+        for x, y in zip(a, b):
+            if x != y:
+                break
+            n += 1
+        return n / max(len(a), len(b), 1)
+
+    i1, i2 = res["int8"]["1"], res["int8"]["2"]
+    fr = [_match_frac(a, b) for a, b in zip(i2["tokens"], i1["tokens"])]
+    int8_match = sum(fr) / len(fr)
+    int8_ratio = i2["per_shard_kv_bytes"] / max(i1["per_shard_kv_bytes"], 1)
+    tp_int8 = {
+        "greedy_prefix_match_mean": int8_match,
+        "per_shard_kv_bytes_ratio": int8_ratio,
+        "passes_greedy_match": int8_match >= 0.6,
+        "passes_shard_bytes": int8_ratio <= 0.55,
+    }
+    print(f"tp=2 [tp_int8]: greedy prefix match {int8_match:.3f} "
+          f"(passes: {tp_int8['passes_greedy_match']}); per-shard KV "
+          f"{int8_ratio:.3f}x tp=1 (passes: {tp_int8['passes_shard_bytes']})")
+
+    # mla row: the latent pool REPLICATES (tp shards the absorbed head
+    # axis instead), so the expected per-shard bytes ratio is exactly 1.0
+    # and the greedy contract is BITWISE
+    m1, m2 = res["mla"]["1"], res["mla"]["2"]
+    mla_ratio = m2["per_shard_kv_bytes"] / max(m1["per_shard_kv_bytes"], 1)
+    tp_mla = {
+        "per_shard_kv_bytes_ratio": mla_ratio,
+        "passes_greedy_match": m2["tokens"] == m1["tokens"],
+        "passes_replicated_pool": mla_ratio == 1.0,
+    }
+    print(f"tp=2 [tp_mla]: greedy bitwise match "
+          f"{tp_mla['passes_greedy_match']}; latent pool per-shard "
+          f"{mla_ratio:.3f}x tp=1 (replicated: "
+          f"{tp_mla['passes_replicated_pool']})")
+
     # the gated ratio is pinned to tp=2 (present in quick AND full runs, the
     # same pin-the-workload rationale as the prefix cell); the boolean flag
     # still checks exact global/tp at EVERY measured degree
@@ -868,6 +929,8 @@ def bench_tp_cell(tps, *, requests: int) -> dict:
         "devices": TP_DEVICES,
         "plain_decode_tokens_per_s": plain["decode_tokens_per_s"],
         "cells": cells,
+        "tp_int8": tp_int8,
+        "tp_mla": tp_mla,
         "acceptance": {
             "cell": f"tp=2 of {sorted(tps)}, {TP_DEVICES} host devices",
             "passes_greedy_match": greedy_ok,

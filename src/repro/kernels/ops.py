@@ -154,6 +154,16 @@ def _paged_dispatch_local(q, pool_k, pool_v, block_tables, start, window: int,
                                window=window, interpret=False, **sc)
 
 
+def _squeeze_scale(s):
+    """Accept a (P,) scale table or the int8 backend's (P, 1) single-group
+    column (tp=1 keeps one whole-page group; multi-group tables only ever
+    meet the kernel inside the head-sharded shard_map, which slices each
+    shard's own column)."""
+    if s is not None and s.ndim == 2:
+        s = s[:, 0]
+    return s
+
+
 def _paged_dispatch(q, pool_k, pool_v, block_tables, start, window: int,
                     k_scale=None, v_scale=None, mesh=None, shard_axis=None):
     if mesh is not None and shard_axis is not None:
@@ -162,7 +172,8 @@ def _paged_dispatch(q, pool_k, pool_v, block_tables, start, window: int,
             block_tables, start, window=window,
             k_scale=k_scale, v_scale=v_scale)
     return _paged_dispatch_local(q, pool_k, pool_v, block_tables, start,
-                                 window, k_scale=k_scale, v_scale=v_scale)
+                                 window, k_scale=_squeeze_scale(k_scale),
+                                 v_scale=_squeeze_scale(v_scale))
 
 
 # mesh/shard_axis are STATIC jit args (Mesh is hashable), not read from the
@@ -205,22 +216,28 @@ def paged_prefill(q, pool_k, pool_v, block_tables, start, *,
                            mesh=mesh, shard_axis=shard_axis)
 
 
-@functools.partial(jax.jit, static_argnames=("window",))
+@functools.partial(jax.jit, static_argnames=("window", "mesh", "shard_axis"))
 def paged_decode_q8(q, pool_k, pool_v, k_scale, v_scale, block_tables,
-                    cache_pos, *, window: int = 0):
+                    cache_pos, *, window: int = 0, mesh=None,
+                    shard_axis=None):
     """paged_decode over INT8 pools: pool_k/pool_v are int8, k_scale/v_scale
-    are (P,) f32 per-page symmetric scales. Dequant happens inside the
-    kernel's gather (scales prefetched to SMEM) — HBM traffic stays int8."""
+    are (P,) — or per-kv-head-group (P, tp) — f32 per-page symmetric
+    scales. Dequant happens inside the kernel's gather (scales prefetched
+    to SMEM) — HBM traffic stays int8. mesh/shard_axis (from
+    specs.head_shard_axis) route through the head-sharded shard_map, where
+    each shard dequantizes with its own group's scale column."""
     return _paged_dispatch(q, pool_k, pool_v, block_tables, cache_pos,
-                           window, k_scale=k_scale, v_scale=v_scale)
+                           window, k_scale=k_scale, v_scale=v_scale,
+                           mesh=mesh, shard_axis=shard_axis)
 
 
-@functools.partial(jax.jit, static_argnames=("window",))
+@functools.partial(jax.jit, static_argnames=("window", "mesh", "shard_axis"))
 def paged_prefill_q8(q, pool_k, pool_v, k_scale, v_scale, block_tables,
-                     start, *, window: int = 0):
+                     start, *, window: int = 0, mesh=None, shard_axis=None):
     """paged_prefill over INT8 pools (see paged_decode_q8)."""
     return _paged_dispatch(q, pool_k, pool_v, block_tables, start,
-                           window, k_scale=k_scale, v_scale=v_scale)
+                           window, k_scale=k_scale, v_scale=v_scale,
+                           mesh=mesh, shard_axis=shard_axis)
 
 
 def _paged_dispatch_latent(q, pool_c, block_tables, start, scale_dim: int,
@@ -246,9 +263,11 @@ def _paged_dispatch_latent(q, pool_c, block_tables, start, scale_dim: int,
                                       interpret=False)
 
 
-@functools.partial(jax.jit, static_argnames=("scale_dim", "d_v"))
+@functools.partial(jax.jit, static_argnames=("scale_dim", "d_v", "mesh",
+                                             "shard_axis"))
 def paged_decode_latent(q, pool_c, block_tables, cache_pos, *,
-                        scale_dim: int, d_v: int):
+                        scale_dim: int, d_v: int, mesh=None,
+                        shard_axis=None):
     """Single-token decode attention over MLA latent pages.
 
     q: (B, 1, H, c+r) ABSORBED queries; pool_c: (P, page_size, 1, c+r) —
@@ -256,19 +275,30 @@ def paged_decode_latent(q, pool_c, block_tables, cache_pos, *,
     score contraction and (its leading ``d_v`` columns) the value
     accumulation. ``scale_dim`` is the logical head width the softmax
     divides by. Returns (B, 1, H, d_v) in latent space — the caller owns
-    the wkv_b value-half and ``wo`` projections. Latent pools are never
-    head-sharded (there is no head axis to shard), so there is no
-    mesh/shard_axis routing here; the latent backend rejects tp > 1."""
+    the wkv_b value-half and ``wo`` projections. The latent pool itself
+    has no kv-head axis (it stays replicated under tp); mesh/shard_axis
+    (from specs.latent_head_shard_axis) shard the ABSORBED queries/outputs
+    on their head axis through the latent shard_map wrapper."""
+    if mesh is not None and shard_axis is not None:
+        return _pa.paged_attention_latent_head_sharded(
+            _paged_dispatch_latent, mesh, shard_axis, q, pool_c,
+            block_tables, cache_pos, scale_dim=scale_dim, d_v=d_v)
     return _paged_dispatch_latent(q, pool_c, block_tables, cache_pos,
                                   scale_dim, d_v)
 
 
-@functools.partial(jax.jit, static_argnames=("scale_dim", "d_v"))
+@functools.partial(jax.jit, static_argnames=("scale_dim", "d_v", "mesh",
+                                             "shard_axis"))
 def paged_prefill_latent(q, pool_c, block_tables, start, *,
-                         scale_dim: int, d_v: int):
+                         scale_dim: int, d_v: int, mesh=None,
+                         shard_axis=None):
     """Continuation-chunk prefill attention over MLA latent pages (see
     paged_decode_latent). q: (B, C, H, c+r); the chunk's latent rows must
     already be spliced into the slot's pages."""
+    if mesh is not None and shard_axis is not None:
+        return _pa.paged_attention_latent_head_sharded(
+            _paged_dispatch_latent, mesh, shard_axis, q, pool_c,
+            block_tables, start, scale_dim=scale_dim, d_v=d_v)
     return _paged_dispatch_latent(q, pool_c, block_tables, start,
                                   scale_dim, d_v)
 

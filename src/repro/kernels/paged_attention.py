@@ -334,9 +334,13 @@ def paged_attention_head_sharded(dispatch, mesh, axis, q, pool_k, pool_v,
     the tp serve path wraps the local dispatch in an explicit ``shard_map``:
     q and both pools split on their head axes over the ``axis`` mesh axis
     (the pool leaves are already RESIDENT with exactly this sharding, so no
-    data moves for them); block tables, start positions, and the q8 page
-    scales are replicated — page ids are shard-invariant, and an int8
-    page's symmetric scale spans all its kv heads. Each shard runs the
+    data moves for them); block tables and start positions are replicated —
+    page ids are shard-invariant. The q8 page scales arrive as (P, tp)
+    tables — one column per kv-head GROUP, resident sharded on the group
+    axis alongside their kv heads — so each shard slices out its own (P, 1)
+    column and squeezes it to the (P,) layout the local dispatch expects:
+    the scale each shard dequantizes with was computed from that shard's
+    kv heads alone and never crosses the mesh. Each shard runs the
     unmodified kernel on its (B, H/tp, pages) sub-grid, and the outputs
     concatenate back on the head axis. Per-head attention is independent,
     so every output element is computed by exactly one shard with the same
@@ -355,12 +359,13 @@ def paged_attention_head_sharded(dispatch, mesh, axis, q, pool_k, pool_v,
     repl2 = SP(None, None)
 
     if k_scale is not None:
+        scales = SP(None, axis)           # (P, tp) -> per-shard (P, 1)
         def body(q_, pk_, pv_, bt_, st_, ks_, vs_):
             return dispatch(q_, pk_, pv_, bt_, st_, window,
-                            k_scale=ks_, v_scale=vs_)
+                            k_scale=ks_[:, 0], v_scale=vs_[:, 0])
         return shard_map(
             body, mesh=mesh,
-            in_specs=(heads, heads, heads, repl2, repl1, repl1, repl1),
+            in_specs=(heads, heads, heads, repl2, repl1, scales, scales),
             out_specs=heads, check_rep=False,
         )(q, pool_k, pool_v, block_tables, start, k_scale, v_scale)
 
@@ -371,3 +376,39 @@ def paged_attention_head_sharded(dispatch, mesh, axis, q, pool_k, pool_v,
         in_specs=(heads, heads, heads, repl2, repl1),
         out_specs=heads, check_rep=False,
     )(q, pool_k, pool_v, block_tables, start)
+
+
+def paged_attention_latent_head_sharded(dispatch, mesh, axis, q, pool_c,
+                                        block_tables, start, *,
+                                        scale_dim: int, d_v: int):
+    """Tensor-parallel dispatch around the LATENT paged kernel.
+
+    The latent pool has no kv-head axis (KV == 1; every query head reads
+    the same compressed rows) and is resident REPLICATED, so the split
+    lives entirely on the ABSORBED queries/outputs: q (B, Sq, H, c+r) and
+    the (B, Sq, H, d_v) output shard on their head axis while pool, block
+    tables, and start positions replicate. Per-head attention over the
+    shared latent is head-independent — each output element is computed by
+    exactly one shard with the same op sequence as tp=1, so the latent tp
+    path inherits the bitwise equivalence anchor (the caller's all-gather
+    before ``wo`` does the rest).
+
+    ``dispatch`` is the single-device latent dispatch
+    (``ops._paged_dispatch_latent`` — passed in so the interpret-grid guard
+    sees per-shard H). The caller guarantees the axis size divides H
+    (sharding.specs.latent_head_shard_axis)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as SP
+
+    heads = SP(None, None, axis, None)    # q (B,Sq,H,c+r) / out (B,Sq,H,d_v)
+    repl4 = SP(None, None, None, None)    # pool_c (P,ps,1,c+r)
+    repl2 = SP(None, None)
+    repl1 = SP(None)
+
+    def body(q_, pc_, bt_, st_):
+        return dispatch(q_, pc_, bt_, st_, scale_dim, d_v)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(heads, repl4, repl2, repl1),
+        out_specs=heads, check_rep=False,
+    )(q, pool_c, block_tables, start)

@@ -49,9 +49,11 @@ def paged_attention(q, pool_k, pool_v, block_tables, start, *, window=0,
     — a freed slot with an all--1 block table — returns exactly 0, matching
     the kernel's l == 0 guard.
 
-    k_scale/v_scale: optional (P,) f32 per-page symmetric dequant scales for
-    int8 pools — the gathered view is dequantized page-wise before the
-    softmax, mirroring the kernel's in-gather dequant."""
+    k_scale/v_scale: optional (P,) — or per-kv-head-group (P, T), group t
+    covering the contiguous KV/T kv heads — f32 per-page symmetric dequant
+    scales for int8 pools: the gathered view is dequantized page-wise
+    before the softmax, mirroring the kernel's in-gather dequant (under tp
+    each shard's kernel sees its own group's column)."""
     B, Sq, H, hd = q.shape
     P, ps, KV, _ = pool_k.shape
     mps = block_tables.shape[1]
@@ -68,10 +70,14 @@ def paged_attention(q, pool_k, pool_v, block_tables, start, *, window=0,
     view_v = flat_v[phys]
     if k_scale is not None:
         pg = jnp.where(ok, page, 0)
-        view_k = (view_k.astype(jnp.float32)
-                  * k_scale[pg][..., None, None]).astype(q.dtype)
-        view_v = (view_v.astype(jnp.float32)
-                  * v_scale[pg][..., None, None]).astype(q.dtype)
+        ks, vs = k_scale[pg], v_scale[pg]       # (B, n_rows) or (B, n_rows, T)
+        if ks.ndim == 2:
+            ks, vs = ks[..., None], vs[..., None]
+        rep = KV // ks.shape[-1]                # heads per scale group
+        ks = jnp.repeat(ks, rep, axis=-1)       # (B, n_rows, KV)
+        vs = jnp.repeat(vs, rep, axis=-1)
+        view_k = (view_k.astype(jnp.float32) * ks[..., None]).astype(q.dtype)
+        view_v = (view_v.astype(jnp.float32) * vs[..., None]).astype(q.dtype)
     q_pos = start[:, None] + jnp.arange(Sq)[None, :]        # (B, Sq)
     valid = ok[:, None, :] & (j[None, None, :] <= q_pos[:, :, None])
     if window > 0:

@@ -624,19 +624,35 @@ def paged_write_rows(pool, rows, row_idx, valid):
 
 
 # ------------------------------------------- int8 page writes (q8 backend)
-def _requant_page(blk, content):
-    """One symmetric int8 scale per page from its LIVE rows only.
-    blk: (B, ps, KV, hd) f32 dequantized page content; content: (B, ps) bool
-    — rows beyond the sequence frontier may hold stale payload from a
-    recycled page, so they are excluded from the amax AND zeroed in the
-    output. Returns (q (B,ps,KV,hd) int8, scale (B,) f32)."""
+def _requant_page(blk, content, groups: int = 1):
+    """Symmetric int8 scales per page from its LIVE rows only — one scale
+    per kv-head GROUP (``groups`` is the serving tp degree; group t covers
+    the contiguous KV/groups kv heads shard t owns, so each scale is an
+    amax over shard-local values and the requant write partitions comm-free
+    under a kv-head-sharded pool; groups=1 is the original whole-page
+    scale, bitwise). blk: (B, ps, KV, hd) f32 dequantized page content;
+    content: (B, ps) bool — rows beyond the sequence frontier may hold
+    stale payload from a recycled page, so they are excluded from the amax
+    AND zeroed in the output. Returns (q (B,ps,KV,hd) int8,
+    scale (B, groups) f32)."""
     from repro.core.quantize import page_scale
+    B, ps, KV, hd = blk.shape
     vm = content[..., None, None]
     masked = jnp.where(vm, blk, 0.0)
-    scale = page_scale(jnp.max(jnp.abs(masked), axis=(1, 2, 3)))
-    q = jnp.clip(jnp.round(masked / scale[:, None, None, None]),
+    g = masked.reshape(B, ps, groups, KV // groups, hd)
+    scale = page_scale(jnp.max(jnp.abs(g), axis=(1, 3, 4)))
+    q = jnp.clip(jnp.round(g / scale[:, None, :, None, None]),
                  -127, 127).astype(jnp.int8)
-    return q, scale
+    return q.reshape(B, ps, KV, hd), scale
+
+
+def _dequant_page_block(pool_pg, scale_pg):
+    """Dequantize gathered int8 pages (B, ps, KV, hd) with their per-group
+    scales (B, T) — group t scales the contiguous KV/T kv-head slab t."""
+    B, ps, KV, hd = pool_pg.shape
+    T = scale_pg.shape[-1]
+    g = pool_pg.astype(jnp.float32).reshape(B, ps, T, KV // T, hd)
+    return (g * scale_pg[:, None, :, None, None]).reshape(B, ps, KV, hd)
 
 
 def paged_append_row_q8(pool, scale, rows, block_tables, safe_pos, valid):
@@ -645,23 +661,25 @@ def paged_append_row_q8(pool, scale, rows, block_tables, safe_pos, valid):
     The page is a quantization block: appending a row changes the page's
     max-abs, so the slot's CURRENT page is dequantized (one page per slot —
     never the full pool), the new row overlaid at ``safe_pos % ps``, and the
-    page re-quantized with a fresh symmetric scale. Rows past the append
-    offset are treated as stale (recycled-page payload) and zeroed. Invalid
-    writes (freed slots, unallocated pages) drop both the page and its
-    scale update. pool: (P, ps, KV, hd) int8; scale: (P,) f32; rows:
-    (B, KV, hd); safe_pos: (B,) clipped logical positions; valid: (B,)."""
+    page re-quantized with fresh symmetric per-group scales. Rows past the
+    append offset are treated as stale (recycled-page payload) and zeroed.
+    Invalid writes (freed slots, unallocated pages) drop both the page and
+    its scale update. pool: (P, ps, KV, hd) int8; scale: (P, T) f32 — one
+    column per kv-head group (T = serving tp degree, 1 when unsharded);
+    rows: (B, KV, hd); safe_pos: (B,) clipped positions; valid: (B,)."""
     P, ps = pool.shape[:2]
     mps = block_tables.shape[1]
     B = rows.shape[0]
+    T = scale.shape[-1]
     page = jnp.take_along_axis(
         block_tables, jnp.clip(safe_pos // ps, 0, mps - 1)[:, None],
         axis=1)[:, 0]
     pg = jnp.clip(page, 0, P - 1)
-    blk = pool[pg].astype(jnp.float32) * scale[pg][:, None, None, None]
+    blk = _dequant_page_block(pool[pg], scale[pg])
     off = safe_pos % ps
     blk = blk.at[jnp.arange(B), off].set(rows.astype(jnp.float32))
     content = jnp.arange(ps)[None, :] <= off[:, None]
-    q, new_scale = _requant_page(blk, content)
+    q, new_scale = _requant_page(blk, content, T)
     tgt = jnp.where(valid & (page >= 0), pg, P)      # OOB -> dropped
     pool = pool.at[tgt].set(q, mode="drop")
     scale = scale.at[tgt].set(new_scale, mode="drop")
@@ -674,18 +692,20 @@ def paged_splice_chunk_q8(pool, scale, rows, block_tables, positions,
     prefill splice, quantized). Visits each logical page the chunk overlaps
     (a static loop of at most C//ps + 2 pages), overlays the chunk's rows on
     the page's dequantized live content, and re-quantizes the whole page —
-    so a COW-rematerialised partial page gets its fresh scale here, exactly
+    so a COW-rematerialised partial page gets its fresh scales here, exactly
     once. Pages the chunk does NOT write (aliased prefix pages below
     ``write_floor``, including a full-hit's recomputed last row) are left
-    untouched: their payload AND scale stay shared.
+    untouched: their payload AND scales stay shared.
 
-    pool: (P, ps, KV, hd) int8; scale: (P,) f32; rows: (B, C, KV, hd);
+    pool: (P, ps, KV, hd) int8; scale: (P, T) f32 — one column per kv-head
+    group (T = serving tp degree, 1 when unsharded); rows: (B, C, KV, hd);
     positions: (B, C) absolute query positions (contiguous, shared start);
     write_floor: scalar first writable logical row."""
     P, ps = pool.shape[:2]
     B, C = positions.shape
     mps = block_tables.shape[1]
     n_rows = mps * ps
+    T = scale.shape[-1]
     start = positions[:, :1]                          # (B, 1)
     b_idx = jnp.arange(B)[:, None]
     for t in range((C - 1) // ps + 2):
@@ -694,7 +714,7 @@ def paged_splice_chunk_q8(pool, scale, rows, block_tables, positions,
             block_tables, jnp.clip(lpg, 0, mps - 1)[:, None], axis=1)[:, 0]
         in_range = (lpg < mps) & (page >= 0)
         pg = jnp.clip(page, 0, P - 1)
-        blk = pool[pg].astype(jnp.float32) * scale[pg][:, None, None, None]
+        blk = _dequant_page_block(pool[pg], scale[pg])
         row_pos = lpg[:, None] * ps + jnp.arange(ps)[None, :]   # (B, ps)
         ci = row_pos - start                          # chunk-relative index
         from_chunk = ((ci >= 0) & (ci < C) & (row_pos >= write_floor)
@@ -703,7 +723,7 @@ def paged_splice_chunk_q8(pool, scale, rows, block_tables, positions,
         blk = jnp.where(from_chunk[..., None, None],
                         chunk_rows.astype(jnp.float32), blk)
         content = (row_pos <= start + C - 1) & (row_pos < n_rows)
-        q, new_scale = _requant_page(blk, content)
+        q, new_scale = _requant_page(blk, content, T)
         writable = from_chunk.any(axis=1) & in_range
         tgt = jnp.where(writable, pg, P)
         pool = pool.at[tgt].set(q, mode="drop")
@@ -713,10 +733,17 @@ def paged_splice_chunk_q8(pool, scale, rows, block_tables, positions,
 
 def dequant_paged_view(view, phys, scale, page_size: int, dtype):
     """Dequantize a block-table-gathered int8 view (B, n_rows, KV, hd) using
-    the per-page scales of the pages each row was gathered from."""
+    the per-page — (P,), or per-kv-head-group (P, T) — scales of the pages
+    each row was gathered from."""
     P = scale.shape[0]
     pg = jnp.clip(phys // page_size, 0, P - 1)
-    return (view.astype(jnp.float32) * scale[pg][..., None, None]).astype(dtype)
+    sc = scale[pg]                       # (B, n_rows) or (B, n_rows, T)
+    if sc.ndim == 2:
+        sc = sc[..., None]
+    B, n, KV, hd = view.shape
+    T = sc.shape[-1]
+    g = view.astype(jnp.float32).reshape(B, n, T, KV // T, hd)
+    return (g * sc[..., None, None]).reshape(view.shape).astype(dtype)
 
 
 def attention_decode_paged(params, x, dims: AttnDims, pool_k, pool_v,
@@ -752,11 +779,13 @@ def attention_decode_paged(params, x, dims: AttnDims, pool_k, pool_v,
     path matches it to greedy-token exactness (its online softmax uses the
     same dot-then-scale f32 operation order).
 
-    ``k_scale``/``v_scale``: optional (P,) f32 per-page symmetric scales —
-    the int8-backend path. The new row's write re-quantizes the slot's
+    ``k_scale``/``v_scale``: optional (P, T) f32 per-page per-kv-head-group
+    symmetric scales (T = serving tp degree, 1 when unsharded) — the
+    int8-backend path. The new row's write re-quantizes the slot's
     current page in place (``paged_append_row_q8``), reads dequantize
-    per-page (inside the Pallas kernel's gather on the kernel path), and
-    the return grows to (out, pool_k, pool_v, k_scale, v_scale)."""
+    per-page (inside the Pallas kernel's gather on the kernel path, each
+    tp shard using its own group's scale column), and the return grows to
+    (out, pool_k, pool_v, k_scale, v_scale)."""
     q, k, v = _qkv(params, x, dims, positions)
     P, ps, KV, hd = pool_k.shape
     B = q.shape[0]
@@ -785,12 +814,13 @@ def attention_decode_paged(params, x, dims: AttnDims, pool_k, pool_v,
         # freed slots (cache_pos >= n_rows) carry an all--1 table: every
         # page is skipped and the kernel returns 0 rows for them, so no
         # clamping of start is needed for the skip logic to stay sound
+        tp_mesh, tp_axis = _sp.head_shard_axis(H, KV)
         if quantized:
             out = kops.paged_decode_q8(q, pool_k, pool_v, k_scale, v_scale,
                                        block_tables, cache_pos,
-                                       window=dims.window)
+                                       window=dims.window,
+                                       mesh=tp_mesh, shard_axis=tp_axis)
         else:
-            tp_mesh, tp_axis = _sp.head_shard_axis(H, KV)
             out = kops.paged_decode(q, pool_k, pool_v, block_tables,
                                     cache_pos, window=dims.window,
                                     mesh=tp_mesh, shard_axis=tp_axis)
@@ -848,8 +878,9 @@ def attention_prefill_chunk_paged(params, x, dims: AttnDims, pool_k, pool_v,
     reference over the full block-table span. Returns
     (out (B, C, H*hd) @ wo, new_pool_k, new_pool_v).
 
-    ``k_scale``/``v_scale``: optional (P,) f32 per-page scales — the int8
-    backend. The splice re-quantizes each page the chunk writes
+    ``k_scale``/``v_scale``: optional (P, T) f32 per-page per-kv-head-group
+    scales (T = serving tp degree) — the int8 backend. The splice
+    re-quantizes each page the chunk writes
     (``paged_splice_chunk_q8``; untouched aliased prefix pages keep their
     shared scale), reads dequantize per-page, and the return grows to
     (out, pool_k, pool_v, k_scale, v_scale)."""
@@ -887,12 +918,13 @@ def attention_prefill_chunk_paged(params, x, dims: AttnDims, pool_k, pool_v,
     if impl == "kernel":
         from repro.kernels import ops as kops
         from repro.sharding import specs as _sp
+        tp_mesh, tp_axis = _sp.head_shard_axis(H, KV)
         if quantized:
             out = kops.paged_prefill_q8(q, pool_k, pool_v, k_scale, v_scale,
                                         block_tables, positions[:, 0],
-                                        window=dims.window)
+                                        window=dims.window,
+                                        mesh=tp_mesh, shard_axis=tp_axis)
         else:
-            tp_mesh, tp_axis = _sp.head_shard_axis(H, KV)
             out = kops.paged_prefill(q, pool_k, pool_v, block_tables,
                                      positions[:, 0], window=dims.window,
                                      mesh=tp_mesh, shard_axis=tp_axis)
@@ -1018,11 +1050,18 @@ def mla_latent_rows(params, x, dims: MLADims, positions):
 
 def _mla_out(params, attn, dims: MLADims, x):
     """Absorbed output projection: latent attention output (B, S, H, c_kv)
-    -> value heads via wb_v -> wo."""
+    -> value heads via wb_v -> wo. The wb_v einsum contracts only the
+    latent width c (head-local), so a head-sharded ``attn`` stays
+    head-sharded through it; the tp serve path then all-gathers the value
+    heads BEFORE wo (one un-split contraction — the same replicate-before-
+    wo structure as the K/V paths, and what keeps latent tp>1 bitwise
+    equal to tp=1). Identity outside a mesh context."""
+    from repro.sharding import specs as _sp
     B, S, H, _ = attn.shape
     _, wb_v = _mla_wkv_b(params, dims, x.dtype)
     out = jnp.einsum("bshc,hcd->bshd", attn, wb_v)
-    return out.reshape(B, S, H * dims.head_dim) @ params["wo"].astype(x.dtype)
+    out = _sp.replicate(out.reshape(B, S, H * dims.head_dim))
+    return out @ params["wo"].astype(x.dtype)
 
 
 def mla_attention_decode(params, x, dims: MLADims, cache_c, cache_pos,
@@ -1107,8 +1146,13 @@ def mla_attention_decode_paged(params, x, dims: MLADims, pool_c,
 
     if impl == "kernel":
         from repro.kernels import ops as kops
+        from repro.sharding import specs as _sp
+        # tp shards the ABSORBED queries/outputs on their head axis; the
+        # latent pool itself is replicated (no kv-head axis to shard)
+        tp_mesh, tp_axis = _sp.latent_head_shard_axis(H)
         attn = kops.paged_decode_latent(q, pool_c, block_tables, cache_pos,
-                                        scale_dim=dims.scale_dim, d_v=c)
+                                        scale_dim=dims.scale_dim, d_v=c,
+                                        mesh=tp_mesh, shard_axis=tp_axis)
     else:
         qg = q.reshape(B, 1, 1, H, dims.latent_dim)
         phys, ok = paged_row_indices(block_tables, ps, n_rows)
@@ -1150,9 +1194,12 @@ def mla_attention_prefill_chunk_paged(params, x, dims: MLADims, pool_c,
 
     if impl == "kernel":
         from repro.kernels import ops as kops
+        from repro.sharding import specs as _sp
+        tp_mesh, tp_axis = _sp.latent_head_shard_axis(H)
         attn = kops.paged_prefill_latent(q, pool_c, block_tables,
                                          positions[:, 0],
-                                         scale_dim=dims.scale_dim, d_v=c)
+                                         scale_dim=dims.scale_dim, d_v=c,
+                                         mesh=tp_mesh, shard_axis=tp_axis)
     else:
         qg = q.reshape(B, C, 1, H, dims.latent_dim)
         phys, ok = paged_row_indices(block_tables, ps, n_rows)

@@ -325,8 +325,8 @@ def _decode_layer(cfg: ArchConfig, lp, x, ck, cv, pos, positions,
     slice and attention goes through the paged path (models/layers.py);
     ``paged_impl`` selects the Pallas block-gather kernel or the
     masked-einsum reference read. ``kscale``/``vscale`` are this layer's
-    (P,) per-page dequant scales for int8 pools; when given the return
-    grows to (x, ck, cv, kscale, vscale)."""
+    (P, tp) per-page per-kv-head-group dequant scales for int8 pools; when
+    given the return grows to (x, ck, cv, kscale, vscale)."""
     quantized = kscale is not None
     h = L.apply_norm(x, lp["ln1"], cfg.norm)
     if block_tables is not None:
@@ -530,7 +530,8 @@ def _prefill_chunk_layer_paged(cfg: ArchConfig, lp, x, pk, pv, bt, positions,
     splice) and attention reads everything — prior chunks, aliased prefix
     pages, the current chunk — through the block table. Same residual
     structure as ``_prefill_chunk_layer``/``_decode_layer``. Int8 pools
-    carry per-layer (P,) scales and the return grows accordingly."""
+    carry per-layer (P, tp) per-group scales and the return grows
+    accordingly."""
     quantized = kscale is not None
     h = L.apply_norm(x, lp["ln1"], cfg.norm)
     if quantized:
@@ -602,9 +603,10 @@ def prefill_chunk_paged(params, cfg: ArchConfig, tokens, cache, *, bt_rows,
     positions = start + jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32),
                                          (K, C))
     x = L.embed_lookup(params["embed"], tokens, compute_dtype)
-    # an int8-backend cache carries (L, P) per-page scale leaves alongside
-    # the pools; the scales thread through the layer loop exactly like the
-    # pools do. Gated at trace time, so the fp32 jaxpr is unchanged.
+    # an int8-backend cache carries (L, P, tp) per-page per-group scale
+    # leaves alongside the pools; the scales thread through the layer loop
+    # exactly like the pools do. Gated at trace time, so the fp32 jaxpr is
+    # unchanged.
     quantized = "k_scale" in cache
     scales = {}
 
@@ -627,8 +629,10 @@ def prefill_chunk_paged(params, cfg: ArchConfig, tokens, cache, *, bt_rows,
         pv0 = cache["v"].reshape(n_super, per, *cache["v"].shape[1:])
 
         if quantized:
-            ks0 = cache["k_scale"].reshape(n_super, per, -1)
-            vs0 = cache["v_scale"].reshape(n_super, per, -1)
+            ks0 = cache["k_scale"].reshape(n_super, per,
+                                           *cache["k_scale"].shape[1:])
+            vs0 = cache["v_scale"].reshape(n_super, per,
+                                           *cache["v_scale"].shape[1:])
 
             def bodyq(i, carry):
                 x, pk_all, pv_all, ks_all, vs_all = carry
@@ -723,8 +727,8 @@ def decode_step(params, cfg: ArchConfig, token, cache, *, image_embeds=None,
     bt = cache.get("block_tables")
     positions = L.decode_positions(pos, B)
     x = L.embed_lookup(params["embed"], token, compute_dtype)
-    # int8-backend caches carry (L, P) per-page scale leaves; see
-    # prefill_chunk_paged — trace-time gate, fp32 jaxpr unchanged
+    # int8-backend caches carry (L, P, tp) per-page per-group scale leaves;
+    # see prefill_chunk_paged — trace-time gate, fp32 jaxpr unchanged
     quantized = bt is not None and "k_scale" in cache
     scales = {}
 
@@ -748,8 +752,10 @@ def decode_step(params, cfg: ArchConfig, token, cache, *, image_embeds=None,
         cv0 = cache["v"].reshape(n_super, per, *cache["v"].shape[1:])
 
         if quantized:
-            ks0 = cache["k_scale"].reshape(n_super, per, -1)
-            vs0 = cache["v_scale"].reshape(n_super, per, -1)
+            ks0 = cache["k_scale"].reshape(n_super, per,
+                                           *cache["k_scale"].shape[1:])
+            vs0 = cache["v_scale"].reshape(n_super, per,
+                                           *cache["v_scale"].shape[1:])
 
             def bodyq(i, carry):
                 x, ck_all, cv_all, ks_all, vs_all = carry

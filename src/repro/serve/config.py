@@ -12,9 +12,9 @@ dataclass:
         page_size=16, kv_backend="paged_latent"))
 
 ``validate()`` checks every cross-field invariant up front (paged-required-
-for-tp, int8/latent x tp rejection, page alignment, backend-name resolution
-against the :data:`kvcache.BACKENDS` registry), so a bad combination fails
-before any model weights are built. The old ``build(**kwargs)`` spelling
+for-tp, the backend's own ``tp_compatible`` capability answer, page
+alignment, backend-name resolution against the :data:`kvcache.BACKENDS`
+registry), so a bad combination fails before any model weights are built. The old ``build(**kwargs)`` spelling
 still works through a shim that emits a ``DeprecationWarning`` and maps the
 kwargs onto a ServeConfig — behaviour is identical by construction, because
 the shim produces the same dataclass the config path consumes.
@@ -30,12 +30,8 @@ from typing import Any, Optional
 
 import jax.numpy as jnp
 
-from repro.serve.kvcache import BACKENDS, KVBackend
-
-# backends that refuse tensor-parallel serving (see each class's ctor for
-# the representation-level reason); validate() mirrors the rejection so it
-# fires before params are initialised
-_TP_INCOMPATIBLE_BACKENDS = ("paged_int8", "paged_latent")
+from repro.serve.kvcache import (BACKENDS, KVBackend, _shards_kv_heads,
+                                 check_tp_support)
 
 
 @dataclasses.dataclass
@@ -144,11 +140,15 @@ class ServeConfig:
                 raise ValueError(
                     "tensor-parallel serving needs a PAGED cache (pass "
                     "page_size=): only the page pool has a mesh layout")
-            if name in _TP_INCOMPATIBLE_BACKENDS:
-                raise ValueError(
-                    f"kv_backend={name!r} does not support tensor-parallel "
-                    f"serving; use kv_backend='paged' with tp>1")
-            if cfg is not None and cfg.num_kv_heads % tp:
+            if isinstance(self.kv_backend, KVBackend):
+                cls = type(self.kv_backend)
+            elif isinstance(name, str):
+                cls = BACKENDS[name]
+            else:
+                cls = BACKENDS["paged"]     # layout follows page_size
+            check_tp_support(cls, tp)
+            if (cfg is not None and _shards_kv_heads(cls)
+                    and cfg.num_kv_heads % tp):
                 raise ValueError(
                     f"num_kv_heads={cfg.num_kv_heads} is not divisible by "
                     f"tp={tp}; pick a tp dividing the kv-head count "

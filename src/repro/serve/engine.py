@@ -116,22 +116,15 @@ log = logging.getLogger("repro.serve.engine")
 
 
 def _under_mesh(mesh, fn):
-    """Wrap a step function so it TRACES inside the tensor-parallel serving
-    mesh context: the with-block runs at trace time, so every
-    specs.shard/replicate/head_shard_axis call in model code resolves
-    against this mesh. TP_SERVE_RULES maps every logical axis to None —
-    the whole dataflow stays replicated except the KV pool (committed
-    sharded by the backend) and the attention core's shard_map; that is
-    what keeps tp>1 ticks bitwise equal to tp=1 (see sharding/specs.py)."""
+    """Trace ``fn`` inside the tensor-parallel serving mesh context
+    (identity when mesh is None). The engine only forwards the mesh token —
+    which rules apply and what they mean lives in sharding/specs.py
+    (:func:`specs.serve_trace`), keeping mesh internals out of this
+    module."""
     if mesh is None:
         return fn
     from repro.sharding import specs as _specs
-
-    @functools.wraps(fn)
-    def wrapped(*args, **kwargs):
-        with _specs.use_mesh(mesh, _specs.TP_SERVE_RULES):
-            return fn(*args, **kwargs)
-    return wrapped
+    return _specs.serve_trace(mesh, fn)
 
 
 # Jitted step functions are cached at module level keyed on the (frozen,
@@ -384,10 +377,13 @@ class ServeEngine:
         self._drr_cursor = 0          # rotates the DRR starting job per tick
         self._consec_prefill_ticks = 0  # starvation-guard state
 
-        # tensor-parallel serving mesh: the KV pool leaves commit sharded on
-        # their kv-head axis, params/activations replicate, and the paged
-        # attention core runs under shard_map (see sharding/specs.py for
-        # why that exact split keeps tp>1 bitwise equal to tp=1)
+        # tensor-parallel serving mesh: the cache leaves commit through the
+        # backend's place() hook, params/activations replicate, and the
+        # attention cores route through shard_map wrappers resolved at the
+        # kernels layer. Every mesh/axis-name decision lives behind the
+        # backend seam or the sharding/specs helpers — the engine holds the
+        # mesh as an opaque token and never reads its internals (pinned by
+        # the AST guard in tests/test_kvcache.py).
         self.mesh = mesh
         if mesh is not None:
             from repro.sharding import specs as _specs
@@ -395,21 +391,7 @@ class ServeEngine:
                 raise ValueError(
                     "tensor-parallel serving needs a PAGED cache (pass "
                     "page_size=): only the page pool has a mesh layout")
-            tp = (mesh.shape[_specs.TP_AXIS]
-                  if _specs.TP_AXIS in mesh.axis_names else 1)
-            if tp > 1 and self.cfg.num_kv_heads % tp:
-                raise ValueError(
-                    f"num_kv_heads={self.cfg.num_kv_heads} is not divisible "
-                    f"by tp={tp}; pick a tp dividing the kv-head count "
-                    "(whole GQA groups must stay shard-local)")
-            # weights replicate onto every mesh device (P() is rank-
-            # agnostic); activations follow via jit. Replicated weights are
-            # the deliberate choice here: splitting a projection's
-            # contraction would psum partial sums in a shard-dependent
-            # order and break the bitwise tp anchor.
-            from jax.sharding import NamedSharding, PartitionSpec
-            self.params = jax.device_put(
-                self.params, NamedSharding(mesh, PartitionSpec()))
+            self.params = _specs.replicate_params(self.params, mesh)
 
         if page_size is not None and model.cfg.family == Family.SSM:
             log.warning("ssm/rwkv state is O(1) in s_max — ignoring paging")
@@ -428,7 +410,8 @@ class ServeEngine:
             # orchestration state that follows (allocator, block tables)
             self.backend: KVBackend = make_backend(
                 kv_backend, family=self.cfg.family, page_size=page_size,
-                num_pages=self.num_pages, mesh=mesh)
+                num_pages=self.num_pages, mesh=mesh,
+                num_kv_heads=self.cfg.num_kv_heads)
             # rows one slot's attention cache can hold (ring width for hybrid)
             self.capacity = self.backend.capacity(self.cfg, s_max)
             self.allocator = PageAllocator(self.num_pages)
@@ -437,7 +420,8 @@ class ServeEngine:
                                     -1, np.int32)
         else:
             self.backend = make_backend(kv_backend, family=self.cfg.family,
-                                        mesh=mesh)
+                                        mesh=mesh,
+                                        num_kv_heads=self.cfg.num_kv_heads)
         self.cache = self.backend.init_cache(model, batch_slots, s_max,
                                              self.cache_dtype)
 
@@ -526,8 +510,9 @@ class ServeEngine:
                 page_size=16, kv_backend="paged_latent"))
 
         ``config.validate(cfg)`` runs against the resolved arch BEFORE any
-        weights are built, so cross-field mistakes (dense + tp, int8/latent
-        x tp, unknown backend name, page misalignment) fail fast. The int8
+        weights are built, so cross-field mistakes (dense + tp, a backend
+        whose capability query refuses the tp degree, unknown backend name,
+        page misalignment) fail fast. The int8
         PTQ path is the same structural quantize->dequant-on-load as the
         paper's C5 (the pallas quant_matmul kernel consumes q directly on
         TPU). ``config.tp`` builds a 1-axis serving mesh over the first
@@ -582,7 +567,7 @@ class ServeEngine:
         config.validate(cfg)
         if config.tp is not None:
             from repro.sharding import specs as _specs
-            mesh = jax.make_mesh((config.tp,), (_specs.TP_AXIS,))
+            mesh = _specs.serve_mesh(config.tp)
         model = get_model(cfg)
         params = model.init(jax.random.PRNGKey(config.seed))
         if config.quantize_int8:
@@ -749,14 +734,19 @@ class ServeEngine:
                        for l in jax.tree.leaves(self.cache)))
 
     def per_shard_kv_bytes(self) -> int:
-        """PER-DEVICE resident bytes of the K/V pool leaves (plus their
-        per-page scale metadata), via each leaf's committed sharding — the
-        number the tp bench gates at ~1/tp of the global pool. Works
-        unmeshed too (single-device sharding: per-shard == global)."""
+        """PER-DEVICE resident bytes of the cache's pool leaves (payload
+        plus per-page scale metadata — every leaf the backend declared,
+        not a hardcoded k/v tuple, so a single-leaf latent pool or a
+        custom backend's extra leaves count too), via each leaf's
+        committed sharding — the number the tp bench gates against the
+        global pool. Orchestration metadata (block tables, positions) is
+        excluded. Works unmeshed too (single-device sharding: per-shard ==
+        global)."""
+        if not isinstance(self.cache, dict):
+            return 0
         total = 0
-        for key in ("k", "v", "k_scale", "v_scale"):
-            leaf = self.cache.get(key) if isinstance(self.cache, dict) else None
-            if leaf is None:
+        for key, leaf in self.cache.items():
+            if key in ("block_tables", "pos"):
                 continue
             shard_shape = leaf.sharding.shard_shape(leaf.shape)
             total += int(np.prod(shard_shape)) * leaf.dtype.itemsize

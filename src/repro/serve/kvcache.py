@@ -27,14 +27,18 @@ Backends:
 * :class:`PagedFP32Backend` — the vLLM-style shared page pool, extracted
   behaviour-preservingly from the pre-backend engine (all bit-exact anchors
   — degenerate page == dense, prefix on == off — hold through this class).
-* :class:`PagedInt8Backend` — pages stored int8 with ONE symmetric f32
-  scale per page (the page is the quantization block, DeepSeek-V3
-  ``act_quant`` style): `k`/`v` pools are int8 and `(L, P)` `k_scale`/
-  `v_scale` leaves ride the cache pytree. Dequant happens inside the paged
-  Pallas kernel's gather (scales are scalar-prefetch operands), so decode's
-  HBM KV traffic is ~4x smaller where it is bandwidth-bound. Prefix
-  aliasing shares a page's scale with its payload; COW re-quantizes the
-  fresh page exactly once (the chunk splice that follows the row copy).
+* :class:`PagedInt8Backend` — pages stored int8 with symmetric f32 scales
+  (the page is the quantization block, DeepSeek-V3 ``act_quant`` style):
+  `k`/`v` pools are int8 and `(L, P, tp)` `k_scale`/`v_scale` leaves ride
+  the cache pytree — one scale per page per KV-HEAD GROUP, where group t
+  covers the contiguous ``KV/tp`` kv heads shard t owns, so every scale is
+  an amax over shard-local values and the quantizing writes never cross
+  the mesh (tp=1 keeps one whole-page scale, bitwise the pre-sharding
+  layout). Dequant happens inside the paged Pallas kernel's gather (scales
+  are scalar-prefetch operands), so decode's HBM KV traffic is ~4x smaller
+  where it is bandwidth-bound. Prefix aliasing shares a page's scales with
+  its payload; COW re-quantizes the fresh page exactly once (the chunk
+  splice that follows the row copy).
 
 * :class:`PagedLatentBackend` — MLA latent pages: each pool row is ONE
   per-token ``(kv_lora_rank + qk_rope_head_dim)``-dim compressed latent
@@ -42,6 +46,15 @@ Backends:
   K/V. Same allocator/block-table/COW contract as the fp32 pool — COW
   copies a latent row, never per-head K/V — with resident KV per token
   shrunk from ``2 * KV * hd`` to ``c + r`` floats.
+
+Sharding is a first-class property of the protocol, not an engine special
+case: ``pool_axes()`` declares each leaf's logical sharding axes (scale
+leaves included), ``place(cache, mesh)`` commits a cache pytree onto a
+serving mesh from that declaration, and ``tp_compatible(mesh)`` is the
+capability query ``ServeConfig.validate`` / ``make_backend`` consult
+instead of maintaining a per-backend rejection ladder. A backend that
+declares nothing still works under tp — its cache replicates (with a
+warning) — so every future representation composes with the mesh for free.
 
 Adding a backend = subclass KVBackend, implement the five operations (and
 the layers-level write/read path if the representation changes attention's
@@ -109,27 +122,35 @@ def _jitted_prefix_seed(model: Model, s_max: int, dtype):
 
 
 # ------------------------------------------------------------ int8 splices
-def _quantize_pool_rows(req, C: int, ps: int):
+def _quantize_pool_rows(req, C: int, ps: int, groups: int = 1):
     """Quantize a transient-cache leaf (L, K, >=C, KV, hd) page-block-wise.
-    Returns (q (L,K,C,KV,hd) int8, scale (L,K,C//ps) f32) — one symmetric
-    scale per logical page. The engine's write floor is page-aligned, so a
-    splice drops whole pages at a time and payload/scale stay consistent."""
+    Returns (q (L,K,C,KV,hd) int8, scale (L,K,C//ps,groups) f32) — one
+    symmetric scale per logical page per kv-head GROUP. ``groups`` is the
+    serving tp degree: group t covers the contiguous ``KV/groups`` kv heads
+    shard t owns, so under a kv-head-sharded pool each scale entry is an
+    amax over shard-LOCAL values only and the quantizing write partitions
+    comm-free (GSPMD splits the group axis exactly along the shards).
+    ``groups=1`` reproduces the original whole-page scale bitwise. The
+    engine's write floor is page-aligned, so a splice drops whole pages at
+    a time and payload/scale stay consistent."""
     rows = req[:, :, :C].astype(jnp.float32)
     Lr, K = rows.shape[:2]
-    blocks = rows.reshape(Lr, K, C // ps, ps, *rows.shape[3:])
-    scale = page_scale(jnp.max(jnp.abs(blocks), axis=(3, 4, 5)))
-    q = jnp.clip(jnp.round(blocks / scale[..., None, None, None]),
+    KV, hd = rows.shape[3], rows.shape[4]
+    blocks = rows.reshape(Lr, K, C // ps, ps, groups, KV // groups, hd)
+    scale = page_scale(jnp.max(jnp.abs(blocks), axis=(3, 5, 6)))
+    q = jnp.clip(jnp.round(blocks / scale[:, :, :, None, :, None, None]),
                  -127, 127).astype(jnp.int8)
-    return q.reshape(Lr, K, C, *rows.shape[3:]), scale
+    return q.reshape(Lr, K, C, KV, hd), scale
 
 
 def insert_cache_rows_paged_q8(cache, request_cache, slots, phys_rows):
     """Int8 completion splice: like ``registry.insert_cache_rows_paged`` but
     the fp32 transient K/V rows are QUANTIZED page-by-page on the way into
-    the int8 pools, and each written page's scale lands in the (L, P)
-    scale tables. Rows/pages outside the request's reservation (phys >=
-    P * ps — including everything below a page-aligned write floor) are
-    dropped from payload AND scale alike."""
+    the int8 pools, and each written page's scales land in the (L, P, tp)
+    scale tables (the group count rides the scale leaf's trailing dim).
+    Rows/pages outside the request's reservation (phys >= P * ps —
+    including everything below a page-aligned write floor) are dropped
+    from payload AND scale alike."""
     slots = jnp.asarray(slots, jnp.int32)
     phys_rows = jnp.asarray(phys_rows, jnp.int32)
     out = {}
@@ -141,7 +162,8 @@ def insert_cache_rows_paged_q8(cache, request_cache, slots, phys_rows):
         if key in ("k", "v"):
             Lr, P, ps = leaf.shape[:3]
             C = phys_rows.shape[1]
-            q, scale = _quantize_pool_rows(req, C, ps)
+            q, scale = _quantize_pool_rows(req, C, ps,
+                                           cache[key + "_scale"].shape[-1])
             flat = leaf.reshape((Lr, P * ps) + leaf.shape[3:])
             flat = flat.at[:, phys_rows].set(q, mode="drop")
             out[key] = flat.reshape(leaf.shape)
@@ -149,6 +171,7 @@ def insert_cache_rows_paged_q8(cache, request_cache, slots, phys_rows):
             # is the first covered row's phys // ps (oob rows land on page
             # P and drop, exactly like their payload)
             page_idx = phys_rows[:, ::ps] // ps              # (K, C // ps)
+            # scale (L, K, C//ps, T) scatters onto the (L, P, T) table
             out[key + "_scale"] = cache[key + "_scale"].at[:, page_idx].set(
                 scale, mode="drop")
         elif key == "pos":
@@ -180,19 +203,23 @@ def copy_pool_rows_q8(cache, src_rows, dst_rows):
 def seed_prefix_cache_q8(model: Model, cache, phys_rows, row_ok, pos,
                          s_max: int, dtype=jnp.float32):
     """Int8 prefix seed: gather the shared prefix rows like
-    ``registry.seed_prefix_cache`` and DEQUANTIZE them with each row's page
-    scale, so the transient tail-prefill cache is a faithful f32 view of
-    the aliased int8 pages."""
+    ``registry.seed_prefix_cache`` and DEQUANTIZE them with each row's
+    per-group page scales, so the transient tail-prefill cache is a
+    faithful f32 view of the aliased int8 pages."""
     K = phys_rows.shape[0]
     out = model.init_cache(K, s_max, dtype)
     idx = jnp.where(row_ok, phys_rows, 0)
     for key in ("k", "v"):
         pool = cache[key]                   # (L, P, ps, KV, hd) int8
         Lr, P, ps = pool.shape[:3]
+        T = cache[key + "_scale"].shape[-1]
         flat = pool.reshape((Lr, P * ps) + pool.shape[3:])
         pg = jnp.clip(idx // ps, 0, P - 1)
-        rows = (flat[:, idx].astype(jnp.float32)
-                * cache[key + "_scale"][:, pg][..., None, None])
+        raw = flat[:, idx].astype(jnp.float32)       # (L, Kr, KV, hd)
+        KV, hd = raw.shape[2], raw.shape[3]
+        grouped = raw.reshape(Lr, raw.shape[1], T, KV // T, hd)
+        sc = cache[key + "_scale"][:, pg]            # (L, Kr, T)
+        rows = (grouped * sc[..., None, None]).reshape(raw.shape)
         mask = row_ok.reshape((1,) + row_ok.shape + (1,) * (rows.ndim - 3))
         out[key] = jnp.where(mask, rows, 0).astype(out[key].dtype)
     out["pos"] = jnp.asarray(pos, jnp.int32)
@@ -277,12 +304,58 @@ class KVBackend:
         return "einsum"
 
     def page_meta(self, cache) -> dict:
-        """Per-page metadata leaves this representation adds (name -> (L, P)
-        array); empty for unquantized backends."""
+        """Per-page metadata leaves this representation adds (name ->
+        (L, P, ...) array); empty for unquantized backends."""
         return {}
 
     def check_page_meta(self, cache, num_pages: int) -> None:
         """Invariant hook for per-page metadata (assert_page_invariants)."""
+
+    # ------------------------------------------------------ sharding hooks
+    @classmethod
+    def pool_axes(cls) -> dict:
+        """Logical sharding axes per cache leaf (leaf name -> logical-axis
+        tuple, resolved under ``specs.TP_POOL_RULES``), SCALE leaves
+        included. The base declares nothing — every leaf replicates — so a
+        backend without mesh knowledge still places correctly; see
+        :meth:`place`."""
+        return {}
+
+    @classmethod
+    def tp_compatible(cls, mesh) -> bool:
+        """Capability query: can this representation serve under the given
+        tensor parallelism? ``mesh`` may be a Mesh, None, or a plain int tp
+        degree (``ServeConfig.validate`` runs before any mesh exists). The
+        base says yes — :meth:`place` has a safe replicated fallback and
+        every built-in paged representation composes with tp."""
+        return True
+
+    def place(self, cache, mesh):
+        """Commit a freshly built cache pytree onto ``mesh``: each leaf
+        named in :meth:`pool_axes` gets its declared logical axes (resolved
+        under ``specs.TP_POOL_RULES``; non-divisible dims drop to
+        replicated), every other leaf replicates. No-op without a mesh.
+        A backend that never overrode :meth:`pool_axes` gets a fully
+        replicated cache under tp>1 plus a warning — correct, just not
+        memory-scaled per shard."""
+        if mesh is None:
+            return cache
+        from repro.sharding import specs as _sp
+        axes_map = self.pool_axes()
+        if (type(self).pool_axes.__func__ is KVBackend.pool_axes.__func__
+                and _tp_degree(mesh) > 1):
+            log.warning(
+                "KV backend %r declares no pool_axes(); placing its cache "
+                "fully replicated on the tp=%d mesh (correct, but the pool "
+                "does not shrink per shard)", self.name, _tp_degree(mesh))
+        shardings = {}
+        with _sp.use_mesh(mesh, _sp.TP_POOL_RULES):
+            for key, leaf in cache.items():
+                axes = axes_map.get(key)
+                if axes is None or len(axes) != leaf.ndim:
+                    axes = (None,) * leaf.ndim
+                shardings[key] = _sp.sharding_for(leaf.shape, axes)
+        return jax.device_put(cache, shardings)
 
 
 @register_backend
@@ -299,15 +372,47 @@ class DenseBackend(KVBackend):
     def insert_rows(self, cache, request_cache, slots, phys_rows=None):
         return _jitted_insert_rows()(cache, request_cache, slots)
 
+    @classmethod
+    def tp_compatible(cls, mesh) -> bool:
+        # tensor-parallel serving shards the PAGED pool (page indices are
+        # shard-invariant); the per-slot dense cache has no mesh layout
+        return _tp_degree(mesh) <= 1
+
 
 def _tp_degree(mesh) -> int:
-    """Size of the serving mesh's tensor-parallel axis (1 if no mesh)."""
+    """Size of the serving mesh's tensor-parallel axis (1 if no mesh).
+    Also accepts a plain int tp degree — ``ServeConfig.validate`` consults
+    the capability query before any mesh exists."""
     if mesh is None:
         return 1
+    if isinstance(mesh, int):
+        return mesh
     from repro.sharding import specs as _sp
     if _sp.TP_AXIS not in mesh.axis_names:
         return 1
     return mesh.shape[_sp.TP_AXIS]
+
+
+def _shards_kv_heads(cls) -> bool:
+    """Does this backend's declared pool layout shard the kv-head axis?
+    (Gates the num_kv_heads % tp divisibility requirement — a backend with
+    a replicated or head-free pool, e.g. paged_latent, has no such
+    constraint.)"""
+    return any("kv_heads" in axes for axes in cls.pool_axes().values())
+
+
+def check_tp_support(spec, tp: int) -> None:
+    """Raise the pinned tp-incompatibility error when ``spec``'s (a registry
+    name or KVBackend class) capability query refuses the given tp degree.
+    Shared by ``ServeConfig.validate`` (preflight) and :func:`make_backend`
+    (direct-construction defense)."""
+    cls = BACKENDS[spec] if isinstance(spec, str) else spec
+    if tp > 1 and not cls.tp_compatible(tp):
+        raise ValueError(
+            f"kv_backend={cls.name!r} reports tp_compatible=False for "
+            f"tp={tp}: this cache representation does not compose with "
+            f"tensor-parallel serving; use kv_backend='paged' with tp>1 "
+            f"or drop tp")
 
 
 @register_backend(aliases=("paged_fp32",))
@@ -333,25 +438,16 @@ class PagedFP32Backend(KVBackend):
         self.num_pages = num_pages
         self.mesh = mesh
 
+    @classmethod
+    def pool_axes(cls) -> dict:
+        from repro.sharding import specs as _sp
+        return {"k": _sp.KV_POOL_AXES, "v": _sp.KV_POOL_AXES}
+
     def init_cache(self, model: Model, batch_slots: int, s_max: int, dtype):
         cache = init_paged_cache(model, batch_slots, s_max,
                                  page_size=self.page_size,
                                  num_pages=self.num_pages, dtype=dtype)
-        return self._place(cache)
-
-    def _place(self, cache):
-        if self.mesh is None:
-            return cache
-        from repro.sharding import specs as _sp
-        shardings = {}
-        with _sp.use_mesh(self.mesh, _sp.TP_POOL_RULES):
-            for key, leaf in cache.items():
-                if key in ("k", "v") and leaf.ndim == len(_sp.KV_POOL_AXES):
-                    axes = _sp.KV_POOL_AXES
-                else:
-                    axes = (None,) * leaf.ndim
-                shardings[key] = _sp.sharding_for(leaf.shape, axes)
-        return jax.device_put(cache, shardings)
+        return self.place(cache, self.mesh)
 
     def insert_rows(self, cache, request_cache, slots, phys_rows=None):
         return _jitted_insert_rows_paged()(cache, request_cache, slots,
@@ -381,28 +477,28 @@ class PagedInt8Backend(PagedFP32Backend):
     name = "paged_int8"
     quantized = True
 
-    def __init__(self, page_size: int, num_pages: int, mesh=None):
-        if _tp_degree(mesh) > 1:
-            # the write paths recompute each touched page's symmetric scale
-            # as an amax over (page_size, KV, hd) — a CROSS-SHARD max once
-            # kv heads shard. (The q8 READ path would work as-is: scales
-            # are per-page, replicated.) Follow-on: shard-local amax +
-            # a tiny all-reduce-max on the touched-page set.
-            raise ValueError(
-                "paged_int8 KV backend does not support tensor-parallel "
-                "serving yet (per-page requant needs a cross-shard amax); "
-                "use kv_backend='paged' with tp>1")
-        super().__init__(page_size, num_pages, mesh)
+    @classmethod
+    def pool_axes(cls) -> dict:
+        axes = dict(super().pool_axes())
+        # scale leaves (L, P, tp): one scale per page per kv-head GROUP,
+        # group t covering the contiguous KV/tp heads shard t owns — the
+        # trailing group column shards WITH its kv heads, so each shard
+        # computes its scales from purely local pool values
+        axes["k_scale"] = (None, None, "kv_heads")
+        axes["v_scale"] = (None, None, "kv_heads")
+        return axes
 
     def init_cache(self, model: Model, batch_slots: int, s_max: int, dtype):
         base = super().init_cache(model, batch_slots, s_max, dtype)
         out = dict(base)
+        tp = _tp_degree(self.mesh)
         for key in ("k", "v"):
             out[key] = jnp.zeros(base[key].shape, jnp.int8)
             # scale 1.0 everywhere: a never-written page dequants to exact
             # zeros, same as the fp32 pool's zero init
-            out[key + "_scale"] = jnp.ones(base[key].shape[:2], jnp.float32)
-        return self._place(out)
+            out[key + "_scale"] = jnp.ones(base[key].shape[:2] + (tp,),
+                                           jnp.float32)
+        return self.place(out, self.mesh)
 
     def insert_rows(self, cache, request_cache, slots, phys_rows=None):
         return _jitted_insert_rows_q8()(cache, request_cache, slots,
@@ -419,11 +515,12 @@ class PagedInt8Backend(PagedFP32Backend):
 
     def check_page_meta(self, cache, num_pages: int) -> None:
         import numpy as np
+        tp = _tp_degree(self.mesh)
         for key in ("k_scale", "v_scale"):
             sc = np.asarray(cache[key])
             L = cache[key[0]].shape[0]
-            assert sc.shape == (L, num_pages), \
-                f"{key} shape {sc.shape} != {(L, num_pages)}"
+            assert sc.shape == (L, num_pages, tp), \
+                f"{key} shape {sc.shape} != {(L, num_pages, tp)}"
             assert np.isfinite(sc).all() and (sc > 0).all(), \
                 f"{key} has non-finite or non-positive entries"
 
@@ -439,20 +536,23 @@ class PagedLatentBackend(PagedFP32Backend):
     leaf; the generic splice/COW/seed machinery is key-generic, so this
     backend inherits every representation op from the fp32 pool — COW
     copies a latent row, never per-head K/V. Block tables, the allocator,
-    and the prefix index are untouched: a page is a page."""
+    and the prefix index are untouched: a page is a page.
+
+    Under tensor parallelism the latent pool REPLICATES (see
+    :meth:`pool_axes`) and tp instead shards the ABSORBED queries/outputs
+    on their head axis (models/layers.py mla paths): per-head attention
+    over the shared latent is head-independent, and the all-gather before
+    ``wo`` keeps tp>1 greedy streams bitwise equal to tp=1."""
 
     name = "paged_latent"
 
-    def __init__(self, page_size: int, num_pages: int, mesh=None):
-        if _tp_degree(mesh) > 1:
-            # a latent row has no kv-head axis to shard (KV == 1 and every
-            # query head reads the same row); head-sharding the absorbed
-            # queries while replicating the pool is a follow-on
-            raise ValueError(
-                "paged_latent KV backend does not support tensor-parallel "
-                "serving (latent rows have no kv-head axis to shard); "
-                "use kv_backend='paged' with tp>1")
-        super().__init__(page_size, num_pages, mesh)
+    @classmethod
+    def pool_axes(cls) -> dict:
+        # a latent row has no kv-head axis (KV == 1; every query head reads
+        # the same compressed row), and at (c + r) floats per token the
+        # pool is small enough to hold per shard — so it replicates, and
+        # the head axis of the absorbed queries carries the tp split
+        return {}
 
     def init_cache(self, model: Model, batch_slots: int, s_max: int, dtype):
         if getattr(model.cfg, "kv_lora_rank", 0) <= 0:
@@ -465,14 +565,18 @@ class PagedLatentBackend(PagedFP32Backend):
 
 
 def make_backend(spec, *, family: Family, page_size=None, num_pages=None,
-                 mesh=None):
+                 mesh=None, num_kv_heads=None):
     """Resolve an engine ``kv_backend`` spec: None (layout follows
     page_size), a name registered in :data:`BACKENDS` ('dense' | 'paged' |
     'paged_fp32' | 'paged_int8' | 'paged_latent'), or a ready KVBackend
     instance. Int8 on an unsupported family degrades to fp32 pages with a
     warning rather than failing — the caller keeps a correct serving path.
-    ``mesh``: optional serving mesh the paged backends commit their pool
-    onto (kv-head-sharded; see PagedFP32Backend)."""
+    ``mesh``: optional serving mesh the backend's :meth:`KVBackend.place`
+    commits its pool onto. ``num_kv_heads``: when given with a tp>1 mesh,
+    checked against the backend's declared layout (a kv-head-sharded pool
+    needs tp to divide the kv-head count; a replicated/head-free pool does
+    not) — the engine passes it so direct ``ServeEngine(...)`` construction
+    hits the same preflight as ``ServeConfig.validate``."""
     if isinstance(spec, KVBackend):
         if mesh is not None and getattr(spec, "mesh", None) is not mesh:
             raise ValueError("a ready KVBackend instance must be built with "
@@ -484,11 +588,12 @@ def make_backend(spec, *, family: Family, page_size=None, num_pages=None,
     if cls is None:
         raise ValueError(f"unknown kv_backend {spec!r}; available: "
                          f"{sorted(BACKENDS)}")
+    tp = _tp_degree(mesh)
     if not cls.paged:
         if page_size is not None:
             raise ValueError(f"kv_backend={spec!r} conflicts with page_size="
                              f"{page_size}; drop one of them")
-        if _tp_degree(mesh) > 1:
+        if tp > 1:
             raise ValueError("tensor-parallel serving shards the PAGED pool "
                              "(page indices are shard-invariant); the dense "
                              "backend has no mesh layout — pass page_size=")
@@ -500,4 +605,11 @@ def make_backend(spec, *, family: Family, page_size=None, num_pages=None,
                     "falling back to fp32 pages",
                     [f.name for f in INT8_KV_FAMILIES], family)
         cls = PagedFP32Backend
+    check_tp_support(cls, tp)
+    if (tp > 1 and num_kv_heads is not None and _shards_kv_heads(cls)
+            and num_kv_heads % tp):
+        raise ValueError(
+            f"num_kv_heads={num_kv_heads} is not divisible by tp={tp}; "
+            f"pick a tp dividing the kv-head count (whole GQA groups must "
+            f"stay shard-local)")
     return cls(page_size, num_pages, mesh=mesh)

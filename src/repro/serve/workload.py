@@ -159,13 +159,22 @@ def _main(argv=None) -> int:
     ap.add_argument("--slo-itl", type=float, default=30.0)
     ap.add_argument("--fifo", action="store_true",
                     help="disable the SLO-aware policy (baseline replay)")
+    ap.add_argument("--kv-backend", default=None,
+                    help="cache backend registry name (paged | paged_int8 "
+                         "| paged_latent; default: layout follows "
+                         "page_size). paged_latent needs an MLA --arch")
+    ap.add_argument("--tp", type=int, default=None,
+                    help="tensor-parallel degree (needs that many local "
+                         "devices; any registered backend composes via "
+                         "its sharding hooks)")
     args = ap.parse_args(argv)
 
     policy = None if args.fifo else SchedPolicy(
         drr=True, max_consecutive_prefill_ticks=2, preemption=True,
         admission_low_water=0.15, admission_shed_priority=2)
     eng = ServeEngine.build(args.arch, config=ServeConfig(
-        reduced=True, batch_slots=2, s_max=96, page_size=16, policy=policy))
+        reduced=True, batch_slots=2, s_max=96, page_size=16, policy=policy,
+        kv_backend=args.kv_backend, tp=args.tp))
     spec = WorkloadSpec(
         n_requests=args.n, rate_rps=args.rate, seed=args.seed,
         prompt_len_median=16, prompt_len_max=64,

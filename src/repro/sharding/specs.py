@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import contextlib
 import contextvars
+import functools
 from typing import Optional, Sequence, Tuple, Union
 
 import jax
@@ -223,6 +224,60 @@ def head_shard_axis(num_heads: int, num_kv_heads: int):
     if tp <= 1 or num_kv_heads % tp or num_heads % tp:
         return None, None
     return mesh, TP_AXIS
+
+
+def latent_head_shard_axis(num_heads: int):
+    """``head_shard_axis`` for the MLA latent path: the latent pool has no
+    kv-head axis (every head reads the same compressed rows), so only the
+    query-head count needs to divide the mesh. Returns ``(mesh, axis_name)``
+    when the active mesh has a >1-sized ``TP_AXIS`` dividing ``num_heads``,
+    else ``(None, None)`` (callers fall back to the exact replicated
+    dispatch)."""
+    mesh = active_mesh()
+    if mesh is None or TP_AXIS not in mesh.axis_names:
+        return None, None
+    tp = mesh.shape[TP_AXIS]
+    if tp <= 1 or num_heads % tp:
+        return None, None
+    return mesh, TP_AXIS
+
+
+def serve_trace(mesh: Optional[Mesh], fn):
+    """Wrap a step function so it TRACES inside the tensor-parallel serving
+    mesh context (identity when mesh is None): the with-block runs at trace
+    time, so every shard/replicate/head_shard_axis call in model code
+    resolves against this mesh. :data:`TP_SERVE_RULES` maps every logical
+    axis to None — the whole dataflow stays replicated except the cache
+    pool (committed sharded by the KV backend) and the attention cores'
+    shard_map wrappers; that split is what keeps tp>1 ticks bitwise equal
+    to tp=1."""
+    if mesh is None:
+        return fn
+
+    @functools.wraps(fn)
+    def wrapped(*args, **kwargs):
+        with use_mesh(mesh, TP_SERVE_RULES):
+            return fn(*args, **kwargs)
+    return wrapped
+
+
+def serve_mesh(tp: int) -> Mesh:
+    """Build the canonical 1-axis serving mesh over the first ``tp`` local
+    devices. The axis is named :data:`TP_AXIS`; keeping the construction
+    here means callers (notably the serve engine) never spell the axis name
+    themselves — the backend seam and these helpers own every mesh
+    internal."""
+    return jax.make_mesh((tp,), (TP_AXIS,))
+
+
+def replicate_params(params, mesh: Optional[Mesh]):
+    """Place a parameter pytree fully replicated on ``mesh`` (identity when
+    mesh is None). Replicated weights keep every contraction — in particular
+    the output projection after the attention all-gather — un-split across
+    shards, which is what makes a tp>1 serve tick bitwise equal to tp=1."""
+    if mesh is None:
+        return params
+    return jax.device_put(params, NamedSharding(mesh, P()))
 
 
 def _is_logical_leaf(v):

@@ -61,6 +61,13 @@ BASE = {
         "cells": [{"tp": 2, "decode_tokens_per_s": 300.0,
                    "per_shard_kv_bytes": 65536,
                    "kv_bytes_ratio_vs_tp1": 0.5}],
+        "tp_int8": {"greedy_prefix_match_mean": 0.94,
+                    "per_shard_kv_bytes_ratio": 0.502,
+                    "passes_greedy_match": True,
+                    "passes_shard_bytes": True},
+        "tp_mla": {"per_shard_kv_bytes_ratio": 1.0,
+                   "passes_greedy_match": True,
+                   "passes_replicated_pool": True},
         "acceptance": {"passes_greedy_match": True,
                        "passes_shard_bytes": True,
                        "per_shard_kv_bytes_ratio": 0.5},

@@ -330,11 +330,21 @@ def test_invariants_reject_corrupt_scale_table(qwen):
 def test_engine_does_not_import_page_layout_internals():
     """The refactor's contract, checked at the AST so it cannot silently
     regress: engine.py orchestrates through the KVBackend seam and must not
-    import the page-layout internals it used to own."""
+    import the page-layout internals it used to own — nor, since the
+    sharding-aware seam, any mesh/axis internals (placement lives behind
+    KVBackend.place/pool_axes, trace context and mesh construction behind
+    specs.serve_trace/serve_mesh; the engine holds the mesh as an opaque
+    token)."""
     banned = {"init_paged_cache", "insert_cache_rows",
               "insert_cache_rows_paged", "copy_pool_rows",
               "seed_prefix_cache", "vectorize_cache_pos",
-              "cache_capacity", "extract_cache_slot", "PAGED_POOL_LEAVES"}
+              "cache_capacity", "extract_cache_slot", "PAGED_POOL_LEAVES",
+              # mesh/axis internals: every one of these appearing in
+              # engine.py means a layout decision leaked out of the seam
+              "NamedSharding", "PartitionSpec", "shard_map", "TP_AXIS",
+              "use_mesh", "TP_SERVE_RULES", "TP_POOL_RULES",
+              "KV_POOL_AXES", "axis_names", "head_shard_axis",
+              "latent_head_shard_axis", "sharding_for", "make_mesh"}
     path = (pathlib.Path(__file__).resolve().parents[1]
             / "src" / "repro" / "serve" / "engine.py")
     tree = ast.parse(path.read_text())

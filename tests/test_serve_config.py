@@ -9,8 +9,8 @@ the string-keyed backend registry + the package API surface.
 * **validate().** Every cross-field invariant fails fast with a pinned
   message BEFORE any weights are built: capacity/sampling bounds, page
   alignment, dense-vs-page_size conflicts, paged-backend-needs-page_size,
-  unknown backend names (listing the registry), tp-needs-paged, and the
-  tp-incompatible backends.
+  unknown backend names (listing the registry), tp-needs-paged, and a
+  backend whose ``tp_compatible`` capability query refuses the tp degree.
 * **Registry.** ``kvcache.BACKENDS`` is the single name->class table:
   duplicate registration raises, a freshly registered class resolves
   through ``make_backend`` and validates through ServeConfig, and a ready
@@ -86,8 +86,6 @@ def test_config_path_emits_no_warning(recwarn):
     (dict(kv_backend="paged_latent"), "needs page_size"),
     (dict(kv_backend="latent_mla", page_size=8), "unknown kv_backend"),
     (dict(tp=2), "PAGED"),
-    (dict(tp=2, page_size=8, kv_backend="paged_int8"), "tensor-parallel"),
-    (dict(tp=2, page_size=8, kv_backend="paged_latent"), "tensor-parallel"),
 ])
 def test_validate_rejects(fields, msg):
     with pytest.raises(ValueError, match=msg):
@@ -99,6 +97,34 @@ def test_validate_returns_self_and_accepts_good_configs():
     assert good.validate() is good
     ServeConfig().validate()
     ServeConfig(tp=2, page_size=8, s_max=64).validate()
+    # int8 and latent pages compose with tp since the sharding-aware seam:
+    # the capability query accepts, so validate must NOT reject these
+    ServeConfig(tp=2, page_size=8, s_max=64,
+                kv_backend="paged_int8").validate()
+    ServeConfig(tp=4, page_size=8, s_max=64,
+                kv_backend="paged_latent").validate()
+
+
+def test_validate_tp_incompatible_backend_pins_capability_message():
+    """A backend answering tp_compatible=False surfaces through validate()
+    with the pinned capability-query message — the single remaining tp
+    rejection path (the old per-name ladder is gone)."""
+    @register_backend
+    class Refuses(PagedFP32Backend):
+        name = "test_tp_refusenik"
+
+        @classmethod
+        def tp_compatible(cls, mesh) -> bool:
+            return False
+    try:
+        with pytest.raises(ValueError, match="tp_compatible=False"):
+            ServeConfig(tp=2, page_size=8, s_max=64,
+                        kv_backend="test_tp_refusenik").validate()
+        # tp=1 never consults the capability query
+        ServeConfig(tp=1, page_size=8, s_max=64,
+                    kv_backend="test_tp_refusenik").validate()
+    finally:
+        BACKENDS.pop("test_tp_refusenik", None)
 
 
 def test_unknown_backend_error_lists_registry():
@@ -148,6 +174,57 @@ def test_custom_backend_registers_resolves_and_validates():
         assert isinstance(be, KVBackend)
     finally:
         BACKENDS.pop("test_custom_fp32", None)
+
+
+# ------------------------------------------- registry error paths under tp
+def test_make_backend_unknown_error_lists_sorted_registry():
+    """make_backend's unknown-name message lists the registry names SORTED
+    — pinned, because the list is how users discover valid spellings and a
+    dict-order listing would churn with registration order."""
+    with pytest.raises(ValueError) as e:
+        make_backend("nope", family="dense", page_size=8, num_pages=4)
+    assert str(sorted(BACKENDS)) in str(e.value)
+
+
+def test_hookless_custom_backend_replicates_with_warning(multidevice):
+    """A custom backend that never declared pool_axes() still serves under
+    tp>1: place() falls back to a fully replicated cache and logs a warning
+    (correct, just not memory-scaled per shard)."""
+    out = multidevice("""
+        import logging
+        from repro.serve.config import ServeConfig
+        from repro.serve.engine import ServeEngine
+        from repro.serve.kvcache import (KVBackend, PagedFP32Backend,
+                                         register_backend)
+        import repro.serve.kvcache as kvmod
+
+        @register_backend
+        class Hookless(PagedFP32Backend):
+            name = "test_hookless_paged"
+            # simulate a custom backend predating the sharding hooks: its
+            # effective pool_axes is the base KVBackend declaration
+            pool_axes = classmethod(KVBackend.pool_axes.__func__)
+
+        records = []
+        class Tap(logging.Handler):
+            def emit(self, r):
+                records.append(r.getMessage())
+        kvmod.log.addHandler(Tap())
+
+        eng = ServeEngine.build("qwen2.5-32b", config=ServeConfig(
+            page_size=16, s_max=64, batch_slots=2,
+            kv_backend="test_hookless_paged", tp=2,
+            cfg_overrides=dict(num_heads=8, num_kv_heads=4)))
+        assert any("pool_axes" in m and "replicated" in m
+                   for m in records), records
+        # replicated fallback: every shard holds the FULL pool
+        k = eng.cache["k"]
+        assert k.sharding.shard_shape(k.shape) == k.shape
+        r = eng.submit([1, 2, 3, 4], 3)
+        eng.run()
+        print("OK", r.tokens)
+    """)
+    assert "OK" in out
 
 
 # ------------------------------------------------------------- API surface
